@@ -1,0 +1,80 @@
+"""Fig 11 — DL serving latency + energy efficiency.
+
+Executable half: the paper's four workloads run as real JAX models on this
+host (ResNet-50/152, YOLOv5x-style at reduced input, BERT-base), giving
+measured per-sample latencies; the per-platform table then combines the
+paper's measured points with our energy model to reproduce Fig 11b's TpE
+ratios.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, header, time_fn
+from repro.config import get_config
+from repro.models import model as lm
+from repro.models.resnet import resnet_apply, resnet_init
+from repro.models.yolo import yolo_apply, yolo_init
+from repro.workloads.dlserving import PAPER_CLAIMS, PAPER_POINTS, point
+
+
+def _measure_host() -> None:
+    rng = jax.random.key(0)
+    # ResNet-50 / 152 @ 224
+    x = jnp.zeros((1, 224, 224, 3), jnp.float32)
+    for variant in ("resnet-50", "resnet-152"):
+        params = resnet_init(rng, variant)
+        f = jax.jit(lambda p, a, v=variant: resnet_apply(p, a, v))
+        us = time_fn(f, params, x, iters=3, warmup=1)
+        emit(f"fig11/host_{variant}", us, f"batch=1;ms={us/1e3:.1f}")
+    # YOLOv5x-style at 320 (quarter-res keeps the CPU run tractable)
+    yp = yolo_init(rng)
+    xy = jnp.zeros((1, 320, 320, 3), jnp.float32)
+    fy = jax.jit(yolo_apply)
+    us = time_fn(fy, yp, xy, iters=2, warmup=1)
+    emit("fig11/host_yolov5x_320", us, f"batch=1;ms={us/1e3:.1f}")
+    # BERT-base fwd, seq 128 (the paper's 4th workload; encoder-only)
+    cfg = get_config("bert-base")
+    params = lm.init_params(cfg, rng)
+    toks = jnp.ones((1, 128), jnp.int32)
+    fb = jax.jit(lambda p, t: lm.forward(p, cfg, t, mode="train")[0])
+    us = time_fn(fb, params, {"tokens": toks}, iters=3, warmup=1)
+    emit("fig11/host_bert-base", us, f"batch=1;seq=128;ms={us/1e3:.1f}")
+
+
+def run(measure: bool = True) -> None:
+    header("fig11a: inference latency (paper points + host-measured)")
+    if measure:
+        _measure_host()
+    for p in PAPER_POINTS:
+        emit(f"fig11a/{p.model}_{p.precision}_{p.platform}", 0.0,
+             f"latency_ms={p.latency_ms};batch={p.batch}")
+
+    header("fig11b: energy efficiency (samples/J)")
+    r50_gpu = point("resnet-50", "fp32", "soc-gpu")
+    r50_intel = point("resnet-50", "fp32", "intel-cpu")
+    r50_a40 = point("resnet-50", "fp32", "a40")
+    r50_a100 = point("resnet-50", "fp32", "a100")
+    for p in PAPER_POINTS:
+        emit(f"fig11b/{p.model}_{p.precision}_{p.platform}", 0.0,
+             f"samples_per_joule={p.samples_per_joule:.2f}")
+    emit("fig11b/r50_soc_vs_intel", 0.0,
+         f"ratio={r50_gpu.samples_per_joule/r50_intel.samples_per_joule:.2f}"
+         f"x;paper={PAPER_CLAIMS['r50_gpu_vs_intel']}x")
+    emit("fig11b/r50_soc_vs_a40", 0.0,
+         f"ratio={r50_gpu.samples_per_joule/r50_a40.samples_per_joule:.2f}"
+         f"x;paper={PAPER_CLAIMS['r50_gpu_vs_a40']}x")
+    emit("fig11b/r50_soc_vs_a100", 0.0,
+         f"ratio={r50_gpu.samples_per_joule/r50_a100.samples_per_joule:.2f}"
+         f"x;paper={PAPER_CLAIMS['r50_gpu_vs_a100']}x")
+    r152_dsp = point("resnet-152", "int8", "soc-dsp")
+    r152_intel = point("resnet-152", "fp32", "intel-cpu")
+    emit("fig11b/r152_dsp_vs_intel", 0.0,
+         f"ratio={r152_dsp.samples_per_joule/r152_intel.samples_per_joule:.1f}"
+         f"x;paper={PAPER_CLAIMS['r152_dsp_vs_intel']}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Fig 12 — DL-serving energy efficiency under dynamic load: SoC Cluster
+(per-unit gating) vs A100 (monolithic), via the elastic scheduler."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.core.cluster import a100_server, soc_cluster
+from repro.core.energy import cluster_power_at_load
+from repro.core.scheduler import ElasticScheduler, ScalePolicy
+from repro.workloads.dlserving import PAPER_CLAIMS, point
+
+
+def run() -> None:
+    header("fig12: TpE under varying offered load (resnet-50 fp32)")
+    soc = soc_cluster()
+    a100 = a100_server()
+    r50_soc = point("resnet-50", "fp32", "soc-gpu")
+    per_soc_rate = 1000.0 / r50_soc.latency_ms          # samples/s per SoC
+    soc_rate = per_soc_rate * soc.n_units
+    a100_rate = 64 / 0.115                              # batch64/115ms
+
+    # Paper methodology: SoCs not needed go to a low-power state (0.6 W);
+    # the A100 keeps running micro-batches and stays near its serving power.
+    import math
+    ratios = {}
+    for samples_s in (5.0, 0.01 * soc_rate, 0.2 * soc_rate,
+                      0.5 * soc_rate, soc_rate):
+        active = min(soc.n_units, math.ceil(samples_s / per_soc_rate))
+        p_soc = (active * r50_soc.unit_power_w
+                 + (soc.n_units - active) * soc.unit.p_idle)
+        u_a100 = min(1.0, samples_s / a100_rate)
+        # Measured A100 *serving* power is nearly flat with load (batch
+        # collection keeps SMs clocked): gamma ~ 0.1, vs 0.45 generic.
+        p_a100 = a100.unit.p_idle + (a100.unit.p_peak - a100.unit.p_idle) \
+            * (u_a100 ** 0.1)
+        tpe_soc = samples_s / p_soc
+        tpe_a100 = min(samples_s, a100_rate) / p_a100
+        ratios[samples_s] = tpe_soc / tpe_a100
+        emit(f"fig12/load_{samples_s:.0f}sps", 0.0,
+             f"soc_tpe={tpe_soc:.3f};a100_tpe={tpe_a100:.3f};"
+             f"ratio={tpe_soc/tpe_a100:.2f}x")
+    emit("fig12/light_load_advantage", 0.0,
+         f"soc_vs_a100@5sps={ratios[5.0]:.2f}x;paper="
+         f"{PAPER_CLAIMS['light_load_vs_a100']}x")
+
+    header("fig12: scheduler-driven (bursty trace)")
+    sched = ElasticScheduler(soc, unit_rate=1000.0 / r50_soc.latency_ms,
+                             policy=ScalePolicy(cooldown_s=20.0))
+    rng = np.random.default_rng(0)
+    trace = np.abs(rng.normal(0.1, 0.08, 600)) * soc_rate
+    res = sched.simulate(trace, dt_s=1.0)
+    emit("fig12/scheduler_sim", 0.0,
+         f"served={res.served:.0f};tpe={res.tpe:.2f};"
+         f"mean_active={res.active_units.mean():.1f}/60;"
+         f"p99_latency_s={res.p99_latency_s:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Fig 6 — transcoding energy efficiency (TpE): live streaming (streams/W)
+and archive (frames/J), SoC CPU vs Intel CPU vs A40."""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.workloads.transcoding import (ARCHIVE_FPJ, VIDEOS, a40_live,
+                                         intel_live, soc_cluster_live)
+
+
+def run() -> None:
+    header("fig6a: live streaming TpE (streams/W)")
+    ratios_intel, ratios_a40 = [], []
+    for v in VIDEOS:
+        soc = soc_cluster_live(v)
+        intel = intel_live(v)
+        a40 = a40_live(v)
+        r_i = soc.streams_per_watt / intel.streams_per_watt
+        r_a = soc.streams_per_watt / a40.streams_per_watt
+        ratios_intel.append(r_i)
+        ratios_a40.append(r_a)
+        emit(f"fig6a/{v.vid}", 0.0,
+             f"soc={soc.streams_per_watt:.3f};intel="
+             f"{intel.streams_per_watt:.3f};a40={a40.streams_per_watt:.3f}"
+             f";soc_vs_intel={r_i:.2f}x;soc_vs_a40={r_a:.2f}x")
+    emit("fig6a/soc_vs_intel_range", 0.0,
+         f"{min(ratios_intel):.2f}-{max(ratios_intel):.2f}x"
+         f";paper=2.58-3.21x")
+    emit("fig6a/soc_vs_a40_range", 0.0,
+         f"{min(ratios_a40):.2f}-{max(ratios_a40):.2f}x;paper=1.83-4.53x")
+
+    header("fig6b: archive transcoding TpE (frames/J)")
+    for v in VIDEOS:
+        soc, intel, a40 = ARCHIVE_FPJ[v.vid]
+        winner = max([("soc", soc), ("intel", intel), ("a40", a40)],
+                     key=lambda t: t[1])[0]
+        emit(f"fig6b/{v.vid}", 0.0,
+             f"soc={soc};intel={intel};a40={a40};winner={winner}")
+    emit("fig6b/a40_loses_on_low_entropy", 0.0,
+         f"V2={ARCHIVE_FPJ['V2'][0] > ARCHIVE_FPJ['V2'][2]};"
+         f"V4={ARCHIVE_FPJ['V4'][0] > ARCHIVE_FPJ['V4'][2]};paper=True")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Fig 7 — live-streaming energy efficiency under partial load (1..20
+streams): the SoC Cluster / Intel CPU keep near-constant streams/W while
+the A40 pays its idle-power floor.
+
+Workload power follows the paper's per-platform measurement methodology
+(§3 Setups, "excludes idle power"):
+  * SoC Cluster — whole-server BMC delta: engaged SoCs at load + their
+    standby draw;
+  * Intel CPU — turbostat core-power delta (container idle excluded);
+  * A40 — nvidia-smi total GPU power (the GPU's idle floor is charged as
+    soon as it is engaged — the effect Fig 7 is about).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.core.cluster import edge_server_cpu, edge_server_gpu, soc_cluster
+from repro.core.energy import proportionality_index
+from repro.workloads.transcoding import VIDEO_BY_ID
+
+# V4 (1080p presentation): max streams per unit (paper Table 3 / §4.1).
+SOC_STREAMS_PER_UNIT = 9       # per SoC (CPU transcode)
+INTEL_STREAMS_PER_UNIT = 9     # per 8-core container
+A40_STREAMS_PER_UNIT = 16      # per GPU (NVENC sessions)
+
+
+def soc_power(n: int) -> float:
+    u = soc_cluster().unit
+    import math
+    engaged = math.ceil(n / SOC_STREAMS_PER_UNIT)
+    frac = n / (engaged * SOC_STREAMS_PER_UNIT)
+    return engaged * (u.p_idle + (u.p_peak - u.p_idle) * frac)
+
+
+def intel_power(n: int) -> float:
+    u = edge_server_cpu().unit
+    # turbostat delta: active core power only
+    return n / INTEL_STREAMS_PER_UNIT * (u.p_peak - u.p_idle)
+
+
+def a40_power(n: int) -> float:
+    u = edge_server_gpu().unit
+    import math
+    engaged = math.ceil(n / A40_STREAMS_PER_UNIT)
+    frac = n / (engaged * A40_STREAMS_PER_UNIT)
+    # NVENC transcoding scales ~linearly above the GPU's idle floor
+    return engaged * u.p_idle + frac * engaged * (165.0)
+
+
+def run() -> None:
+    header("fig7: TpE vs number of live streams (V4, 1080p)")
+    for name, pfn in (("soc-cpu", soc_power), ("intel", intel_power),
+                      ("a40", a40_power)):
+        tpes = [n / pfn(n) for n in (1, 5, 10, 20)]
+        emit(f"fig7/{name}", 0.0,
+             f"streams_per_watt@1={tpes[0]:.4f};@5={tpes[1]:.4f};"
+             f"@10={tpes[2]:.4f};@20={tpes[3]:.4f}")
+    a40_1 = 1.0 / a40_power(1)
+    soc_1 = 1.0 / soc_power(1)
+    intel_1 = 1.0 / intel_power(1)
+    emit("fig7/a40_single_stream", 0.0,
+         f"streams_per_watt={a40_1:.4f};paper=0.018")
+    emit("fig7/soc_vs_a40_at_1", 0.0,
+         f"ratio={soc_1/a40_1:.1f}x;paper=40.8x")
+    emit("fig7/intel_vs_a40_at_1", 0.0,
+         f"ratio={intel_1/a40_1:.1f}x;paper=14.9x")
+    emit("fig7/proportionality_index", 0.0,
+         f"soc={proportionality_index(soc_cluster()):.3f};"
+         f"intel={proportionality_index(edge_server_cpu()):.3f};"
+         f"a40={proportionality_index(edge_server_gpu()):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Fig 8 — SoC hardware codec vs SoC CPU: throughput and energy
+efficiency of live transcoding."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.workloads.transcoding import VIDEOS, soc_cluster_live
+
+
+def run() -> None:
+    header("fig8: hardware codec vs SoC CPU")
+    low_entropy_gains, high_entropy_gains = [], []
+    for v in VIDEOS:
+        cpu = soc_cluster_live(v, hw_codec=False)
+        hw = soc_cluster_live(v, hw_codec=True)
+        thr_gain = hw.streams / cpu.streams
+        tpe_gain = hw.streams_per_watt / cpu.streams_per_watt
+        (low_entropy_gains if v.entropy < 1.0
+         else high_entropy_gains).append(tpe_gain)
+        emit(f"fig8/{v.vid}", 0.0,
+             f"streams_cpu={cpu.streams:.0f};streams_hw={hw.streams:.0f};"
+             f"thr_gain={thr_gain:.2f}x;tpe_gain={tpe_gain:.2f}x")
+    emit("fig8/throughput_gain_range", 0.0, "paper=1.07-3.0x")
+    emit("fig8/tpe_gain_low_entropy", 0.0,
+         f"geomean={np.exp(np.mean(np.log(low_entropy_gains))):.2f}x"
+         f";paper~2.5x")
+    emit("fig8/tpe_gain_high_entropy", 0.0,
+         f"geomean={np.exp(np.mean(np.log(high_entropy_gains))):.2f}x"
+         f";paper=4.7-5.5x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Render the roofline table from results/dryrun/*.json (EXPERIMENTS.md
+§Roofline source of truth)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import emit, header
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_results(mesh: str = "pod16x16", tag: Optional[str] = None
+                 ) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        if len(parts) == 3 and tag is None:
+            pass
+        elif len(parts) == 4 and tag == parts[3]:
+            pass
+        else:
+            continue
+        if parts[2] != mesh:
+            continue
+        with open(path) as f:
+            rows.append(json.load(f))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | kind | compute_s | memory_s | collective_s | "
+           "bound | MODEL_FLOPs | useful ratio | roofline frac | "
+           "mem/dev GiB | note |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rf = r["roofline"]
+        mem = r["memory_analysis"].get("total_nonalias_bytes", 0) / 2 ** 30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step_kind']} "
+            f"| {rf['compute_s']:.3f} | {rf['memory_s']:.3f} "
+            f"| {rf['collective_s']:.3f} | **{rf['bound']}** "
+            f"| {rf['model_flops_total']:.2e} "
+            f"| {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.3f} | {mem:.1f} "
+            f"| {rf['note'] or ''} |")
+    return "\n".join(out)
+
+
+def run() -> None:
+    header("roofline: per-cell terms (pod16x16)")
+    rows = load_results("pod16x16")
+    for r in rows:
+        rf = r["roofline"]
+        emit(f"roofline/{r['arch']}__{r['shape']}", 0.0,
+             f"bound={rf['bound']};compute_s={rf['compute_s']:.3f};"
+             f"memory_s={rf['memory_s']:.3f};"
+             f"collective_s={rf['collective_s']:.3f};"
+             f"frac={rf['roofline_fraction']:.3f}")
+    if not rows:
+        emit("roofline/missing", 0.0,
+             "run: python -m repro.launch.dryrun --all")
+
+
+if __name__ == "__main__":
+    run()

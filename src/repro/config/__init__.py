@@ -1,0 +1,17 @@
+from repro.config.base import (
+    ATTN, MAMBA,
+    ALL_SHAPES, SHAPES, SINGLE_POD, MULTI_POD,
+    TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+    MambaConfig, MeshConfig, ModelConfig, MoEConfig, RunConfig,
+    ServeConfig, ShapeSpec, TrainConfig,
+    get_config, list_configs, register, shape_applicable, smoke_config,
+)
+
+__all__ = [
+    "ATTN", "MAMBA", "ALL_SHAPES", "SHAPES", "SINGLE_POD", "MULTI_POD",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "MambaConfig", "MeshConfig", "ModelConfig", "MoEConfig", "RunConfig",
+    "ServeConfig", "ShapeSpec", "TrainConfig",
+    "get_config", "list_configs", "register", "shape_applicable",
+    "smoke_config",
+]

@@ -1,0 +1,11 @@
+"""The paper's primary contribution: SoC-Cluster orchestration in JAX.
+
+cluster        — the cluster-of-small-units hardware model (calibrated)
+collaborative  — §5.3 cross-unit tensor-parallel inference (+ pipelining)
+energy         — TpE + energy-proportionality accounting (§4.1, §5.2)
+scheduler      — elastic unit-activation policy + straggler hedging
+tco            — §6 total-cost-of-ownership model (Tables 4/5)
+"""
+from repro.core import cluster, collaborative, energy, scheduler, tco
+
+__all__ = ["cluster", "collaborative", "energy", "scheduler", "tco"]

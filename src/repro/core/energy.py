@@ -1,0 +1,106 @@
+"""Energy accounting and proportionality metrics (paper §4.1, §5.2).
+
+Core quantities:
+  * TpE — throughput per energy (streams/W or samples/J), the paper's
+    headline comparison metric (Fig 6, Fig 11b).
+  * Energy-proportionality index — how closely server power tracks load
+    (Barroso & Hölzle's ideal is P(u) = u * P_peak). The SoC Cluster's
+    per-unit gating gives ~linear scaling; monolithic GPUs do not (Fig 7/12).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec
+
+
+# ---------------------------------------------------------------------------
+# TpE.
+# ---------------------------------------------------------------------------
+def throughput_per_energy(throughput: float, power_w: float) -> float:
+    """throughput in items/s, power in W -> items/J (== items/s/W)."""
+    return throughput / max(power_w, 1e-9)
+
+
+def energy_for_work(items: float, throughput: float, power_w: float) -> float:
+    """Joules to process `items` at steady state."""
+    return items / max(throughput, 1e-12) * power_w
+
+
+# ---------------------------------------------------------------------------
+# Load -> power curves.
+# ---------------------------------------------------------------------------
+def cluster_power_at_load(spec: ClusterSpec, load_frac: float,
+                          unit_capacity: float = 1.0,
+                          idle_units_off: bool = True) -> float:
+    """Power when serving `load_frac` of peak load with the fine-grained
+    policy: wake ceil(load * n) units at full utilization, gate the rest.
+    (The SoC Cluster policy; a monolithic unit must instead run one unit at
+    partial utilization — captured by n_units == 1 specs.)"""
+    load = min(max(load_frac, 0.0), 1.0)
+    if spec.n_units == 1:
+        return spec.power(1, load)
+    need = load * spec.n_units / unit_capacity
+    full = int(np.floor(need))
+    frac = need - full
+    active_power = (spec.p_shared
+                    + full * spec.unit.power(1.0)
+                    + (spec.unit.power(frac) if frac > 0 else 0.0))
+    rest = spec.n_units - full - (1 if frac > 0 else 0)
+    active_power += rest * (spec.unit.p_off if idle_units_off
+                            else spec.unit.p_idle)
+    return active_power
+
+
+def proportionality_index(spec: ClusterSpec, idle_units_off: bool = True,
+                          n: int = 101) -> float:
+    """1 - mean |P(u)/P_peak - u|, in [0, 1]; 1.0 = perfectly proportional.
+    """
+    us = np.linspace(0.0, 1.0, n)
+    peak = cluster_power_at_load(spec, 1.0, idle_units_off=idle_units_off)
+    ps = np.array([cluster_power_at_load(spec, u,
+                                         idle_units_off=idle_units_off)
+                   for u in us]) / peak
+    return float(1.0 - np.mean(np.abs(ps - us)))
+
+
+def dynamic_range(spec: ClusterSpec, idle_units_off: bool = True) -> float:
+    """P(idle)/P(peak): lower is better."""
+    peak = cluster_power_at_load(spec, 1.0, idle_units_off=idle_units_off)
+    idle = cluster_power_at_load(spec, 0.0, idle_units_off=idle_units_off)
+    return float(idle / peak)
+
+
+# ---------------------------------------------------------------------------
+# Trace-driven energy accounting.
+# ---------------------------------------------------------------------------
+@dataclass
+class EnergyReport:
+    joules: float
+    avg_power_w: float
+    peak_power_w: float
+    items: float
+    tpe: float                 # items per joule
+    proportionality: float
+
+
+def account_trace(spec: ClusterSpec, load_trace: Sequence[float],
+                  dt_s: float, items_per_s_at_peak: float,
+                  idle_units_off: bool = True) -> EnergyReport:
+    """Integrate energy over a load trace (fractions of peak load)."""
+    powers = np.array([cluster_power_at_load(spec, u,
+                                             idle_units_off=idle_units_off)
+                       for u in load_trace])
+    joules = float(np.sum(powers) * dt_s)
+    items = float(np.sum(np.asarray(load_trace) * items_per_s_at_peak * dt_s))
+    return EnergyReport(
+        joules=joules,
+        avg_power_w=float(np.mean(powers)),
+        peak_power_w=float(np.max(powers)),
+        items=items,
+        tpe=items / max(joules, 1e-9),
+        proportionality=proportionality_index(spec, idle_units_off),
+    )

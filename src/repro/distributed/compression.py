@@ -1,0 +1,137 @@
+"""Gradient compression for data-parallel sync over weak links.
+
+Directly motivated by the paper's setting: the SoC Cluster's inter-unit
+fabric is ~1 Gbps — two orders of magnitude below datacenter interconnects —
+so cross-unit synchronization must ship fewer bytes. We provide blockwise
+int8 quantization with error feedback and a compressed all-reduce
+(all-to-all reduce-scatter in int8 wire format + int8 all-gather: 2x N/4
+bytes on the wire instead of 2x N fp32 bytes).
+
+``compressed_psum_mean`` runs inside ``shard_map``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Blockwise int8 quantization.
+# ---------------------------------------------------------------------------
+def quantize_blockwise(x: jax.Array, block: int = 256
+                       ) -> Tuple[jax.Array, jax.Array, int]:
+    """x: any shape -> (q int8 (nb, block), scales (nb,), pad)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0], pad
+
+
+def dequantize_blockwise(q: jax.Array, scales: jax.Array, pad: int,
+                         shape, dtype=jnp.float32) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def quantize_blockwise_log(x: jax.Array, block: int = 256, tiny: float = 1e-30
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
+    """Log-space blockwise int8 for *non-negative* tensors (e.g. Adam's
+    second moment): per-block (min, max) of log(x+tiny) mapped to [0, 255],
+    giving bounded *relative* error — linear int8 would collapse small
+    entries to zero and blow up 1/sqrt(v).
+
+    Returns (q uint8 (nb, block), log_min (nb,), log_scale (nb,), pad)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = jnp.log(flat.reshape(-1, block) + tiny)
+    lo = jnp.min(blocks, axis=1, keepdims=True)
+    hi = jnp.max(blocks, axis=1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-12) / 255.0
+    q = jnp.clip(jnp.round((blocks - lo) / scale), 0, 255).astype(jnp.uint8)
+    return q, lo[:, 0], scale[:, 0], pad
+
+
+def dequantize_blockwise_log(q: jax.Array, log_min: jax.Array,
+                             log_scale: jax.Array, pad: int, shape,
+                             tiny: float = 1e-30) -> jax.Array:
+    logs = (q.astype(jnp.float32) * log_scale[:, None] + log_min[:, None])
+    flat = jnp.exp(logs).reshape(-1) - tiny
+    if pad:
+        flat = flat[:-pad]
+    return jnp.maximum(flat, 0.0).reshape(shape)
+
+
+def quantize_with_feedback(x: jax.Array, err: jax.Array, block: int = 256):
+    """Error-feedback quantization: q = Q(x + err); err' = (x+err) - deQ(q).
+
+    Returns ((q, scales, pad), new_err). The residual is re-injected on the
+    next step so the quantization error does not bias the optimizer
+    trajectory (1-bit-Adam-style memory compensation).
+    """
+    target = x.astype(jnp.float32) + err
+    q, scales, pad = quantize_blockwise(target, block)
+    approx = dequantize_blockwise(q, scales, pad, x.shape)
+    return (q, scales, pad), target - approx
+
+
+# ---------------------------------------------------------------------------
+# Compressed all-reduce (mean) over a named axis. Call inside shard_map.
+# Wire format: int8 payloads + fp32 per-block scales.
+# ---------------------------------------------------------------------------
+def compressed_psum_mean(x: jax.Array, axis_name: str,
+                         block: int = 256) -> jax.Array:
+    a = jax.lax.psum(1, axis_name)
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad_to = (-n) % (a * block)
+    if pad_to:
+        flat = jnp.pad(flat, (0, pad_to))
+    per = flat.shape[0] // a
+    chunks = flat.reshape(a, per)
+
+    # 1) reduce-scatter in int8: quantize each destination chunk, all_to_all,
+    #    dequantize, and sum the a received contributions.
+    qs, scales, pad = quantize_blockwise(chunks, block)     # (a*nb, block)
+    nb = qs.shape[0] // a
+    qs = qs.reshape(a, nb, block)
+    scales = scales.reshape(a, nb)
+    qs_r = jax.lax.all_to_all(qs, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)
+    sc_r = jax.lax.all_to_all(scales, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)
+    own = jnp.sum(qs_r.astype(jnp.float32) * sc_r[..., None], axis=0) / a
+
+    # 2) all-gather the reduced chunk, again in int8.
+    q2, s2, pad2 = quantize_blockwise(own, block)
+    q2_g = jax.lax.all_gather(q2, axis_name, axis=0)        # (a, nb, block)
+    s2_g = jax.lax.all_gather(s2, axis_name, axis=0)
+    full = (q2_g.reshape(a, nb, block).astype(jnp.float32)
+            * s2_g.reshape(a, nb)[..., None]).reshape(-1)
+    if pad_to:
+        full = full[:-pad_to]
+    return full.reshape(x.shape).astype(x.dtype)
+
+
+def wire_bytes_fp32(num_elements: int, axis_size: int) -> int:
+    """Bytes on the wire for a ring fp32 all-reduce (2(A-1)/A * N * 4)."""
+    return int(2 * (axis_size - 1) / axis_size * num_elements * 4)
+
+
+def wire_bytes_compressed(num_elements: int, axis_size: int,
+                          block: int = 256) -> int:
+    payload = num_elements  # int8
+    scales = (num_elements // block) * 4
+    return int(2 * (axis_size - 1) / axis_size * (payload + scales))

@@ -1,0 +1,143 @@
+"""Fault tolerance: failure detection, retries, and elastic re-meshing.
+
+The paper (§8, "Killer applications") calls fault tolerance "crucial for
+the success of SoC Cluster" — single-SoC failures must not take down the
+job. At pod scale the equivalents are: (a) checkpoint/restart (see
+``training.checkpoint``), (b) detecting dead/straggling units, (c) elastic
+re-meshing — continuing on a smaller (or larger) healthy mesh by restoring
+the last checkpoint with new shardings.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+log = logging.getLogger(__name__)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats / straggler detection.
+# ---------------------------------------------------------------------------
+@dataclass
+class UnitHealth:
+    unit_id: int
+    last_heartbeat: float
+    step_times: List[float] = field(default_factory=list)
+    failed: bool = False
+
+    def record(self, t_now: float, step_time: float) -> None:
+        self.last_heartbeat = t_now
+        self.step_times.append(step_time)
+        if len(self.step_times) > 64:
+            self.step_times.pop(0)
+
+
+class HealthTracker:
+    """Tracks per-unit liveness and step-time distribution.
+
+    A unit is *failed* if it missed ``timeout_s`` of heartbeats, and a
+    *straggler* if its recent step time exceeds ``straggler_factor`` x the
+    cluster median (the mitigation hooks — hedged dispatch, backup fetch —
+    live in the scheduler and data pipeline).
+    """
+
+    def __init__(self, unit_ids: Sequence[int], timeout_s: float = 60.0,
+                 straggler_factor: float = 2.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        now = clock()
+        self.units: Dict[int, UnitHealth] = {
+            u: UnitHealth(u, now) for u in unit_ids}
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+
+    def heartbeat(self, unit_id: int, step_time: float) -> None:
+        self.units[unit_id].record(self._clock(), step_time)
+
+    def mark_failed(self, unit_id: int) -> None:
+        self.units[unit_id].failed = True
+
+    def failed_units(self) -> List[int]:
+        now = self._clock()
+        out = []
+        for u in self.units.values():
+            if u.failed or now - u.last_heartbeat > self.timeout_s:
+                out.append(u.unit_id)
+        return sorted(out)
+
+    def healthy_units(self) -> List[int]:
+        bad = set(self.failed_units())
+        return sorted(u for u in self.units if u not in bad)
+
+    def stragglers(self) -> List[int]:
+        times = {u.unit_id: np.mean(u.step_times[-8:])
+                 for u in self.units.values() if u.step_times}
+        if len(times) < 2:
+            return []
+        med = float(np.median(list(times.values())))
+        return sorted(u for u, t in times.items()
+                      if t > self.straggler_factor * med)
+
+
+# ---------------------------------------------------------------------------
+# Retries.
+# ---------------------------------------------------------------------------
+def with_retries(fn: Callable, max_attempts: int = 3,
+                 backoff_s: float = 0.1,
+                 retriable: Tuple[type, ...] = (RuntimeError,)):
+    """Wrap a step function with bounded retries (transient XLA/runtime
+    failures; non-retriable exceptions propagate)."""
+    def wrapped(*a, **kw):
+        last = None
+        for attempt in range(max_attempts):
+            try:
+                return fn(*a, **kw)
+            except retriable as e:  # pragma: no cover - timing dependent
+                last = e
+                log.warning("step failed (attempt %d/%d): %s",
+                            attempt + 1, max_attempts, e)
+                time.sleep(backoff_s * (2 ** attempt))
+        raise last
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-meshing.
+# ---------------------------------------------------------------------------
+def shrink_mesh_shape(shape: Tuple[int, ...], axes: Tuple[str, ...],
+                      n_failed: int, shrink_axis: str = "data"
+                      ) -> Tuple[int, ...]:
+    """Compute the largest healthy mesh after losing ``n_failed`` units:
+    the elastic policy drops whole slices along ``shrink_axis`` (each slice
+    = prod(other axes) units), mirroring the SoC Cluster's PCB-granular
+    fail-out."""
+    sizes = dict(zip(axes, shape))
+    other = 1
+    for a, s in sizes.items():
+        if a != shrink_axis:
+            other *= s
+    lost_slices = -(-n_failed // other)  # ceil
+    new = max(1, sizes[shrink_axis] - lost_slices)
+    return tuple(new if a == shrink_axis else sizes[a] for a in axes)
+
+
+def remesh_arrays(tree, new_shardings):
+    """Re-shard a pytree of arrays onto a new mesh (device_put handles the
+    all-to-all movement; from a checkpoint this is a plain sharded load)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, new_shardings)
+
+
+def elastic_step_scale(global_batch: int, old_data: int, new_data: int
+                       ) -> Tuple[int, float]:
+    """Keep the *global* batch when the data axis shrinks by raising the
+    per-replica microbatch count; returns (microbatches, lr_scale)."""
+    assert global_batch % old_data == 0
+    per_replica = global_batch // old_data
+    micro = -(-global_batch // (new_data * per_replica))
+    return micro, 1.0  # same global batch => same LR

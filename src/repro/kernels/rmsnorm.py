@@ -1,0 +1,49 @@
+"""Fused RMSNorm as a Pallas TPU kernel (row-tiled, fp32 statistics).
+
+Oracle: ``ref.rmsnorm_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+            block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    xr = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    # Pad rows to a multiple of the block (kernel output is sliced back).
+    pad = (-rows) % block_rows
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    nrows = xr.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_rms_kernel, eps=eps),
+        grid=(nrows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nrows, d), x.dtype),
+        interpret=interpret,
+    )(xr, w.reshape(1, d))
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,361 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ALL_SHAPES, SHAPES, ModelConfig, ServeConfig,
+                          ShapeSpec, TrainConfig, get_config,
+                          shape_applicable)
+from repro.configs import ASSIGNED_ARCHS
+from repro.distributed.sharding import serve_rules, train_rules, use_sharding
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as lm
+from repro.models.transformer import block_period
+from repro.roofline.analysis import (model_flops, parse_collectives,
+                                     roofline_from_artifacts)
+from repro.training.train_loop import make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# ---------------------------------------------------------------------------
+# FLOPs/bytes accounting note: XLA's cost_analysis counts a while-loop body
+# ONCE, so a scan-over-blocks lowering under-reports flops/bytes/collectives
+# by ~the trip count. The dry-run therefore does three lowerings per cell:
+#   (a) the production scan build      -> memory_analysis ("fits" proof),
+#                                         compile-succeeds proof, HLO;
+#   (b) a depth-p unrolled probe       -> cost1/collectives1;
+#   (c) a depth-2p unrolled probe      -> cost2/collectives2;
+# and extrapolates  X_total = X1 + (nb - 1) * (X2 - X1)  where p is the
+# hybrid block period and nb = num_layers / p. The probes run at full width,
+# batch and sequence — only depth is reduced — so the per-body delta is the
+# true per-block cost including remat and resharding.
+# ---------------------------------------------------------------------------
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+def _memory_analysis_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if out:
+        out["total_nonalias_bytes"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0))
+    return out
+
+
+def _probe_cfg(cfg: ModelConfig, depth: int) -> ModelConfig:
+    pattern = None
+    if cfg.layer_pattern is not None:
+        pattern = tuple(cfg.layer_kinds()[:depth])
+    return cfg.replace(num_layers=depth, layer_pattern=pattern)
+
+
+def _lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                opts: Dict[str, Any], scan: bool):
+    """Build + lower one step. Returns (lowered, step_kind, tokens)."""
+    if shape.kind == "train":
+        tcfg = S.default_train_config(cfg)
+        over = {k: opts[k] for k in
+                ("remat", "opt_state_dtype", "microbatches",
+                 "grad_compression", "loss_chunk") if k in opts}
+        tcfg = TrainConfig(**{**tcfg.__dict__, **over,
+                              "scan_layers": scan})
+        rules = train_rules()
+        if "rules_override" in opts:
+            rules = rules.override(**opts["rules_override"])
+        step = make_train_step(cfg, tcfg)
+
+        def fn(params, opt_state, batch):
+            with use_sharding(mesh, rules):
+                return step(params, opt_state, batch)
+
+        params_sds = lm.param_shapes(cfg)
+        params_sh = S.params_shardings(cfg, mesh, rules)
+        opt_sh, opt_sds = S.opt_shardings(cfg, tcfg, mesh, rules)
+        batch_sds = S.train_batch_specs(cfg, shape)
+        batch_sh = S.batch_shardings(batch_sds, mesh, rules)
+        jfn = jax.jit(fn, in_shardings=(params_sh, opt_sh, batch_sh),
+                      donate_argnums=(0, 1))
+        lowered = jfn.lower(params_sds, opt_sds, batch_sds)
+        return lowered, "train", shape.global_batch * shape.seq_len
+
+    scfg = S.default_serve_config(cfg, shape)
+    if "serve_fsdp" in opts:
+        scfg = ServeConfig(**{**scfg.__dict__,
+                              "serve_fsdp": opts["serve_fsdp"]})
+    rules = serve_rules(scfg.serve_fsdp, batch1=shape.global_batch == 1)
+    if "rules_override" in opts:
+        rules = rules.override(**opts["rules_override"])
+    params_sds = lm.param_shapes(cfg)
+    params_sh = S.params_shardings(cfg, mesh, rules)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            with use_sharding(mesh, rules):
+                return lm.prefill(params, cfg, batch, scan=scan,
+                                  max_len=shape.seq_len)
+
+        batch_sds = S.prefill_batch_specs(cfg, shape)
+        batch_sh = S.batch_shardings(batch_sds, mesh, rules)
+        jfn = jax.jit(fn, in_shardings=(params_sh, batch_sh))
+        lowered = jfn.lower(params_sds, batch_sds)
+        return lowered, "prefill", shape.global_batch * shape.seq_len
+
+    # decode
+    cache_dtype = jnp.dtype(opts.get("kv_cache_dtype", cfg.dtype))
+
+    def fn(params, tokens, caches, pos):
+        with use_sharding(mesh, rules):
+            return lm.decode_step(params, cfg, tokens, caches, pos,
+                                  scan=scan)
+
+    tok_sds, caches_sds, pos_sds = S.decode_input_specs(
+        cfg, shape, cache_dtype)
+    tok_sh = jax.sharding.NamedSharding(
+        mesh, S.resolve_spec(tok_sds.shape, ("batch", None), rules, mesh))
+    caches_sh = S.cache_shardings(cfg, caches_sds, mesh, rules)
+    pos_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    jfn = jax.jit(fn, in_shardings=(params_sh, tok_sh, caches_sh, pos_sh),
+                  donate_argnums=(2,))
+    lowered = jfn.lower(params_sds, tok_sds, caches_sds, pos_sds)
+    return lowered, "decode", shape.global_batch
+
+
+def _cost_and_collectives(compiled) -> Tuple[Dict[str, float], Any]:
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    return ({k: float(v) for k, v in cost.items()
+             if isinstance(v, (int, float))}, coll)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             opts: Optional[Dict[str, Any]] = None,
+             probes: bool = True, verbose: bool = True) -> Dict[str, Any]:
+    """Lower + compile one (arch x shape x mesh) cell; returns roofline and
+    memory artifacts. ``opts`` carries hillclimb overrides."""
+    opts = dict(opts or {})
+    cfg = get_config(arch)
+    if opts.get("model_overrides"):
+        cfg = cfg.replace(**opts.pop("model_overrides"))
+    if opts.get("moe_dispatch") and cfg.moe is not None:
+        import dataclasses as _dc
+        cfg = cfg.replace(moe=_dc.replace(cfg.moe,
+                                          dispatch=opts["moe_dispatch"]))
+    shape = SHAPES[shape_name]
+    sanctioned, skip_note = shape_applicable(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    # (a) production scan build.
+    t0 = time.monotonic()
+    lowered, step_kind, tokens = _lower_cell(cfg, shape, mesh, opts=opts,
+                                             scan=True)
+    t_lower = time.monotonic() - t0
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+    mem = _memory_analysis_dict(compiled)
+    cost_scan, coll_scan = _cost_and_collectives(compiled)
+
+    # (b)+(c) depth probes for loop-corrected counts. The microbatch
+    # accumulation loop is *also* a lax.scan, so probes run at
+    # microbatches=1 with global_batch/mb and results scale by mb
+    # (the optimizer tail is O(N) — negligible next to O(N*D)).
+    p = block_period(cfg)
+    nb = cfg.num_layers // p
+    probe_info: Dict[str, Any] = {"period": p, "blocks": nb}
+    if probes and nb > 1:
+        mb = 1
+        probe_shape = shape
+        probe_opts = dict(opts)
+        if step_kind == "train":
+            tc = S.default_train_config(cfg)
+            mb = int(opts.get("microbatches", tc.microbatches))
+            if mb > 1:
+                probe_shape = ShapeSpec(shape.name,
+                                        shape.seq_len,
+                                        shape.global_batch // mb,
+                                        shape.kind)
+                probe_opts["microbatches"] = 1
+        probe_info["mb_multiplier"] = mb
+        cfg1, cfg2 = _probe_cfg(cfg, p), _probe_cfg(cfg, 2 * p)
+        l1, _, _ = _lower_cell(cfg1, probe_shape, mesh, opts=probe_opts,
+                               scan=False)
+        c1 = l1.compile()
+        cost1, coll1 = _cost_and_collectives(c1)
+        l2, _, _ = _lower_cell(cfg2, probe_shape, mesh, opts=probe_opts,
+                               scan=False)
+        c2 = l2.compile()
+        cost2, coll2 = _cost_and_collectives(c2)
+
+        def extrap(x1: float, x2: float) -> float:
+            # Per-block delta clamped at >= 0: tiny decode graphs can
+            # compile to *cheaper* 2p-depth modules (fusion luck), and a
+            # negative body would extrapolate below zero.
+            return mb * (x1 + (nb - 1) * max(x2 - x1, 0.0))
+
+        flops = extrap(cost1.get("flops", 0.0), cost2.get("flops", 0.0))
+        bytes_acc = extrap(cost1.get("bytes accessed", 0.0),
+                           cost2.get("bytes accessed", 0.0))
+        coll_wire = {}
+        kinds = set(coll1.wire_bytes) | set(coll2.wire_bytes)
+        for k in kinds:
+            coll_wire[k] = extrap(coll1.wire_bytes.get(k, 0.0),
+                                  coll2.wire_bytes.get(k, 0.0))
+        probe_info.update({
+            "probe1_flops": cost1.get("flops", 0.0),
+            "probe2_flops": cost2.get("flops", 0.0),
+            "scan_reported_flops": cost_scan.get("flops", 0.0),
+        })
+        cost = {"flops": flops, "bytes accessed": bytes_acc}
+
+        class _C:  # minimal CollectiveStats-alike
+            wire_bytes = coll_wire
+            counts = {k: coll_scan.counts.get(k, 0) for k in kinds}
+            result_bytes = {}
+
+            @property
+            def total_wire_bytes(self):
+                return sum(coll_wire.values())
+
+        coll = _C()
+    else:
+        cost, coll = cost_scan, coll_scan
+
+    mf = model_flops(cfg.num_active_params, tokens, step_kind)
+    terms = roofline_from_artifacts(
+        arch=arch, shape=shape_name, mesh_name=_mesh_name(multi_pod),
+        step_kind=step_kind, chips=chips, cost=cost, collectives=coll,
+        model_flops_total=mf, memory_analysis=mem,
+        note=("" if sanctioned else f"bonus cell ({skip_note})"))
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": _mesh_name(multi_pod),
+        "chips": chips, "step_kind": step_kind,
+        "sanctioned": sanctioned, "skip_note": skip_note,
+        "opts": {k: v for k, v in opts.items() if k != "rules_override"},
+        "lower_s": t_lower, "compile_s": t_compile,
+        "probe": probe_info,
+        "cost_analysis": {k: float(v) for k, v in cost.items()},
+        "memory_analysis": mem,
+        "collectives": {
+            "counts": dict(coll.counts),
+            "wire_bytes": dict(coll.wire_bytes),
+            "total_wire_bytes": float(coll.total_wire_bytes),
+        },
+        "roofline": json.loads(terms.to_json()),
+    }
+    if verbose:
+        r = result["roofline"]
+        print(f"[{arch} x {shape_name} x {_mesh_name(multi_pod)}] "
+              f"compile {t_compile:.1f}s | "
+              f"compute {r['compute_s']*1e3:.2f}ms "
+              f"memory {r['memory_s']*1e3:.2f}ms "
+              f"collective {r['collective_s']*1e3:.2f}ms "
+              f"-> {r['bound']}-bound, roofline frac "
+              f"{r['roofline_fraction']:.3f} | "
+              f"mem/device {mem.get('total_nonalias_bytes', 0)/2**30:.2f} GiB",
+              flush=True)
+    return result
+
+
+def save_result(result: Dict[str, Any], tag: str = "") -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = (f"{result['arch']}__{result['shape']}__{result['mesh']}"
+             f"{suffix}.json").replace("/", "_")
+    path = os.path.join(RESULTS_DIR, fname)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return path
+
+
+def result_path(arch: str, shape: str, multi_pod: bool, tag: str = "") -> str:
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR,
+                        f"{arch}__{shape}__{_mesh_name(multi_pod)}"
+                        f"{suffix}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell on this mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--include-bonus", action="store_true",
+                    help="also compile spec-skippable long_500k cells")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the depth-probe lowerings (memory/compile "
+                         "proof only; flops will be scan-underreported)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--opts", default="{}",
+                    help="JSON dict of hillclimb overrides")
+    args = ap.parse_args()
+    opts = json.loads(args.opts)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in ALL_SHAPES:
+                cells.append((arch, shape.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for multi_pod in meshes:
+        for arch, shape_name in cells:
+            cfg = get_config(arch)
+            ok, note = shape_applicable(cfg, SHAPES[shape_name])
+            if args.all and not ok and not args.include_bonus:
+                print(f"[{arch} x {shape_name}] SKIP (sanctioned): {note}",
+                      flush=True)
+                continue
+            if args.skip_existing and os.path.exists(
+                    result_path(arch, shape_name, multi_pod, args.tag)):
+                print(f"[{arch} x {shape_name} x {_mesh_name(multi_pod)}] "
+                      f"cached", flush=True)
+                continue
+            try:
+                res = run_cell(arch, shape_name, multi_pod=multi_pod,
+                               opts=dict(opts), probes=not args.no_probes)
+                save_result(res, tag=args.tag)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape_name, multi_pod, repr(e)))
+                print(f"[{arch} x {shape_name} x "
+                      f"{_mesh_name(multi_pod)}] FAILED: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: "
+                         f"{[(f[0], f[1], f[2]) for f in failures]}")
+    print("dry-run complete: all cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

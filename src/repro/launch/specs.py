@@ -1,0 +1,143 @@
+"""ShapeDtypeStruct input stand-ins + sharding resolution for every
+(arch x shape x step-kind) cell. No device allocation happens here."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ModelConfig, ServeConfig, ShapeSpec, TrainConfig)
+from repro.distributed.sharding import RuleSet, resolve_spec
+from repro.models import model as lm
+from repro.training.optimizer import init_opt_state, opt_state_specs
+
+SDS = jax.ShapeDtypeStruct
+Params = Any
+
+BATCH_LOGICAL = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "mask": ("batch", "seq"),
+    "vision_embeds": ("batch", "seq", "embed_act"),
+}
+
+
+def default_train_config(cfg: ModelConfig) -> TrainConfig:
+    """Per-arch training policy: bigger models get full remat, gradient
+    accumulation, and int8 Adam moments (the state-compression trick that
+    lets the 398B/778B configs approach 16 GB/chip HBM)."""
+    n = cfg.num_params
+    big = n > 30e9
+    if n > 100e9:
+        mb = 16
+    elif n > 3e9:
+        mb = 8
+    else:
+        mb = 1
+    return TrainConfig(
+        # 4k-seq training materializes O(s^2) attention scores on the
+        # reference path — remat pays for itself from ~0.1B up.
+        remat="full" if n > 0.1e9 else "none",
+        scan_layers=True,
+        opt_state_dtype="int8" if big else "fp32",
+        microbatches=mb,
+    )
+
+
+def default_serve_config(cfg: ModelConfig, shape: ShapeSpec) -> ServeConfig:
+    return ServeConfig(
+        max_batch=shape.global_batch,
+        serve_fsdp=cfg.num_params > 30e9,
+        max_seq_len=shape.seq_len,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch SDS.
+# ---------------------------------------------------------------------------
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    ft = cfg.frontend_tokens
+    b, s = shape.global_batch, shape.seq_len - ft
+    batch = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+        "mask": SDS((b, s), jnp.float32),
+    }
+    if ft:
+        batch["vision_embeds"] = SDS((b, ft, cfg.frontend_dim or cfg.d_model),
+                                     jnp.float32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    ft = cfg.frontend_tokens
+    b, s = shape.global_batch, shape.seq_len - ft
+    batch = {"tokens": SDS((b, s), jnp.int32)}
+    if ft:
+        batch["vision_embeds"] = SDS((b, ft, cfg.frontend_dim or cfg.d_model),
+                                     jnp.float32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                       cache_dtype=None) -> Tuple[SDS, Any, SDS]:
+    """(tokens, caches, pos) stand-ins for one serve_step: a single new
+    token against a seq_len-deep cache."""
+    b = shape.global_batch
+    dtype = cache_dtype or jnp.dtype(cfg.dtype)
+    caches = jax.eval_shape(
+        lambda: lm.init_caches(cfg, b, shape.seq_len, dtype))
+    tokens = SDS((b, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return tokens, caches, pos
+
+
+# ---------------------------------------------------------------------------
+# Sharding resolution over SDS trees.
+# ---------------------------------------------------------------------------
+def _resolve_tree(sds_tree, logical_tree, mesh, rules: RuleSet):
+    def f(sds, logical):
+        spec = resolve_spec(sds.shape, tuple(logical), rules, mesh)
+        return jax.sharding.NamedSharding(mesh, spec)
+    return jax.tree.map(
+        f, sds_tree, logical_tree,
+        is_leaf=lambda t: isinstance(t, SDS) or (
+            isinstance(t, tuple) and not isinstance(t, SDS)))
+
+
+def params_shardings(cfg: ModelConfig, mesh, rules: RuleSet):
+    shapes = lm.param_shapes(cfg)
+    specs = lm.param_specs(cfg)
+    return jax.tree.map(
+        lambda sds, sp: jax.sharding.NamedSharding(
+            mesh, resolve_spec(sds.shape, tuple(sp), rules, mesh)),
+        shapes, specs, is_leaf=lambda t: isinstance(t, SDS))
+
+
+def _map_with_spec(sds_tree, spec_tree, mesh, rules):
+    return jax.tree.map(
+        lambda sds, sp: jax.sharding.NamedSharding(
+            mesh, resolve_spec(sds.shape, tuple(sp), rules, mesh)),
+        sds_tree, spec_tree, is_leaf=lambda t: isinstance(t, SDS))
+
+
+def opt_shardings(cfg: ModelConfig, tcfg: TrainConfig, mesh, rules: RuleSet):
+    params_sds = lm.param_shapes(cfg)
+    opt_sds = jax.eval_shape(lambda p: init_opt_state(p, tcfg), params_sds)
+    specs = opt_state_specs(lm.param_specs(cfg), tcfg)
+    return _map_with_spec(opt_sds, specs, mesh, rules), opt_sds
+
+
+def batch_shardings(batch_sds, mesh, rules: RuleSet):
+    return {
+        k: jax.sharding.NamedSharding(
+            mesh, resolve_spec(v.shape, BATCH_LOGICAL[k], mesh=mesh,
+                               rules=rules))
+        for k, v in batch_sds.items()
+    }
+
+
+def cache_shardings(cfg: ModelConfig, caches_sds, mesh, rules: RuleSet):
+    specs = lm.cache_specs(cfg)
+    return _map_with_spec(caches_sds, specs, mesh, rules)

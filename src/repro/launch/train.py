@@ -1,0 +1,70 @@
+"""Training launcher.
+
+Smoke-scale (CPU) end-to-end runs use ``--smoke``; production meshes are
+exercised through ``repro.launch.dryrun``. Demonstrates checkpoint/resume
+(kill and re-run with the same --ckpt-dir) and straggler-hedged data
+loading.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+
+import jax
+
+from repro.config import SHAPES, TrainConfig, get_config, smoke_config
+from repro.launch.specs import default_train_config
+from repro.training.data import DataConfig, PrefetchingLoader
+from repro.training.train_loop import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--opt-state-dtype", default="fp32",
+                    choices=["fp32", "int8"])
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(levelname)s %(message)s")
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    base = default_train_config(cfg)
+    tcfg = TrainConfig(**{**base.__dict__,
+                          "learning_rate": args.lr,
+                          "total_steps": args.steps,
+                          "warmup_steps": max(args.steps // 10, 1),
+                          "opt_state_dtype": args.opt_state_dtype,
+                          "microbatches": 1 if args.smoke else base.microbatches,
+                          "remat": "none" if args.smoke else base.remat})
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.batch,
+                      frontend_tokens=cfg.frontend_tokens,
+                      frontend_dim=cfg.frontend_dim or cfg.d_model)
+    loader = PrefetchingLoader(dcfg)
+    trainer = Trainer(cfg, tcfg, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every)
+    hist = trainer.run(loader, steps=args.steps, log_every=args.log_every)
+    print(json.dumps({
+        "arch": args.arch,
+        "steps": len(hist["loss"]),
+        "first_loss": hist["loss"][0],
+        "last_loss": hist["loss"][-1],
+        "mean_step_s": sum(hist["step_time_s"]) / len(hist["step_time_s"]),
+        "hedged_batches": loader.hedge_count,
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

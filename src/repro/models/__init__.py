@@ -1,0 +1,9 @@
+from repro.models import model
+from repro.models.model import (cache_specs, decode_step, forward,
+                                init_caches, init_params, loss_fn,
+                                param_shapes, param_specs, prefill)
+
+__all__ = [
+    "model", "cache_specs", "decode_step", "forward", "init_caches",
+    "init_params", "loss_fn", "param_shapes", "param_specs", "prefill",
+]

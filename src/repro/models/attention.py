@@ -1,0 +1,147 @@
+"""GQA multi-head attention with RoPE and a decode KV cache.
+
+Modes:
+  * train   — full causal self-attention (no cache)
+  * prefill — causal self-attention that also emits the KV cache laid out
+              in the decode sharding (``kv_seq`` sequence-sharded)
+  * decode  — one new token appended at ``pos`` against the cache
+              (flash-decode partial-softmax combine under GSPMD)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import shard
+from repro.kernels import ops
+from repro.models.layers import dense_init, rope_apply, rope_table
+
+Params = Dict[str, Any]
+
+
+def attn_init(rng, cfg: ModelConfig) -> Params:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, hq, hd), dtype),
+        "wk": dense_init(ks[1], (d, hkv, hd), dtype),
+        "wv": dense_init(ks[2], (d, hkv, hd), dtype),
+        "wo": dense_init(ks[3], (hq, hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    return p
+
+
+def attn_specs(cfg: ModelConfig) -> Params:
+    p: Params = {
+        "wq": ("p_embed", "p_heads", "p_head_dim"),
+        "wk": ("p_embed", "p_kv_heads", "p_head_dim"),
+        "wv": ("p_embed", "p_kv_heads", "p_head_dim"),
+        "wo": ("p_heads", "p_head_dim", "p_embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("p_heads", "p_head_dim")
+        p["bk"] = ("p_kv_heads", "p_head_dim")
+        p["bv"] = ("p_kv_heads", "p_head_dim")
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, hkv, hd), dtype),
+    }
+
+
+def cache_specs() -> Params:
+    return {
+        "k": ("batch", "kv_seq", "kv_heads_act", "head_dim_act"),
+        "v": ("batch", "kv_seq", "kv_heads_act", "head_dim_act"),
+    }
+
+
+def _project_qkv(params: Params, cfg: ModelConfig, x: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"][None, None]
+        k = k + params["bk"][None, None]
+        v = v + params["bv"][None, None]
+    q = shard(q, ("batch", "seq", "heads_act", None))
+    k = shard(k, ("batch", "seq", "kv_heads_act", None))
+    v = shard(v, ("batch", "seq", "kv_heads_act", None))
+    return q, k, v
+
+
+def attn_apply(params: Params, cfg: ModelConfig, x: jax.Array, *,
+               mode: str, cache: Optional[Params] = None,
+               pos: Optional[jax.Array] = None,
+               max_len: Optional[int] = None
+               ) -> Tuple[jax.Array, Optional[Params]]:
+    """x: (b, s, d). Returns (out, new_cache)."""
+    b, s, d = x.shape
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(s)
+        sin, cos = rope_table(positions, cfg.resolved_head_dim, cfg.rope_theta)
+        q, k, v = _project_qkv(params, cfg, x)
+        q = rope_apply(q, sin, cos)
+        k = rope_apply(k, sin, cos)
+        out = ops.attention(q, k, v, causal=True, impl=cfg.attn_impl,
+                            chunk=cfg.attn_chunk)
+        new_cache = None
+        if mode == "prefill":
+            kc, vc = k, v
+            if max_len is not None and max_len > s:
+                pad = ((0, 0), (0, max_len - s), (0, 0), (0, 0))
+                kc, vc = jnp.pad(kc, pad), jnp.pad(vc, pad)
+            new_cache = {
+                "k": shard(kc, ("batch", "kv_seq", "kv_heads_act", None)),
+                "v": shard(vc, ("batch", "kv_seq", "kv_heads_act", None)),
+            }
+    else:  # decode
+        assert cache is not None and pos is not None
+        pos_arr = jnp.asarray(pos)
+        per_slot = pos_arr.ndim == 1          # (b,) slot positions
+        q, k, v = _project_qkv(params, cfg, x)              # s == 1
+        cdt = cache["k"].dtype   # cache may be lower-precision (fp8 lever)
+        if per_slot:
+            # Per-batch RoPE phases (continuous batching: every slot is at
+            # its own sequence position).
+            sin, cos = rope_table(pos_arr, cfg.resolved_head_dim,
+                                  cfg.rope_theta)           # (b, d/2)
+            sin, cos = sin[:, None], cos[:, None]           # (b, 1, d/2)
+            q = rope_apply(q, sin, cos)
+            k = rope_apply(k, sin, cos)
+            bidx = jnp.arange(b)
+            k_cache = cache["k"].at[bidx, pos_arr].set(k[:, 0].astype(cdt))
+            v_cache = cache["v"].at[bidx, pos_arr].set(v[:, 0].astype(cdt))
+            length = pos_arr.astype(jnp.int32) + 1
+        else:
+            positions = pos_arr.reshape(1)
+            sin, cos = rope_table(positions, cfg.resolved_head_dim,
+                                  cfg.rope_theta)
+            q = rope_apply(q, sin, cos)
+            k = rope_apply(k, sin, cos)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cdt), pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cdt), pos, axis=1)
+            length = jnp.full((b,), pos_arr + 1, jnp.int32)
+        k_cache = shard(k_cache, ("batch", "kv_seq", "kv_heads_act", None))
+        v_cache = shard(v_cache, ("batch", "kv_seq", "kv_heads_act", None))
+        out1 = ops.decode_attention(q[:, 0], k_cache, v_cache, length,
+                                    impl=cfg.attn_impl)
+        out = out1[:, None]
+        new_cache = {"k": k_cache, "v": v_cache}
+    out = shard(out, ("batch", "seq", "heads_act", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache

@@ -1,0 +1,164 @@
+"""Top-k Mixture-of-Experts with capacity-bounded scatter dispatch.
+
+TPU-native formulation (GShard-style, grouped): tokens are grouped by their
+data shard, positions inside each expert's capacity buffer are computed with
+a group-local cumulative sum (no cross-shard prefix), tokens are
+scatter-added into an (experts x capacity) buffer (the GSPMD lowering of the
+sharded scatter is the MoE all-to-all), experts run as one grouped einsum,
+and results gather back weighted by the router's combine weights.
+
+Expert weights are expert-sharded over the ``model`` axis (EP) and
+fsdp-sharded over ``data`` on the hidden dim.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, MoEConfig
+from repro.distributed.sharding import active_mesh, shard
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def moe_init(rng, cfg: ModelConfig) -> Params:
+    moe = cfg.moe
+    assert moe is not None
+    d, f, e = cfg.d_model, moe.d_ff_expert, moe.num_experts
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), dtype),
+        "w_up": dense_init(ks[2], (e, d, f), dtype),
+        "w_down": dense_init(ks[3], (e, f, d), dtype),
+    }
+
+
+def moe_specs(cfg: ModelConfig) -> Params:
+    return {
+        "router": ("p_embed", None),
+        "w_gate": ("p_expert", "p_ff_fsdp", None),
+        "w_up": ("p_expert", "p_ff_fsdp", None),
+        "w_down": ("p_expert", None, "p_ff_fsdp"),
+    }
+
+
+def _num_groups() -> int:
+    """Token groups = number of data-parallel shards (1 without a mesh)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    g = sizes.get("data", 1) * sizes.get("pod", 1)
+    return g
+
+
+def expert_capacity(tokens_per_group: int, moe: MoEConfig) -> int:
+    c = math.ceil(tokens_per_group * moe.top_k * moe.capacity_factor
+                  / moe.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_apply(params: Params, cfg: ModelConfig, x: jax.Array, *,
+              rng: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (b, s, d) -> (out, aux_loss)."""
+    moe = cfg.moe
+    assert moe is not None
+    b, s, d = x.shape
+    e, k = moe.num_experts, moe.top_k
+    tokens = b * s
+    groups = _num_groups()
+    if tokens % groups != 0:
+        groups = 1
+    tpg = tokens // groups
+    cap = expert_capacity(tpg, moe)
+
+    xg = x.reshape(groups, tpg, d)
+    xg = shard(xg, ("batch", None, "embed_act"))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])
+    if moe.router_jitter and rng is not None:
+        logits = logits + moe.router_jitter * jax.random.normal(
+            rng, logits.shape, jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (g, t, e)
+    top_p, top_i = jax.lax.top_k(probs, k)                      # (g, t, k)
+    denom = jnp.sum(top_p, axis=-1, keepdims=True)
+    combine = top_p / jnp.maximum(denom, 1e-9)
+
+    # Load-balancing aux loss (Switch): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=1)                                # (g, e)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=2),
+        axis=1) / k                                             # (g, e)
+    aux = moe.aux_loss_weight * e * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    # ---- dispatch: k-major position assignment under capacity ----
+    v2 = moe.dispatch == "v2"
+    if v2:
+        # drop-mode scatter straight into the expert-flat buffer: indices
+        # >= e*cap fall off the end (no overflow row), so the buffer's row
+        # dim is exactly e*cap and shards cleanly over the model axis.
+        buf = jnp.zeros((groups, e * cap, d), x.dtype)
+        buf = shard(buf, ("batch", "expert_flat", "embed_act"))
+    else:
+        buf = jnp.zeros((groups, e * cap + 1, d), x.dtype)
+    counts = jnp.zeros((groups, e), jnp.int32)
+    dests = []
+    keeps = []
+    g_iota = jnp.arange(groups)[:, None]
+    for kk in range(k):
+        idx = top_i[:, :, kk]                                   # (g, t)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)        # (g, t, e)
+        within = jnp.cumsum(onehot, axis=1) - onehot            # exclusive
+        pos = jnp.take_along_axis(
+            within + counts[:, None, :], idx[..., None], axis=-1)[..., 0]
+        keep = pos < cap
+        dest = jnp.where(keep, idx * cap + pos, e * cap)        # (g, t)
+        buf = buf.at[g_iota, dest].add(
+            jnp.where(keep[..., None], xg, 0), mode="drop",
+            indices_are_sorted=False, unique_indices=False)
+        counts = counts + jnp.sum(onehot, axis=1)
+        dests.append(dest)
+        keeps.append(keep)
+
+    xb = (buf if v2 else buf[:, : e * cap]).reshape(groups, e, cap, d)
+    xb = shard(xb, ("batch", "expert_act", None, "embed_act"))
+
+    # ---- grouped expert SwiGLU ----
+    g_h = jnp.einsum("gecd,edf->gecf", xb, params["w_gate"])
+    u_h = jnp.einsum("gecd,edf->gecf", xb, params["w_up"])
+    if cfg.mlp_lowp:
+        h = jax.nn.silu(g_h) * u_h
+    else:
+        h = jax.nn.silu(g_h.astype(jnp.float32)).astype(x.dtype) * u_h
+    h = shard(h, ("batch", "expert_act", None, None))
+    yb = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    yb = shard(yb, ("batch", "expert_act", None, "embed_act"))
+
+    # ---- combine ----
+    y_flat = yb.reshape(groups, e * cap, d)
+    if v2:
+        y_flat = shard(y_flat, ("batch", "expert_flat", "embed_act"))
+    else:
+        y_flat = jnp.concatenate(
+            [y_flat, jnp.zeros((groups, 1, d), y_flat.dtype)], axis=1)
+    out = jnp.zeros_like(xg)
+    for kk in range(k):
+        if v2:
+            # fill-mode take: dropped slots (dest == e*cap) read as zero.
+            y_k = jax.vmap(lambda rows, ix: jnp.take(
+                rows, ix, axis=0, mode="fill", fill_value=0))(
+                    y_flat, dests[kk])
+        else:
+            y_k = y_flat[g_iota, dests[kk]]                     # (g, t, d)
+        w_k = (combine[:, :, kk] * keeps[kk]).astype(x.dtype)
+        out = out + y_k * w_k[..., None]
+    out = out.reshape(b, s, d)
+    return shard(out, ("batch", "seq", "embed_act")), aux

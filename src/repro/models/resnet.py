@@ -1,0 +1,110 @@
+"""ResNet-50/152 in pure JAX — the paper's primary DL-serving workload
+(§3, Fig 11). Used by the benchmark suite to measure real per-sample
+compute on this host and to drive the energy/TCO models.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+RESNET_LAYOUT = {
+    "resnet-50": (3, 4, 6, 3),
+    "resnet-152": (3, 8, 36, 3),
+}
+
+
+def _conv_init(rng, kh, kw, cin, cout, dtype=jnp.float32):
+    scale = (2.0 / (kh * kw * cin)) ** 0.5
+    return jax.random.normal(rng, (kh, kw, cin, cout), dtype) * scale
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def _bn(x, p, eps=1e-5):
+    inv = jax.lax.rsqrt(p["var"] + eps) * p["scale"]
+    return x * inv + (p["bias"] - p["mean"] * inv)
+
+
+def _bottleneck_init(rng, cin, cmid, cout, stride):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "conv1": _conv_init(ks[0], 1, 1, cin, cmid),
+        "bn1": _bn_init(cmid),
+        "conv2": _conv_init(ks[1], 3, 3, cmid, cmid),
+        "bn2": _bn_init(cmid),
+        "conv3": _conv_init(ks[2], 1, 1, cmid, cout),
+        "bn3": _bn_init(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[3], 1, 1, cin, cout)
+        p["bn_proj"] = _bn_init(cout)
+    return p
+
+
+def _bottleneck(x, p, stride):
+    h = jax.nn.relu(_bn(_conv(x, p["conv1"]), p["bn1"]))
+    h = jax.nn.relu(_bn(_conv(h, p["conv2"], stride), p["bn2"]))
+    h = _bn(_conv(h, p["conv3"]), p["bn3"])
+    if "proj" in p:
+        x = _bn(_conv(x, p["proj"], stride), p["bn_proj"])
+    return jax.nn.relu(x + h)
+
+
+def resnet_init(rng, variant: str = "resnet-50",
+                num_classes: int = 1000) -> Params:
+    blocks = RESNET_LAYOUT[variant]
+    ks = jax.random.split(rng, 3)
+    params: Params = {
+        "stem": _conv_init(ks[0], 7, 7, 3, 64),
+        "stem_bn": _bn_init(64),
+        "stages": [],
+    }
+    cin = 64
+    rngs = jax.random.split(ks[1], sum(blocks))
+    i = 0
+    for stage, n in enumerate(blocks):
+        cmid = 64 * (2 ** stage)
+        cout = cmid * 4
+        stage_p = []
+        for b in range(n):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            stage_p.append(_bottleneck_init(rngs[i], cin, cmid, cout,
+                                            stride))
+            cin = cout
+            i += 1
+        params["stages"].append(stage_p)
+    params["fc"] = jax.random.normal(ks[2], (cin, num_classes)) * 0.01
+    return params
+
+
+def resnet_apply(params: Params, x: jax.Array,
+                 variant: str = "resnet-50") -> jax.Array:
+    """x: (b, 224, 224, 3) -> (b, classes)."""
+    blocks = RESNET_LAYOUT[variant]
+    h = jax.nn.relu(_bn(_conv(x, params["stem"], 2), params["stem_bn"]))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for stage, n in enumerate(blocks):
+        for b in range(n):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            h = _bottleneck(h, params["stages"][stage][b], stride)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["fc"]
+
+
+def resnet_flops(variant: str = "resnet-50", image: int = 224) -> float:
+    """Analytic MACs x2 (published: ~4.1 GFLOPs R50, ~11.6 GFLOPs R152)."""
+    return {"resnet-50": 4.1e9, "resnet-152": 11.6e9}[variant] * 2 / 2

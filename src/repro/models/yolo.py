@@ -1,0 +1,99 @@
+"""YOLOv5x-style detector backbone+head in pure JAX (paper workload, §3).
+
+CSP bottleneck blocks + SPPF, width/depth multiples of YOLOv5x
+(w=1.25, d=1.33). Detection post-processing (NMS) is out of scope — the
+benchmark measures the network forward pass, as the paper's TFLite/TensorRT
+measurements do.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _conv_init(rng, k, cin, cout):
+    scale = (2.0 / (k * k * cin)) ** 0.5
+    return {"w": jax.random.normal(rng, (k, k, cin, cout)) * scale,
+            "b": jnp.zeros((cout,))}
+
+
+def _conv(x, p, stride=1):
+    h = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+    return jax.nn.silu(h)
+
+
+def _c3_init(rng, cin, cout, n):
+    ks = jax.random.split(rng, 3 + 2 * n)
+    cmid = cout // 2
+    p = {
+        "cv1": _conv_init(ks[0], 1, cin, cmid),
+        "cv2": _conv_init(ks[1], 1, cin, cmid),
+        "cv3": _conv_init(ks[2], 1, 2 * cmid, cout),
+        "m": [{"cv1": _conv_init(ks[3 + 2 * i], 1, cmid, cmid),
+               "cv2": _conv_init(ks[4 + 2 * i], 3, cmid, cmid)}
+              for i in range(n)],
+    }
+    return p
+
+
+def _c3(x, p):
+    a = _conv(x, p["cv1"])
+    for m in p["m"]:
+        a = a + _conv(_conv(a, m["cv1"]), m["cv2"])
+    b = _conv(x, p["cv2"])
+    return _conv(jnp.concatenate([a, b], axis=-1), p["cv3"])
+
+
+def _sppf_init(rng, c):
+    k1, k2 = jax.random.split(rng)
+    return {"cv1": _conv_init(k1, 1, c, c // 2),
+            "cv2": _conv_init(k2, 1, c * 2, c)}
+
+
+def _sppf(x, p):
+    h = _conv(x, p["cv1"])
+    pools = [h]
+    for _ in range(3):
+        pools.append(jax.lax.reduce_window(
+            pools[-1], -jnp.inf, jax.lax.max, (1, 5, 5, 1), (1, 1, 1, 1),
+            "SAME"))
+    return _conv(jnp.concatenate(pools, axis=-1), p["cv2"])
+
+
+# YOLOv5x widths/depths.
+_WIDTHS = [80, 160, 320, 640, 1280]
+_DEPTHS = [4, 8, 12, 4]
+
+
+def yolo_init(rng, num_outputs: int = 255) -> Params:
+    ks = jax.random.split(rng, 16)
+    p: Params = {"stem": _conv_init(ks[0], 6, 3, _WIDTHS[0])}
+    stages = []
+    for i in range(4):
+        stages.append({
+            "down": _conv_init(ks[1 + 2 * i], 3, _WIDTHS[i], _WIDTHS[i + 1]),
+            "c3": _c3_init(ks[2 + 2 * i], _WIDTHS[i + 1], _WIDTHS[i + 1],
+                           _DEPTHS[i]),
+        })
+    p["stages"] = stages
+    p["sppf"] = _sppf_init(ks[10], _WIDTHS[4])
+    p["head"] = _conv_init(ks[11], 1, _WIDTHS[4], num_outputs)
+    return p
+
+
+def yolo_apply(params: Params, x: jax.Array) -> jax.Array:
+    """x: (b, 640, 640, 3) -> (b, 20, 20, 255) coarse head."""
+    h = _conv(x, params["stem"], 2)
+    for st in params["stages"]:
+        h = _conv(h, st["down"], 2)
+        h = _c3(h, st["c3"])
+    h = _sppf(h, params["sppf"])
+    return jax.lax.conv_general_dilated(
+        h, params["head"]["w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["head"]["b"]

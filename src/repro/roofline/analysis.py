@@ -1,0 +1,186 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh) cell, per the methodology:
+
+    compute    = HLO_FLOPs_per_chip        / peak_FLOP/s
+    memory     = HLO_bytes_per_chip        / HBM_bw
+    collective = collective_wire_bytes     / link_bw        (per chip)
+
+``compiled.cost_analysis()`` reports flops/bytes of the *per-device* SPMD
+module, so terms are per-chip directly (equivalent to the prompt's
+HLO_FLOPs_total / (chips x peak)).
+
+Collective bytes are not in cost_analysis: we parse the post-partitioning
+HLO (``compiled.as_text()``), find every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, read the result shape and
+replica-group size, and convert to ring wire bytes per chip:
+
+    all-gather      (A-1)/A * result_bytes          (received)
+    all-reduce      2 (A-1)/A * result_bytes        (RS + AG)
+    reduce-scatter  (A-1)/A * A * result_bytes      (operand streamed)
+    all-to-all      (A-1)/A * result_bytes
+    collective-permute  result_bytes
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline.hw import TPU_V5E, ChipSpec
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """'f32[128,1024]' -> bytes. Tuple shapes handled by summing parts."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    return 2  # collective-permute etc.
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    result_bytes: Dict[str, float] = field(default_factory=dict)
+    wire_bytes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # Match op lines: "%name = TYPE[SHAPE] all-reduce(...)" etc.
+        m = re.search(r"=\s*([^=]*?)\s+(all-gather|all-reduce|reduce-scatter"
+                      r"|all-to-all|collective-permute)(-start|-done)?\(", s)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # counted at -start
+        kind = m.group(2)
+        shape_str = m.group(1)
+        rb = _shape_bytes(shape_str)
+        a = _group_size(s)
+        if kind == "all-gather":
+            wire = rb * (a - 1) / a
+        elif kind == "all-reduce":
+            wire = 2 * rb * (a - 1) / a
+        elif kind == "reduce-scatter":
+            wire = rb * (a - 1)          # operand = A x result
+        elif kind == "all-to-all":
+            wire = rb * (a - 1) / a
+        else:  # collective-permute
+            wire = rb
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.result_bytes[kind] = stats.result_bytes.get(kind, 0.0) + rb
+        stats.wire_bytes[kind] = stats.wire_bytes.get(kind, 0.0) + wire
+    return stats
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    step_kind: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_wire_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    model_flops_total: float
+    useful_flops_ratio: float     # MODEL_FLOPS / (flops_per_chip * chips)
+    roofline_fraction: float      # bound-term share of the sum? see note
+    collective_detail: Dict[str, float] = field(default_factory=dict)
+    memory_analysis: Dict[str, float] = field(default_factory=dict)
+    note: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def roofline_from_artifacts(*, arch: str, shape: str, mesh_name: str,
+                            step_kind: str, chips: int,
+                            cost: Dict[str, float],
+                            collectives: CollectiveStats,
+                            model_flops_total: float,
+                            memory_analysis: Optional[Dict[str, float]] = None,
+                            chip: ChipSpec = TPU_V5E,
+                            note: str = "") -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collectives.total_wire_bytes
+    compute_s = flops / chip.peak_flops_bf16
+    memory_s = hbm / chip.hbm_bw
+    collective_s = coll / chip.ici_link_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound = max(terms, key=terms.get)  # type: ignore[arg-type]
+    total_hlo_flops = flops * chips
+    useful = (model_flops_total / total_hlo_flops
+              if total_hlo_flops > 0 else 0.0)
+    # roofline fraction: useful model-FLOPs time over the dominating term
+    # (an MFU-style bound: what fraction of the bottleneck's time would a
+    # perfect implementation of the model math need).
+    ideal_s = (model_flops_total / chips) / chip.peak_flops_bf16
+    frac = ideal_s / max(terms[bound], 1e-30)
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, step_kind=step_kind,
+        chips=chips, flops_per_chip=flops, hbm_bytes_per_chip=hbm,
+        collective_wire_bytes_per_chip=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bound=bound, model_flops_total=model_flops_total,
+        useful_flops_ratio=useful, roofline_fraction=min(frac, 1.0),
+        collective_detail=dict(collectives.wire_bytes),
+        memory_analysis=memory_analysis or {},
+        note=note,
+    )
+
+
+def model_flops(num_params_active: float, tokens: float,
+                step_kind: str) -> float:
+    """MODEL_FLOPS: 6 N D for a train step (fwd+bwd), 2 N D forward-only
+    (prefill / decode-per-step)."""
+    if step_kind == "train":
+        return 6.0 * num_params_active * tokens
+    return 2.0 * num_params_active * tokens

@@ -1,0 +1,118 @@
+"""Slot-based continuous batching.
+
+Fixed B decode slots; finished slots are refilled from the queue without
+draining the batch (per-slot sequence positions — the attention layer takes
+a (b,) position vector). Prefill runs per-request at batch 1 and the fresh
+cache is inserted into the batched cache at the slot index.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+from repro.models import model as lm
+from repro.serving.engine import ServingEngine
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (s,) int32
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, engine: ServingEngine, slots: int):
+        self.engine = engine
+        self.cfg = engine.cfg
+        self.slots = slots
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * slots
+        self.positions = np.zeros(slots, np.int64)
+        self.tokens = np.zeros(slots, np.int64)
+        self.caches = None
+        self._rid = itertools.count()
+        self._insert_fns: Dict[int, Any] = {}
+
+        def _insert(caches, cache1, slot):
+            def ins(big, small):
+                return jax.lax.dynamic_update_index_in_dim(
+                    big, small[0], slot, axis=0)
+            # caches leaves: (nb, b, ...); cache1 leaves: (nb, 1, ...)
+            return jax.tree.map(
+                lambda big, small: jax.vmap(
+                    lambda bg, sm: jax.lax.dynamic_update_index_in_dim(
+                        bg, sm[0], slot, axis=0))(big, small),
+                caches, cache1)
+
+        self._insert_jit = jax.jit(_insert, static_argnums=(2,),
+                                   donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        rid = next(self._rid)
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens))
+        return rid
+
+    def _ensure_caches(self) -> None:
+        if self.caches is None:
+            self.caches = lm.init_caches(
+                self.cfg, self.slots, self.engine.scfg.max_seq_len)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+            logits, cache1 = self.engine.prefill_fn(self.engine.params,
+                                                    batch)
+            self._ensure_caches()
+            self.caches = self._insert_jit(self.caches, cache1, slot)
+            nxt = int(jnp.argmax(logits[0]))
+            req.generated.append(nxt)
+            self.active[slot] = req
+            self.positions[slot] = len(req.prompt)
+            self.tokens[slot] = nxt
+
+    def step(self) -> int:
+        """One engine tick: admit + one batched decode. Returns number of
+        active slots."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        self._ensure_caches()
+        toks = jnp.asarray(self.tokens[:, None], jnp.int32)
+        pos = jnp.asarray(self.positions, jnp.int32)
+        logits, self.caches = self.engine.decode_fn(
+            self.engine.params, toks, self.caches, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s in live:
+            req = self.active[s]
+            req.generated.append(int(nxt[s]))
+            self.positions[s] += 1
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.active[s] = None
+            else:
+                self.tokens[s] = int(nxt[s])
+        return len(live)
+
+    def run_to_completion(self, max_ticks: int = 10000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_ticks):
+            if not self.queue and all(a is None for a in self.active):
+                break
+            before = {id(a) for a in self.active if a}
+            self.step()
+        return finished

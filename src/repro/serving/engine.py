@@ -1,0 +1,110 @@
+"""Serving engine: jit'd prefill / decode with full-length caches.
+
+Decode caches live at ``max_seq_len`` from the start (the dry-run decode
+cells take them as inputs); prefill writes the first ``s`` positions and the
+engine pads. Weight-only int8 serving (the paper's DSP path) is applied at
+load time via ``ServeConfig.quantize_weights``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ServeConfig
+from repro.distributed.sharding import RuleSet, serve_rules, use_sharding
+from repro.kernels.ref import quantize_int8
+from repro.models import model as lm
+
+Params = Any
+
+
+def quantize_params_int8(params: Params) -> Params:
+    """Weight-only int8: store int8 payload + per-output-channel scales,
+    dequantized on use. (Serving-only; halves/quarters weight HBM.)"""
+    def q(leaf):
+        if leaf.ndim >= 2 and leaf.dtype in (jnp.bfloat16, jnp.float32):
+            qv, s = quantize_int8(leaf, axis=-2)  # per-column of last dim
+            return {"__int8__": qv, "scale": s}
+        return leaf
+    return jax.tree.map(q, params)
+
+
+def dequantize_params(params: Params) -> Params:
+    def dq(leaf):
+        if isinstance(leaf, dict) and "__int8__" in leaf:
+            return (leaf["__int8__"].astype(jnp.float32)
+                    * leaf["scale"][..., None, :]).astype(jnp.bfloat16)
+        return leaf
+    return jax.tree.map(dq, params,
+                        is_leaf=lambda l: isinstance(l, dict)
+                        and "__int8__" in l)
+
+
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, scfg: Optional[ServeConfig] = None,
+                 mesh=None, rules: Optional[RuleSet] = None,
+                 scan: bool = True):
+        self.cfg = cfg
+        self.scfg = scfg or ServeConfig()
+        self.mesh = mesh
+        self.rules = rules or serve_rules(self.scfg.serve_fsdp)
+        self.scan = scan
+        self.params: Optional[Params] = None
+
+        def _prefill(params, batch):
+            with use_sharding(self.mesh, self.rules):
+                if self.scfg.quantize_weights:
+                    params = dequantize_params(params)
+                return lm.prefill(params, cfg, batch, scan=self.scan,
+                                  max_len=self.scfg.max_seq_len)
+
+        def _decode(params, tokens, caches, pos):
+            with use_sharding(self.mesh, self.rules):
+                if self.scfg.quantize_weights:
+                    params = dequantize_params(params)
+                return lm.decode_step(params, cfg, tokens, caches, pos,
+                                      scan=self.scan)
+
+        self.prefill_fn = jax.jit(_prefill)
+        self.decode_fn = jax.jit(_decode, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def load(self, params: Params) -> None:
+        if self.scfg.quantize_weights:
+            params = quantize_params_int8(params)
+        self.params = params
+
+    def init_random(self, seed: int = 0) -> None:
+        self.load(lm.init_params(self.cfg, jax.random.key(seed)))
+
+    # ------------------------------------------------------------------
+    def generate(self, tokens: jax.Array, max_new_tokens: int,
+                 vision_embeds: Optional[jax.Array] = None,
+                 greedy: bool = True, rng: Optional[jax.Array] = None
+                 ) -> jax.Array:
+        """tokens: (b, s) -> (b, max_new_tokens) generated ids."""
+        assert self.params is not None, "call load()/init_random() first"
+        b, s = tokens.shape
+        batch: Dict[str, Any] = {"tokens": tokens}
+        if vision_embeds is not None:
+            batch["vision_embeds"] = vision_embeds
+            s = s + vision_embeds.shape[1]
+        logits, caches = self.prefill_fn(self.params, batch)
+        out = []
+        pos = s
+        for i in range(max_new_tokens):
+            if greedy:
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                rng, k = jax.random.split(rng)
+                nxt = jax.random.categorical(k, logits).astype(jnp.int32)
+            out.append(nxt)
+            logits, caches = self.decode_fn(
+                self.params, nxt[:, None], caches, pos)
+            pos += 1
+        return jnp.stack(out, axis=1)

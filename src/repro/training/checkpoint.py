@@ -1,0 +1,167 @@
+"""Sharded, atomic, retention-managed checkpointing (no external deps).
+
+Layout:
+    <dir>/step_<n>/manifest.json       # keypath -> {file, shape, dtype}
+    <dir>/step_<n>/<leaf files>.npy
+    <dir>/LATEST                       # contains "step_<n>"
+
+Guarantees:
+  * atomic — written into ``.tmp-step_<n>`` then os.rename'd, so a crash
+    mid-save never corrupts LATEST;
+  * resumable onto a different mesh — leaves are stored unsharded and
+    restored via device_put with the *target* shardings (elastic restart);
+  * retention — keep the most recent ``keep`` checkpoints;
+  * async — ``save_async`` snapshots to host then writes on a worker
+    thread so the train loop is not blocked.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+def _keypath_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _flatten(tree: Params):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_keypath_str(path), leaf) for path, leaf in flat]
+
+
+def save(ckpt_dir: str, step: int, tree: Params, keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(ckpt_dir, f".tmp-{name}")
+    final = os.path.join(ckpt_dir, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest: Dict[str, Dict] = {}
+    for i, (key, leaf) in enumerate(_flatten(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        dtype_name = str(arr.dtype)
+        if dtype_name == "bfloat16":
+            # numpy can't round-trip ml_dtypes; store the raw bits.
+            np.save(os.path.join(tmp, fname), arr.view(np.uint16),
+                    allow_pickle=False)
+        else:
+            np.save(os.path.join(tmp, fname), arr, allow_pickle=False)
+        manifest[key] = {"file": fname, "shape": list(arr.shape),
+                         "dtype": dtype_name}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # LATEST pointer (atomic via rename).
+    latest_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(name)
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    _apply_retention(ckpt_dir, keep)
+    return final
+
+
+class AsyncSave:
+    def __init__(self, thread: threading.Thread):
+        self._thread = thread
+
+    def wait(self) -> None:
+        self._thread.join()
+
+
+def save_async(ckpt_dir: str, step: int, tree: Params,
+               keep: int = 3) -> AsyncSave:
+    """Snapshot to host memory now; write on a worker thread."""
+    host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+    t = threading.Thread(target=save, args=(ckpt_dir, step, host_tree, keep),
+                         daemon=True)
+    t.start()
+    return AsyncSave(t)
+
+
+def _apply_retention(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    latest = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(latest):
+        return None
+    with open(latest) as f:
+        name = f.read().strip()
+    if not os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, template: Params, step: Optional[int] = None,
+            shardings: Optional[Params] = None) -> Params:
+    """Restore into the structure of ``template``; optionally place each
+    leaf with the given shardings (tree matching template) — this is the
+    elastic-remesh path."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+
+    flat_template, tdef = jax.tree_util.tree_flatten_with_path(template)
+    flat_shardings: List[Any]
+    if shardings is not None:
+        flat_shardings = [s for _, s in
+                          jax.tree_util.tree_flatten_with_path(shardings)[0]]
+    else:
+        flat_shardings = [None] * len(flat_template)
+
+    leaves = []
+    for (keypath, tmpl_leaf), shard in zip(flat_template, flat_shardings):
+        key = _keypath_str(keypath)
+        if key not in manifest:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        entry = manifest[key]
+        arr = np.load(os.path.join(path, entry["file"]), allow_pickle=False)
+        if entry["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        want_dtype = (tmpl_leaf.dtype if hasattr(tmpl_leaf, "dtype")
+                      else arr.dtype)
+        if str(want_dtype) != str(arr.dtype):
+            arr = arr.astype(want_dtype)
+        if shard is not None:
+            leaves.append(jax.device_put(arr, shard))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(tdef, leaves)
+
+
+def list_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_"))

@@ -1,0 +1,206 @@
+"""AdamW with optional blockwise-int8 moment compression.
+
+The int8 state path stores both Adam moments as (int8 payload, fp32
+per-block scales) — 4x smaller optimizer state. At 256-chip scale this is
+what lets the 398B/778B assigned configs fit HBM during training (see
+EXPERIMENTS.md §Dry-run); it is also in the spirit of the paper's thesis
+that fleets of small-memory units need software that respects their limits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+Params = Any
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """Row-wise (last-axis) int8 tensor: shape-preserving, so the payload
+    inherits the parameter's sharding unchanged (no flatten/reshape that
+    would force GSPMD resharding at 256-chip scale)."""
+
+    def __init__(self, q: jax.Array, scale: jax.Array):
+        self.q = q              # int8, same shape as the source
+        self.scale = scale      # fp32, shape[:-1] + (1,)
+
+    def dequant(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __repr__(self):  # pragma: no cover
+        return f"QTensor(shape={self.q.shape})"
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensorLog:
+    """Row-wise log-space uint8 tensor for non-negative data (Adam v):
+    per-row (min, range) of log(v+tiny) mapped to [0, 255] — bounded
+    *relative* error, so 1/sqrt(v) stays sane where linear int8 would
+    collapse small entries to zero."""
+
+    TINY = 1e-30
+
+    def __init__(self, q, log_min, log_scale):
+        self.q = q                     # uint8, source shape
+        self.log_min = log_min         # fp32, shape[:-1] + (1,)
+        self.log_scale = log_scale     # fp32, shape[:-1] + (1,)
+
+    def dequant(self) -> jax.Array:
+        logs = self.q.astype(jnp.float32) * self.log_scale + self.log_min
+        return jnp.maximum(jnp.exp(logs) - self.TINY, 0.0)
+
+    def tree_flatten(self):
+        return (self.q, self.log_min, self.log_scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __repr__(self):  # pragma: no cover
+        return f"QTensorLog(shape={self.q.shape})"
+
+
+def _quant_rowwise(x: jax.Array) -> QTensor:
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale)
+
+
+def _quant_rowwise_log(x: jax.Array) -> QTensorLog:
+    logs = jnp.log(x + QTensorLog.TINY)
+    lo = jnp.min(logs, axis=-1, keepdims=True)
+    hi = jnp.max(logs, axis=-1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-12) / 255.0
+    q = jnp.clip(jnp.round((logs - lo) / scale), 0, 255).astype(jnp.uint8)
+    return QTensorLog(q, lo, scale)
+
+
+def _maybe_quant(x: jax.Array, dtype: str, log_space: bool = False):
+    if dtype == "int8":
+        return _quant_rowwise_log(x) if log_space else _quant_rowwise(x)
+    return x.astype(jnp.float32)
+
+
+def _maybe_dequant(x) -> jax.Array:
+    if isinstance(x, (QTensor, QTensorLog)):
+        return x.dequant()
+    return x
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+def init_opt_state(params: Params, cfg: TrainConfig) -> OptState:
+    zeros = jax.tree.map(
+        lambda p: _maybe_quant(jnp.zeros(p.shape, jnp.float32),
+                               cfg.opt_state_dtype), params)
+    zeros_v = jax.tree.map(
+        lambda p: _maybe_quant(jnp.zeros(p.shape, jnp.float32),
+                               cfg.opt_state_dtype, log_space=True), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros_v)
+
+
+def opt_state_specs(param_specs: Params, cfg: TrainConfig) -> OptState:
+    """Logical sharding specs matching init_opt_state's structure. Row-wise
+    payloads inherit the param's logical spec; scales drop the last axis."""
+    def leaf_m(spec):
+        t = tuple(spec)
+        if cfg.opt_state_dtype == "int8":
+            return QTensor(q=t, scale=t[:-1] + (None,))
+        return t
+
+    def leaf_v(spec):
+        t = tuple(spec)
+        if cfg.opt_state_dtype == "int8":
+            return QTensorLog(q=t, log_min=t[:-1] + (None,),
+                              log_scale=t[:-1] + (None,))
+        return t
+
+    is_t = lambda t: isinstance(t, tuple)
+    return OptState(
+        step=(),
+        m=jax.tree.map(leaf_m, param_specs, is_leaf=is_t),
+        v=jax.tree.map(leaf_v, param_specs, is_leaf=is_t),
+    )
+
+
+def lr_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads: Params, state: OptState, params: Params,
+                 cfg: TrainConfig) -> Tuple[Params, OptState, Dict[str, Any]]:
+    step = state.step + 1
+    lr = lr_schedule(cfg, state.step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _maybe_dequant(m)
+        v_f = _maybe_dequant(v)
+        m_n = b1 * m_f + (1 - b1) * g
+        v_n = b2 * v_f + (1 - b2) * g * g
+        update = (m_n / bc1) / (jnp.sqrt(v_n / bc2) + eps)
+        if p.dtype in (jnp.float32, jnp.bfloat16, jnp.float16):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return p_new, _maybe_quant(m_n, cfg.opt_state_dtype), \
+            _maybe_quant(v_n, cfg.opt_state_dtype, log_space=True)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    is_q = lambda x: isinstance(x, (QTensor, QTensorLog))
+    flat_m = jax.tree.leaves(state.m, is_leaf=is_q)
+    flat_v = jax.tree.leaves(state.v, is_leaf=is_q)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        pn, mn, vn = upd(p, g, m, v)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    params = jax.tree.unflatten(tdef, new_p)
+    m_tree = jax.tree.unflatten(tdef, new_m)
+    v_tree = jax.tree.unflatten(tdef, new_v)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return params, OptState(step, m_tree, v_tree), metrics
+
+
+def opt_state_bytes(params: Params, cfg: TrainConfig) -> int:
+    n = sum(int(jnp.size(l)) for l in jax.tree.leaves(params))
+    if cfg.opt_state_dtype == "int8":
+        # payloads (m int8 + v uint8) + row scales (1 + 2 fp32 per row)
+        rows = sum(int(jnp.size(l)) // max(l.shape[-1], 1)
+                   for l in jax.tree.leaves(params))
+        return 2 * n + 3 * rows * 4
+    return 2 * n * 4

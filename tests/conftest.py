@@ -1,0 +1,33 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600
+                      ) -> subprocess.CompletedProcess:
+    """Run `code` in a fresh python with N fake XLA host devices.
+
+    Multi-device behaviours (shard_map collectives, pipelines, meshes)
+    can't run in the main pytest process, which is pinned to 1 device.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.fixture
+def subproc():
+    return run_in_subprocess
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,79 @@
+"""Pallas flash/decode attention vs the pure-jnp oracle: shape/dtype sweeps
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+
+SHAPES = [
+    # (b, sq, hq, hkv, d)
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (2, 128, 4, 1, 128),    # MQA
+    (1, 512, 2, 2, 32),     # long-ish
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_oracle(shape, dtype, causal, rng):
+    b, sq, hq, hkv, d = shape
+    q = jnp.asarray(rng.standard_normal((b, sq, hq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, sq, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, sq, hkv, d)), dtype)
+    out_ref = ref.attention_ref(q, k, v, causal=causal)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(32, 64), (128, 32), (64, 128)])
+def test_flash_attention_block_shapes(block_q, block_k, rng):
+    b, sq, hq, hkv, d = 1, 256, 2, 1, 64
+    q = jnp.asarray(rng.standard_normal((b, sq, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, sq, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, sq, hkv, d)), jnp.float32)
+    out_ref = ref.attention_ref(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, block_q=block_q,
+                          block_k=block_k, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=2e-6, rtol=2e-6)
+
+
+@pytest.mark.parametrize("skv,hq,hkv,d", [
+    (256, 4, 4, 64), (512, 8, 2, 64), (256, 4, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_oracle(skv, hq, hkv, d, dtype, rng):
+    b = 3
+    q = jnp.asarray(rng.standard_normal((b, hq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, skv, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, skv, hkv, d)), dtype)
+    length = jnp.asarray(rng.integers(1, skv + 1, size=b), jnp.int32)
+    out_ref = ref.decode_attention_ref(q, k, v, length)
+    out = decode_attention(q, k, v, length, block_k=128, interpret=True)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_decode_attention_respects_length(rng):
+    """Entries beyond `length` must not influence the output."""
+    b, skv, hkv, hq, d = 2, 256, 2, 4, 64
+    q = jnp.asarray(rng.standard_normal((b, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, skv, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, skv, hkv, d)), jnp.float32)
+    length = jnp.array([100, 200], jnp.int32)
+    out1 = decode_attention(q, k, v, length, interpret=True)
+    k2 = k.at[:, 200:].set(999.0)
+    v2 = v.at[:, 200:].set(-999.0)
+    out2 = decode_attention(q, k2, v2, length, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))

@@ -1,0 +1,83 @@
+"""Optimizer: schedules, clipping, int8 state fidelity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.training.optimizer import (OptState, QTensor, QTensorLog,
+                                      adamw_update, global_norm,
+                                      init_opt_state, lr_schedule,
+                                      opt_state_bytes)
+
+
+def _params(rng, n=4):
+    ks = jax.random.split(jax.random.key(0), n)
+    return {f"w{i}": jax.random.normal(ks[i], (16, 32)) * 0.1
+            for i in range(n)}
+
+
+def test_lr_schedule_warmup_and_decay():
+    cfg = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9
+    assert lrs[99] < lrs[50] < lrs[10]
+    assert lrs[99] >= 0.1 * 1e-3 * 0.99  # cosine floor
+
+
+def test_grad_clip_applied():
+    cfg = TrainConfig(grad_clip=1.0, learning_rate=1.0, warmup_steps=0,
+                      total_steps=10)
+    params = {"w": jnp.zeros((4,))}
+    grads = {"w": jnp.full((4,), 100.0)}
+    state = init_opt_state(params, cfg)
+    new_params, _, metrics = adamw_update(grads, state, params, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+    # clipped update magnitude bounded by lr * O(1)
+    assert np.all(np.abs(np.asarray(new_params["w"])) < 10.0)
+
+
+def test_int8_state_tracks_fp32_trajectory():
+    rng = np.random.default_rng(0)
+    params32 = {"w": jnp.asarray(rng.standard_normal((32, 64)) * 0.1,
+                                 jnp.float32)}
+    params8 = jax.tree.map(lambda x: x, params32)
+    cfg32 = TrainConfig(learning_rate=1e-2, warmup_steps=0, total_steps=50,
+                        opt_state_dtype="fp32")
+    cfg8 = TrainConfig(learning_rate=1e-2, warmup_steps=0, total_steps=50,
+                       opt_state_dtype="int8")
+    s32 = init_opt_state(params32, cfg32)
+    s8 = init_opt_state(params8, cfg8)
+    assert isinstance(s8.m["w"], QTensor)
+    assert isinstance(s8.v["w"], QTensorLog)
+    for step in range(20):
+        g = {"w": jnp.asarray(rng.standard_normal((32, 64)) * 0.05,
+                              jnp.float32)}
+        params32, s32, _ = adamw_update(g, s32, params32, cfg32)
+        params8, s8, _ = adamw_update(g, s8, params8, cfg8)
+    diff = np.abs(np.asarray(params32["w"]) - np.asarray(params8["w"]))
+    scale = np.abs(np.asarray(params32["w"])).mean()
+    assert diff.mean() < 0.08 * scale, (diff.mean(), scale)
+
+
+def test_qtensor_log_relative_error_bounded():
+    rng = np.random.default_rng(1)
+    # second moments span many decades
+    v = jnp.asarray(10.0 ** rng.uniform(-12, 0, (8, 256)), jnp.float32)
+    from repro.training.optimizer import _quant_rowwise_log
+    q = _quant_rowwise_log(v)
+    back = np.asarray(q.dequant())
+    rel = np.abs(back - np.asarray(v)) / np.asarray(v)
+    assert rel.max() < 0.15  # bounded relative error even at 1e-12
+
+
+def test_opt_state_bytes_int8_smaller():
+    params = _params(jax.random.key(0))
+    big = opt_state_bytes(params, TrainConfig(opt_state_dtype="fp32"))
+    small = opt_state_bytes(params, TrainConfig(opt_state_dtype="int8"))
+    assert small < 0.4 * big
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.ones((4,)) * 2.0}
+    assert float(global_norm(t)) == pytest.approx(np.sqrt(3 + 16))

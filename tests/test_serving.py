@@ -1,0 +1,83 @@
+"""Serving engine + continuous batcher + quantized serving + autoscaler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, get_config, smoke_config
+from repro.core.cluster import tpu_v5e_pod
+from repro.core.scheduler import ScalePolicy
+from repro.models import model as lm
+from repro.serving.autoscaler import ServingAutoscaler
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.engine import (ServingEngine, dequantize_params,
+                                  quantize_params_int8)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = smoke_config(get_config("internlm2-1.8b")).replace(dtype="float32")
+    eng = ServingEngine(cfg, ServeConfig(max_seq_len=64))
+    eng.init_random(0)
+    return eng
+
+
+def test_generate_shapes(engine):
+    out = engine.generate(jnp.ones((2, 8), jnp.int32), 5)
+    assert out.shape == (2, 5)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_continuous_batcher_matches_generate(engine):
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, engine.cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(5)]
+    refs = [np.asarray(engine.generate(jnp.asarray(p[None]), 5))[0]
+            for p in prompts]
+    bat = ContinuousBatcher(engine, slots=2)
+    for p in prompts:
+        bat.submit(p, max_new_tokens=5)
+    tracked = list(bat.queue)
+    for _ in range(100):
+        if not bat.queue and all(a is None for a in bat.active):
+            break
+        bat.step()
+    for req, r in zip(tracked, refs):
+        assert req.generated[:5] == [int(t) for t in r[:5]], \
+            (req.generated, r)
+
+
+def test_int8_weight_serving_close_to_fp(engine):
+    cfg = engine.cfg
+    qp = quantize_params_int8(engine.params)
+    # quantized payloads present for big mats
+    leaves = jax.tree.leaves(qp, is_leaf=lambda l: isinstance(l, dict)
+                             and "__int8__" in l)
+    assert any(isinstance(l, dict) and "__int8__" in l for l in leaves)
+    dq = dequantize_params(qp)
+    lg_fp, _, _ = lm.forward(engine.params, cfg,
+                             {"tokens": jnp.ones((1, 8), jnp.int32)})
+    lg_q, _, _ = lm.forward(
+        jax.tree.map(lambda x: x.astype(jnp.float32), dq), cfg,
+        {"tokens": jnp.ones((1, 8), jnp.int32)})
+    # int8 weights: logits correlated with fp (loose check)
+    a = np.asarray(lg_fp, np.float32).ravel()
+    b = np.asarray(lg_q, np.float32).ravel()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.99
+
+
+def test_autoscaler_scales_and_accounts_energy():
+    sc = ServingAutoscaler(tpu_v5e_pod(16), unit_rate_rps=2.0,
+                           policy=ScalePolicy(min_units=1, cooldown_s=5.0),
+                           window_s=5.0)
+    t = 0.0
+    for step in range(60):
+        t = float(step)
+        n = 8 if 20 <= step < 40 else 1
+        sc.record_arrival(t, n)
+        sc.tick(t, served_this_tick=n)
+    rep = sc.report()
+    assert rep.scale_events >= 2          # up and back down
+    assert 1.0 < rep.mean_active < 16.0
+    assert rep.energy_j > 0

@@ -14,10 +14,22 @@ import numpy as np
 
 from benchmarks.common import emit, header, time_fn
 from repro.config import get_config
+from repro.core.cluster import (a100_server, edge_server_cpu,
+                                edge_server_gpu, soc_cluster)
 from repro.models import model as lm
 from repro.models.resnet import resnet_apply, resnet_init
 from repro.models.yolo import yolo_apply, yolo_init
+from repro.runtime import ClusterRuntime, DLServingWorkload, ScalePolicy
 from repro.workloads.dlserving import PAPER_CLAIMS, PAPER_POINTS, point
+
+# Platform name (ServingPoint) -> calibrated ClusterSpec for the runtime.
+_PLATFORM_SPECS = {
+    "soc-gpu": soc_cluster,
+    "soc-dsp": soc_cluster,
+    "intel-cpu": edge_server_cpu,
+    "a40": edge_server_gpu,
+    "a100": a100_server,
+}
 
 
 def _measure_host() -> None:
@@ -74,6 +86,22 @@ def run(measure: bool = True) -> None:
     emit("fig11b/r152_dsp_vs_intel", 0.0,
          f"ratio={r152_dsp.samples_per_joule/r152_intel.samples_per_joule:.1f}"
          f"x;paper={PAPER_CLAIMS['r152_dsp_vs_intel']}x")
+
+    header("fig11c: ClusterRuntime cross-check (resnet-50 @ 50% load)")
+    # Same serving points driven through the unified runtime loop: each
+    # platform serves half its peak rate for 10 min; TpE comes from the
+    # calibrated ClusterSpec power model with per-unit gating.
+    for platform in ("soc-gpu", "intel-cpu", "a40", "a100"):
+        spec = _PLATFORM_SPECS[platform]()
+        workload = DLServingWorkload.from_point("resnet-50", "fp32",
+                                                platform)
+        runtime = ClusterRuntime(spec, workload,
+                                 policy=ScalePolicy(cooldown_s=30.0))
+        trace = np.full(600, 0.5 * workload.unit_rate * spec.n_units)
+        tel = runtime.play_trace(trace, dt_s=1.0)
+        emit(f"fig11c/resnet-50_{platform}", 0.0,
+             f"tpe={tel.tpe:.3f};mean_active={tel.mean_active:.1f}"
+             f"/{spec.n_units};energy_j={tel.energy_j:.0f}")
 
 
 if __name__ == "__main__":

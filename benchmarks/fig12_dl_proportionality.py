@@ -1,13 +1,13 @@
 """Fig 12 — DL-serving energy efficiency under dynamic load: SoC Cluster
-(per-unit gating) vs A100 (monolithic), via the elastic scheduler."""
+(per-unit gating) vs A100 (monolithic), via the unified
+``ClusterRuntime`` request-lifecycle loop."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit, header
 from repro.core.cluster import a100_server, soc_cluster
-from repro.core.energy import cluster_power_at_load
-from repro.core.scheduler import ElasticScheduler, ScalePolicy
+from repro.runtime import ClusterRuntime, DLServingWorkload, ScalePolicy
 from repro.workloads.dlserving import PAPER_CLAIMS, point
 
 
@@ -44,16 +44,24 @@ def run() -> None:
          f"soc_vs_a100@5sps={ratios[5.0]:.2f}x;paper="
          f"{PAPER_CLAIMS['light_load_vs_a100']}x")
 
-    header("fig12: scheduler-driven (bursty trace)")
-    sched = ElasticScheduler(soc, unit_rate=1000.0 / r50_soc.latency_ms,
+    header("fig12: runtime-driven (bursty trace, gated concurrency)")
+    workload = DLServingWorkload.from_point("resnet-50", "fp32", "soc-gpu")
+    runtime = ClusterRuntime(soc, workload,
                              policy=ScalePolicy(cooldown_s=20.0))
     rng = np.random.default_rng(0)
     trace = np.abs(rng.normal(0.1, 0.08, 600)) * soc_rate
-    res = sched.simulate(trace, dt_s=1.0)
-    emit("fig12/scheduler_sim", 0.0,
+    res = runtime.play_trace(trace, dt_s=1.0)
+    emit("fig12/runtime_bursty", 0.0,
          f"served={res.served:.0f};tpe={res.tpe:.2f};"
-         f"mean_active={res.active_units.mean():.1f}/60;"
+         f"mean_active={res.mean_active:.1f}/60;"
          f"p99_latency_s={res.p99_latency_s:.2f}")
+    # static baseline: all units on, each at the trace's mean utilization
+    static_j = runtime.static_baseline_energy(
+        utilization=float(trace.mean()) / (workload.unit_rate
+                                           * soc.n_units))
+    emit("fig12/runtime_vs_static", 0.0,
+         f"elastic_j={res.energy_j:.0f};static_j={static_j:.0f};"
+         f"saving={1 - res.energy_j / static_j:.0%}")
 
 
 if __name__ == "__main__":

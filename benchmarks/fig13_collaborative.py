@@ -7,9 +7,38 @@ import subprocess
 import sys
 import os
 
+import numpy as np
+
 from benchmarks.common import emit, header
 from repro.core.collaborative import (PAPER_FIG13, RESNET50_PROFILE, SOC_TCP,
                                       TPU_ICI, latency_breakdown)
+from repro.core.cluster import soc_cluster
+from repro.runtime import ClusterRuntime, QueueWorkload, ScalePolicy
+
+
+def _runtime_section() -> None:
+    header("fig13: collaborative serving through ClusterRuntime")
+    # n SoCs collaborate per request (tensor parallel); a request takes
+    # total_ms on its group, so each *unit* contributes (1000/total)/n
+    # req/s. group_units=n makes the runtime activate whole collaboration
+    # groups only — no SoC is stranded in a partial group.
+    spec = soc_cluster()
+    for n in (1, 2, 5):
+        pipe = latency_breakdown(RESNET50_PROFILE, n, SOC_TCP,
+                                 pipelined=True)
+        unit_rate = 1000.0 / pipe["total_ms"] / n
+        workload = QueueWorkload(unit_rate=unit_rate,
+                                 name=f"collab-resnet50/n{n}",
+                                 kind="collaborative")
+        runtime = ClusterRuntime(spec, workload,
+                                 policy=ScalePolicy(cooldown_s=30.0,
+                                                    min_units=n),
+                                 group_units=n)
+        trace = np.full(300, 0.3 * unit_rate * spec.n_units)
+        tel = runtime.play_trace(trace, dt_s=1.0)
+        emit(f"fig13/runtime_n{n}", 0.0,
+             f"tpe={tel.tpe:.3f};mean_active={tel.mean_active:.1f}"
+             f"/{spec.n_units};p99_s={tel.p99_latency_s:.2f}")
 
 
 def run(executable: bool = True) -> None:
@@ -30,6 +59,8 @@ def run(executable: bool = True) -> None:
          f"comm_share@5={PAPER_FIG13['comm_share_at_5']}"
          f";pipelined={PAPER_FIG13['comm_share_at_5_pipelined']}"
          f";speedup@5={PAPER_FIG13['total_speedup_at_5']}")
+
+    _runtime_section()
 
     if executable:
         header("fig13: executable TP compute scaling (fake devices)")

@@ -1,16 +1,20 @@
 """Energy-proportional elastic serving demo (paper §5.2 / Fig 5+12).
 
 A diurnal request trace (25x peak/trough, like the paper's deployed-server
-trace) drives the elastic scheduler on the SoC-Cluster power model and on
-a monolithic-GPU model; prints energy + TpE for gated vs static serving.
+trace) drives the unified :class:`repro.runtime.ClusterRuntime` loop on
+the SoC-Cluster power model and on the TPU-pod mapping: arrivals are
+recorded, the activation target is computed, the workload's concurrency
+is *actually gated* to it, and energy is integrated per tick. Prints
+energy + TpE for gated vs static all-units-on serving.
 
     PYTHONPATH=src python examples/elastic_serving.py
 """
 import numpy as np
 
-from repro.core.cluster import a100_server, soc_cluster, tpu_v5e_pod
-from repro.core.energy import account_trace, proportionality_index
-from repro.core.scheduler import ElasticScheduler, ScalePolicy, diurnal_trace
+from repro.core.cluster import soc_cluster, tpu_v5e_pod
+from repro.core.energy import proportionality_index
+from repro.core.scheduler import diurnal_trace
+from repro.runtime import ClusterRuntime, DLServingWorkload, ScalePolicy
 
 
 def main() -> None:
@@ -21,24 +25,25 @@ def main() -> None:
         unit_rate = 10.0  # req/s per unit
         trace = diurnal_trace(peak_rps=unit_rate * spec.n_units * 0.8,
                               hours=24, dt_s=60.0)
-        sched = ElasticScheduler(spec, unit_rate,
-                                 policy=ScalePolicy(cooldown_s=120.0,
-                                                    hedge_after_s=1.0))
-        res = sched.simulate(trace, dt_s=60.0)
-        static_power = spec.power(spec.n_units, trace.mean()
-                                  / (unit_rate * spec.n_units))
-        static_energy = static_power * len(trace) * 60.0
+        workload = DLServingWorkload(unit_rate=unit_rate,
+                                     model="resnet-50", platform=spec.name)
+        runtime = ClusterRuntime(spec, workload,
+                                 policy=ScalePolicy(cooldown_s=120.0))
+        tel = runtime.play_trace(trace, dt_s=60.0)
+        static_energy = runtime.static_baseline_energy(
+            utilization=float(trace.mean()) / (unit_rate * spec.n_units))
         print(f"offered: mean {trace.mean():.0f} rps, "
               f"peak {trace.max():.0f} rps (x"
               f"{trace.max()/max(trace.min(),1e-9):.0f} swing)")
-        print(f"elastic: served {res.served:.0f} reqs, "
-              f"energy {res.energy_j/3.6e6:.2f} kWh, "
-              f"TpE {res.tpe:.2f} req/J, "
-              f"mean active {res.active_units.mean():.1f}/{spec.n_units}, "
-              f"hedged {res.hedged}, p99 {res.p99_latency_s:.2f}s")
+        print(f"elastic: served {tel.served:.0f} reqs, "
+              f"energy {tel.energy_j/3.6e6:.2f} kWh, "
+              f"TpE {tel.tpe:.2f} req/J, "
+              f"mean active {tel.mean_active:.1f}/{spec.n_units}, "
+              f"scale events {tel.scale_events}, "
+              f"p99 {tel.p99_latency_s:.1f}s")
         print(f"static (all units on): {static_energy/3.6e6:.2f} kWh -> "
               f"elastic saves "
-              f"{(1 - res.energy_j/static_energy):.0%} energy")
+              f"{(1 - tel.energy_j/static_energy):.0%} energy")
 
 
 if __name__ == "__main__":

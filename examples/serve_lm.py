@@ -1,6 +1,6 @@
-"""Serve a small model with continuously-batched requests (slot-based),
-with int8 weight-only quantization optionally enabled (the paper's
-DSP-style serving mode).
+"""Serve a small model with continuously-batched requests through the
+unified :class:`repro.runtime.ClusterRuntime` API, with int8 weight-only
+quantization optionally enabled (the paper's DSP-style serving mode).
 
     PYTHONPATH=src python examples/serve_lm.py --arch granite-moe-1b-a400m
 """
@@ -10,7 +10,8 @@ import time
 import numpy as np
 
 from repro.config import ServeConfig, get_config, smoke_config
-from repro.serving.batcher import ContinuousBatcher
+from repro.core.cluster import tpu_v5e_pod
+from repro.runtime import ClusterRuntime, LMServingWorkload, ScalePolicy
 from repro.serving.engine import ServingEngine
 
 
@@ -27,30 +28,30 @@ def main() -> None:
     engine = ServingEngine(
         cfg, ServeConfig(max_seq_len=64, quantize_weights=args.int8))
     engine.init_random(0)
-    bat = ContinuousBatcher(engine, slots=args.slots)
+    workload = LMServingWorkload(engine, slots=args.slots,
+                                 max_new_tokens=args.max_new_tokens)
+    # one engine tick ≙ one decode step; a "unit" sustains ~0.25 req/s at
+    # smoke scale, so a burst of submissions activates all slots
+    runtime = ClusterRuntime(tpu_v5e_pod(args.slots), workload,
+                             policy=ScalePolicy(min_units=1),
+                             unit_rate=0.25)
 
     rng = np.random.default_rng(0)
-    reqs = []
-    for i in range(args.requests):
+    for _ in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
-        bat.submit(prompt, max_new_tokens=args.max_new_tokens)
-    reqs = list(bat.queue)
+        runtime.submit(prompt)
 
     t0 = time.monotonic()
-    ticks = 0
-    while bat.queue or any(a is not None for a in bat.active):
-        bat.step()
-        ticks += 1
-        if ticks > 10000:
-            break
+    tel = runtime.run(max_ticks=10000)
     dt = time.monotonic() - t0
-    total_tokens = sum(len(r.generated) for r in reqs)
+    total_tokens = sum(len(r.output) for r in tel.responses)
     print(f"{args.requests} requests x {args.max_new_tokens} tokens on "
           f"{args.slots} slots ({'int8' if args.int8 else 'bf16'} weights)")
     print(f"{total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s, {ticks} engine ticks)")
-    for r in reqs[:3]:
-        print(f"  req {r.rid}: {r.generated}")
+          f"({total_tokens/dt:.1f} tok/s, {tel.ticks} engine ticks, "
+          f"mean active units {tel.mean_active:.1f})")
+    for r in tel.responses[:3]:
+        print(f"  req {r.rid}: {r.output}")
 
 
 if __name__ == "__main__":

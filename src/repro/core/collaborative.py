@@ -28,6 +28,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.collectives import naive_ag_matmul, ring_ag_matmul
+from repro.distributed.compat import shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -155,7 +156,7 @@ def make_tp_block(mesh: Mesh, d_model: int, d_hidden: int,
         return jax.lax.dynamic_slice_in_dim(y, i * nl, nl, 1
                                             ).astype(x_local.dtype)
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         block, mesh=mesh,
         in_specs=(P(None, axis), P(None, axis), P(axis, None)),
         out_specs=P(None, axis)))

@@ -12,43 +12,26 @@ autoscaler consumes:
   * straggler hedging: requests stuck past a latency deadline are
     re-dispatched to a second unit (first completion wins) — the
     cross-unit analogue of backup tasks.
+
+This is the *model-level* simulator. The canonical executable loop —
+where the activation target actually gates workload concurrency — is
+:class:`repro.runtime.ClusterRuntime`; both report the unified
+:class:`repro.runtime.Telemetry` (``SimResult`` is a deprecated alias).
 """
 from __future__ import annotations
 
-import heapq
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.cluster import ClusterSpec
+# Deprecation shims: ScalePolicy now lives in repro.runtime.policy and the
+# result struct is the unified repro.runtime.Telemetry; both are
+# re-exported here so existing imports keep working.
+from repro.runtime.policy import ScalePolicy
+from repro.runtime.result import Telemetry
 
-
-@dataclass
-class ScalePolicy:
-    headroom: float = 1.25            # target capacity / offered load
-    cooldown_s: float = 30.0          # scale-down hysteresis
-    min_units: int = 1
-    wake_latency_s: float = 0.5       # unit power-on latency
-    hedge_after_s: Optional[float] = None  # straggler hedging deadline
-
-
-@dataclass
-class SimResult:
-    time_s: np.ndarray
-    offered_load: np.ndarray          # requests/s
-    active_units: np.ndarray
-    power_w: np.ndarray
-    served: float
-    dropped: float
-    hedged: int
-    p50_latency_s: float
-    p99_latency_s: float
-    energy_j: float
-
-    @property
-    def tpe(self) -> float:
-        return self.served / max(self.energy_j, 1e-9)
+SimResult = Telemetry
 
 
 class ElasticScheduler:
@@ -85,6 +68,7 @@ class ElasticScheduler:
         t_arr = np.arange(n_steps) * dt_s
         act_arr = np.zeros(n_steps)
         pow_arr = np.zeros(n_steps)
+        util_arr = np.zeros(n_steps)
 
         for i, offered in enumerate(load_trace):
             t = i * dt_s
@@ -131,13 +115,15 @@ class ElasticScheduler:
             pow_arr[i] = self.spec.power(act_for_power, util_for_power,
                                          idle_units_off=True)
             act_arr[i] = active
+            util_arr[i] = util_for_power
 
         lat_a = np.array(latencies)
-        return SimResult(
+        return Telemetry(
             time_s=t_arr,
             offered_load=np.asarray(load_trace, float),
             active_units=act_arr,
             power_w=pow_arr,
+            utilization=util_arr,
             served=served,
             dropped=dropped,
             hedged=hedged,

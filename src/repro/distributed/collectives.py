@@ -17,6 +17,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.distributed.compat import pvary, shard_map
 
 
 def _axis_size(axis_name: str) -> int:
@@ -26,10 +27,8 @@ def _axis_size(axis_name: str) -> int:
 def _pvary(x: jax.Array, axis_name: str) -> jax.Array:
     """Mark a replicated value as device-varying over `axis_name` (required
     for carries that mix with ppermute'd values under shard_map's vma type
-    system)."""
-    if hasattr(jax.lax, "pvary"):
-        return jax.lax.pvary(x, (axis_name,))
-    return jax.lax.pcast(x, (axis_name,), to="varying")  # pragma: no cover
+    system; identity on pre-vma jax)."""
+    return pvary(x, (axis_name,))
 
 
 def _ring_perm(a: int) -> Sequence[tuple]:
@@ -131,7 +130,7 @@ def naive_matmul_rs(x_local: jax.Array, w_local: jax.Array,
 def tp_matmul_overlapped(x: jax.Array, w: jax.Array, mesh: Mesh,
                          axis: str = "model") -> jax.Array:
     """y = x @ w with x k-sharded and w n-sharded on `axis`, overlapped."""
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(ring_ag_matmul, axis_name=axis),
         mesh=mesh,
         in_specs=(P(None, axis), P(None, axis)),

@@ -1,0 +1,31 @@
+"""Version compatibility helpers for the distributed layer.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax.shard_map`` around jax 0.6; import it from here so the repo runs on
+both spellings.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pre-0.6 jax
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def pvary(x: jax.Array, axis_names) -> jax.Array:
+    """Mark a replicated value as device-varying over ``axis_names``.
+
+    Required for carries that mix with ppermute'd values under the vma
+    (varying-manual-axes) type system of newer shard_map; older jax has
+    no vma typing, so the identity is correct there.
+    """
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, tuple(axis_names))
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, tuple(axis_names), to="varying")
+    return x
+
+
+__all__ = ["shard_map", "pvary"]

@@ -18,6 +18,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.distributed.compat import pvary, shard_map
 
 Params = Any
 
@@ -41,9 +42,7 @@ def pipeline_forward(stage_fn: Callable[[Params, jax.Array], jax.Array],
     ticks = m + n_stage - 1
 
     def _pvary(v):
-        if hasattr(jax.lax, "pvary"):
-            return jax.lax.pvary(v, (axis_name,))
-        return jax.lax.pcast(v, (axis_name,), to="varying")  # pragma: no cover
+        return pvary(v, (axis_name,))
 
     state = _pvary(jnp.zeros_like(x_mb[0]))
     outputs = _pvary(jnp.zeros_like(x_mb))
@@ -89,7 +88,7 @@ def make_pipelined_fn(stage_fn: Callable, mesh: Mesh, n_stages: int,
     (M, mb, ...) microbatches.
     """
     def run(stacked_params, x_mb):
-        fn = jax.shard_map(
+        fn = shard_map(
             functools.partial(pipeline_forward, stage_fn,
                               axis_name=axis_name),
             mesh=mesh,
@@ -104,7 +103,7 @@ def make_pipelined_fn(stage_fn: Callable, mesh: Mesh, n_stages: int,
         def stage_body(params_slice, x):
             p = jax.tree.map(lambda a: a[0], params_slice)
             return stage_fn(p, x)
-        fn = jax.shard_map(
+        fn = shard_map(
             functools.partial(pipeline_forward, stage_body,
                               axis_name=axis_name),
             mesh=mesh,

@@ -1,19 +1,17 @@
-"""Serving launcher: continuous-batched generation at smoke scale, with the
-energy-proportional autoscaler accounting for the run."""
+"""Serving launcher: continuous-batched generation at smoke scale, run
+through the :class:`~repro.runtime.ClusterRuntime` request-lifecycle API
+(activation gating + energy accounting, paper §5.2)."""
 from __future__ import annotations
 
 import argparse
 import json
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ServeConfig, get_config, smoke_config
 from repro.core.cluster import tpu_v5e_pod
-from repro.core.scheduler import ScalePolicy
-from repro.serving.autoscaler import ServingAutoscaler
-from repro.serving.batcher import ContinuousBatcher
+from repro.runtime import ClusterRuntime, LMServingWorkload, ScalePolicy
 from repro.serving.engine import ServingEngine
 
 
@@ -35,40 +33,40 @@ def main() -> None:
                        quantize_weights=args.int8_weights)
     engine = ServingEngine(cfg, scfg)
     engine.init_random(0)
-    bat = ContinuousBatcher(engine, slots=args.slots)
-    scaler = ServingAutoscaler(tpu_v5e_pod(8), unit_rate_rps=4.0,
-                               policy=ScalePolicy(min_units=1))
+    workload = LMServingWorkload(engine, slots=args.slots,
+                                 max_new_tokens=args.max_new_tokens)
+    # a "unit" sustains ~0.25 req/s at smoke scale: a burst of submissions
+    # scales slots up, and the window decay scales them back down
+    runtime = ClusterRuntime(tpu_v5e_pod(8), workload,
+                             policy=ScalePolicy(min_units=1),
+                             unit_rate=0.25)
 
     rng = np.random.default_rng(0)
     t0 = time.monotonic()
-    reqs = []
-    for i in range(args.requests):
+    for _ in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size,
                               size=args.prompt_len).astype(np.int32)
-        scaler.record_arrival(time.monotonic() - t0)
-        bat.submit(prompt, max_new_tokens=args.max_new_tokens)
-    reqs = list(bat.queue)
-    ticks = 0
-    while (bat.queue or any(a is not None for a in bat.active)) \
-            and ticks < 10000:
-        served = bat.step()
-        scaler.tick(time.monotonic() - t0, served)
-        ticks += 1
+        runtime.submit(prompt)
+    tel = runtime.run(max_ticks=10000)
     dt = time.monotonic() - t0
-    rep = scaler.report()
+    tokens = sum(len(r.output) for r in tel.responses)
     print(json.dumps({
         "arch": args.arch,
         "requests": args.requests,
-        "ticks": ticks,
+        "served": tel.served,
+        "ticks": tel.ticks,
         "wall_s": dt,
-        "tokens_generated": sum(len(r.generated) for r in reqs),
-        "tokens_per_s": sum(len(r.generated) for r in reqs) / dt,
-        "autoscaler": {
-            "mean_active_units": rep.mean_active,
-            "energy_j_modeled": rep.energy_j,
-            "scale_events": rep.scale_events,
+        "tokens_generated": tokens,
+        "tokens_per_s": tokens / dt,
+        "telemetry": {
+            "mean_active_units": tel.mean_active,
+            "energy_j_modeled": tel.energy_j,
+            "tpe": tel.tpe,
+            "scale_events": tel.scale_events,
+            "p99_latency_ticks": tel.p99_latency_s,
         },
-        "sample_output": [int(t) for t in reqs[0].generated[:8]],
+        "sample_output": [int(t) for t in tel.responses[0].output[:8]]
+        if tel.responses else [],
     }, indent=1))
 
 

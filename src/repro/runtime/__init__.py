@@ -1,0 +1,31 @@
+"""Unified request-lifecycle runtime (paper §5.2, Fig 11/12).
+
+The one serving surface for the SoC-Cluster reproduction:
+
+  * :class:`Request` / :class:`Response` / :class:`StepStats` /
+    :class:`Telemetry` — the shared result model (also aliased by the
+    deprecated ``core.scheduler.SimResult`` and
+    ``serving.autoscaler.AutoscalerReport``);
+  * :class:`Workload` protocol with adapters :class:`LMServingWorkload`
+    (live engine + continuous batcher), :class:`DLServingWorkload`
+    (Fig 11/12 measured serving points), and
+    :class:`TranscodingWorkload` (§4 / Table 3 stream counts);
+  * :class:`ClusterRuntime` — binds ``ClusterSpec`` + ``ScalePolicy`` +
+    ``Workload`` and runs the canonical loop, with the activation target
+    *actually gating* workload concurrency.
+"""
+from repro.runtime.cluster_runtime import ClusterRuntime, UnitGovernor
+from repro.runtime.policy import ScalePolicy
+from repro.runtime.result import (Request, Response, StepStats, Telemetry,
+                                  latency_percentiles)
+from repro.runtime.workload import (DLServingWorkload, LMServingWorkload,
+                                    QueueWorkload, TranscodingWorkload,
+                                    Workload)
+
+__all__ = [
+    "ClusterRuntime", "UnitGovernor", "ScalePolicy",
+    "Request", "Response", "StepStats", "Telemetry",
+    "latency_percentiles",
+    "Workload", "QueueWorkload", "DLServingWorkload", "LMServingWorkload",
+    "TranscodingWorkload",
+]

@@ -1,0 +1,22 @@
+"""Unit-activation policy (paper §5.2): how a cluster of small units
+tracks offered load. Canonical home of :class:`ScalePolicy`, which is
+bound into :class:`~repro.runtime.ClusterRuntime` alongside a
+``ClusterSpec`` and a ``Workload`` (``core.scheduler`` re-exports it for
+backward compatibility).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass
+class ScalePolicy:
+    headroom: float = 1.25            # target capacity / offered load
+    cooldown_s: float = 30.0          # scale-down hysteresis
+    min_units: int = 1
+    wake_latency_s: float = 0.5       # unit power-on latency
+    # Straggler hedging deadline. Honored only by the model-level
+    # ``core.scheduler.ElasticScheduler`` simulation; the live
+    # ``ClusterRuntime`` path warns and ignores it (not implemented yet).
+    hedge_after_s: Optional[float] = None

@@ -1,0 +1,289 @@
+"""The ``Workload`` protocol and its adapters.
+
+A workload is anything that accepts requests and makes progress when the
+cluster grants it active units. The runtime drives every workload through
+the same four calls:
+
+  * ``submit(request) -> rid``   — enqueue work;
+  * ``step(n_active_units, dt_s, t) -> StepStats`` — advance one tick
+    using *at most* the granted concurrency (this is where the activation
+    target actually gates execution);
+  * ``drain() -> [Response]``    — pop completed responses;
+  * ``describe() -> dict``       — static metadata (name, unit_rate, ...).
+
+Adapters:
+
+  * :class:`LMServingWorkload` — the live continuous-batching LM engine
+    (``ServingEngine`` + ``ContinuousBatcher``); active units map to
+    decode slots, so gating really limits concurrency.
+  * :class:`DLServingWorkload` — DL inference serving from the paper's
+    measured per-SoC rates (Fig 11/12, Table 7), as a fluid queue.
+  * :class:`TranscodingWorkload` — live video transcoding from the
+    paper's Table 3 per-SoC stream counts (§4), as a fluid queue.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
+
+from repro.runtime.result import Request, Response, StepStats
+
+
+@runtime_checkable
+class Workload(Protocol):
+    """Structural protocol every runtime workload satisfies."""
+
+    def submit(self, request: Request) -> int:
+        ...
+
+    def step(self, n_active_units: int, dt_s: float = 1.0,
+             t: float = 0.0) -> StepStats:
+        ...
+
+    def drain(self) -> List[Response]:
+        ...
+
+    def describe(self) -> Dict[str, Any]:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# Fluid-queue workloads (model-driven: DL serving points, transcoding).
+# ---------------------------------------------------------------------------
+class QueueWorkload:
+    """FIFO fluid queue: each active unit processes ``unit_rate`` cost
+    units per second. Requests may carry fractional/aggregated cost (e.g.
+    one request per trace tick with ``cost = rate * dt``), in which case
+    ``work_done`` counts request-equivalents rather than completions.
+    """
+
+    def __init__(self, unit_rate: float, name: str = "queue",
+                 kind: str = "fluid"):
+        assert unit_rate > 0, "unit_rate must be positive"
+        self.unit_rate = unit_rate
+        self.name = name
+        self.kind = kind
+        self._rid = itertools.count()
+        self._queue: List[List[Any]] = []   # [request, remaining_cost]
+        self._completed: List[Response] = []
+
+    # -- protocol ----------------------------------------------------------
+    def submit(self, request: Request) -> int:
+        rid = next(self._rid)
+        request.rid = rid
+        if request.arrival_s is None:
+            request.arrival_s = 0.0
+        self._queue.append([request, float(request.cost)])
+        return rid
+
+    def step(self, n_active_units: int, dt_s: float = 1.0,
+             t: float = 0.0) -> StepStats:
+        capacity = max(0, n_active_units) * self.unit_rate * dt_s
+        used = 0.0
+        responses: List[Response] = []
+        touched = 0
+        while self._queue and used < capacity:
+            req, remaining = self._queue[0]
+            take = min(remaining, capacity - used)
+            used += take
+            touched += 1
+            if take >= remaining - 1e-12:
+                self._queue.pop(0)
+                # finish inside the tick, at the fluid completion instant
+                # (floored at one service time past arrival — latency for
+                # fluid workloads has tick resolution, no better)
+                frac = used / capacity if capacity > 0 else 1.0
+                responses.append(Response(
+                    rid=req.rid, arrival_s=req.arrival_s,
+                    finish_s=max(t + frac * dt_s,
+                                 req.arrival_s + 1.0 / self.unit_rate),
+                    output=req.payload))
+            else:
+                self._queue[0][1] = remaining - take
+                break
+        self._completed.extend(responses)
+        return StepStats(
+            t=t, dt_s=dt_s,
+            concurrency=touched,
+            admitted=0,
+            completed=len(responses),
+            queued=len(self._queue),
+            work_done=used,
+            utilization=used / capacity if capacity > 0 else 0.0,
+            responses=responses,
+        )
+
+    def drain(self) -> List[Response]:
+        out, self._completed = self._completed, []
+        return out
+
+    def describe(self) -> Dict[str, Any]:
+        return {"name": self.name, "kind": self.kind,
+                "unit_rate": self.unit_rate}
+
+    # -- helpers -----------------------------------------------------------
+    @property
+    def pending_cost(self) -> float:
+        return sum(rem for _, rem in self._queue)
+
+    def idle(self) -> bool:
+        return not self._queue
+
+
+class DLServingWorkload(QueueWorkload):
+    """DL inference serving (paper §5, Fig 11/12): each active unit serves
+    ``unit_rate`` samples/s, taken from a measured
+    :class:`~repro.workloads.dlserving.ServingPoint` or given directly.
+    Request cost is a sample count.
+    """
+
+    def __init__(self, unit_rate: float, model: str = "custom",
+                 precision: str = "fp32", platform: str = "custom",
+                 unit_power_w: Optional[float] = None):
+        super().__init__(unit_rate, name=f"dlserving/{model}",
+                         kind="dl-serving")
+        self.model = model
+        self.precision = precision
+        self.platform = platform
+        self.unit_power_w = unit_power_w
+
+    @classmethod
+    def from_point(cls, model: str, precision: str, platform: str
+                   ) -> "DLServingWorkload":
+        from repro.workloads.dlserving import point
+        p = point(model, precision, platform)
+        if p is None:
+            raise KeyError(f"no serving point for "
+                           f"({model}, {precision}, {platform})")
+        return cls(unit_rate=1000.0 / p.latency_ms * p.batch, model=model,
+                   precision=precision, platform=platform,
+                   unit_power_w=p.unit_power_w)
+
+    def describe(self) -> Dict[str, Any]:
+        d = super().describe()
+        d.update(model=self.model, precision=self.precision,
+                 platform=self.platform, unit_power_w=self.unit_power_w)
+        return d
+
+
+class TranscodingWorkload(QueueWorkload):
+    """Live video transcoding (paper §4, Table 3): each active SoC
+    sustains ``streams_per_unit`` simultaneous live streams, i.e. it
+    produces ``streams_per_unit`` stream-seconds of output per second.
+    Request cost is stream-seconds (``streams * duration_s``).
+    """
+
+    def __init__(self, video: Any = None, hw_codec: bool = False,
+                 streams_per_unit: Optional[float] = None):
+        if streams_per_unit is None:
+            assert video is not None, "need a Video or streams_per_unit"
+            streams_per_unit = (video.soc_hw_streams if hw_codec
+                                else video.soc_cpu_streams)
+        vid = getattr(video, "vid", "custom")
+        super().__init__(float(streams_per_unit),
+                         name=f"transcoding/{vid}", kind="transcoding")
+        self.video = video
+        self.hw_codec = hw_codec
+
+    def submit_stream(self, duration_s: float, streams: int = 1,
+                      arrival_s: float = 0.0) -> int:
+        """Convenience: enqueue a live stream of ``duration_s`` seconds."""
+        return self.submit(Request(payload=self.video,
+                                   cost=float(streams) * duration_s,
+                                   arrival_s=arrival_s))
+
+    def describe(self) -> Dict[str, Any]:
+        d = super().describe()
+        d.update(video=getattr(self.video, "vid", None),
+                 hw_codec=self.hw_codec)
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Live LM serving (engine + continuous batcher).
+# ---------------------------------------------------------------------------
+class LMServingWorkload:
+    """Continuous-batched LM generation behind the workload protocol.
+
+    Active units map to decode slots (``slots_per_unit`` each): the
+    runtime's activation target becomes a hard cap on how many slots the
+    batcher may fill, so scaling down genuinely reduces concurrency
+    instead of being accounting-only (the seed repo's dead-code path).
+    """
+
+    def __init__(self, engine: Any, slots: int, slots_per_unit: int = 1,
+                 max_new_tokens: int = 16):
+        from repro.serving.batcher import ContinuousBatcher
+        self.engine = engine
+        self.batcher = ContinuousBatcher(engine, slots=slots)
+        self.slots_per_unit = max(1, int(slots_per_unit))
+        self.max_new_tokens = max_new_tokens
+        self._requests: Dict[int, Request] = {}
+        self._completed: List[Response] = []
+        self._fin_cursor = 0
+
+    # -- protocol ----------------------------------------------------------
+    def submit(self, request: Request) -> int:
+        mnt = int(request.meta.get("max_new_tokens", self.max_new_tokens))
+        rid = self.batcher.submit(request.payload, max_new_tokens=mnt)
+        request.rid = rid
+        if request.arrival_s is None:
+            request.arrival_s = 0.0
+        self._requests[rid] = request
+        return rid
+
+    def step(self, n_active_units: int, dt_s: float = 1.0,
+             t: float = 0.0) -> StepStats:
+        cap = min(self.batcher.slots,
+                  max(0, n_active_units) * self.slots_per_unit)
+        queued_before = len(self.batcher.queue)
+        live = self.batcher.step(max_slots=cap)
+        admitted = queued_before - len(self.batcher.queue)
+        # in-flight requests keep their slots through a scale-down, so the
+        # occupied-unit count can transiently exceed the granted target
+        units_used = -(-live // self.slots_per_unit)  # ceil
+        powered = max(max(0, n_active_units), units_used)
+        responses: List[Response] = []
+        new_finished = self.batcher.finished[self._fin_cursor:]
+        self._fin_cursor = len(self.batcher.finished)
+        for breq in new_finished:
+            req = self._requests.pop(breq.rid,
+                                     Request(arrival_s=t, rid=breq.rid))
+            responses.append(Response(
+                rid=breq.rid, arrival_s=req.arrival_s, finish_s=t + dt_s,
+                output=list(breq.generated)))
+        self._completed.extend(responses)
+        return StepStats(
+            t=t, dt_s=dt_s,
+            concurrency=live,
+            admitted=admitted,
+            completed=len(responses),
+            queued=len(self.batcher.queue),
+            work_done=float(len(responses)),
+            utilization=live / (powered * self.slots_per_unit)
+            if powered > 0 else 0.0,
+            units_used=units_used,
+            responses=responses,
+        )
+
+    def drain(self) -> List[Response]:
+        out, self._completed = self._completed, []
+        return out
+
+    def describe(self) -> Dict[str, Any]:
+        return {"name": f"lm-serving/{self.engine.cfg.name}",
+                "kind": "lm-serving",
+                "slots": self.batcher.slots,
+                "slots_per_unit": self.slots_per_unit,
+                "arch": self.engine.cfg.name,
+                "quantized": self.engine.scfg.quantize_weights}
+
+    # -- helpers -----------------------------------------------------------
+    def idle(self) -> bool:
+        return (not self.batcher.queue
+                and all(a is None for a in self.batcher.active))
+
+    @property
+    def tokens_generated(self) -> int:
+        return sum(len(r.generated) for r in self.batcher.finished) + sum(
+            len(r.generated) for r in self.batcher.active if r is not None)

@@ -1,90 +1,68 @@
-"""Energy-proportional serving autoscaler (paper §5.2 / Fig 12 as a policy).
+"""DEPRECATED shim — energy-proportional serving autoscaler.
 
-Wraps ``core.scheduler.ElasticScheduler``'s policy for the serving engine:
-arrivals are recorded, the offered rate is estimated over a sliding window,
-and the pod's data-parallel replicas (mesh slices ≙ SoCs) are activated or
-gated to track the load. Energy is accounted through the cluster spec so
-benchmarks can report TpE under dynamic load.
+The autoscaler's policy/accounting now lives in
+:class:`repro.runtime.UnitGovernor`, and the canonical serving loop —
+where the activation target actually gates batcher slots — is
+:class:`repro.runtime.ClusterRuntime` (paper §5.2 / Fig 12). This module
+keeps the old ``ServingAutoscaler`` surface working on top of the
+governor; ``AutoscalerReport`` is an alias of the unified
+:class:`repro.runtime.Telemetry`.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from typing import List, Optional
-
-import numpy as np
+import warnings
+from typing import Optional
 
 from repro.core.cluster import ClusterSpec
-from repro.core.scheduler import ScalePolicy
+from repro.runtime.cluster_runtime import UnitGovernor
+from repro.runtime.policy import ScalePolicy
+from repro.runtime.result import Telemetry
 
-
-@dataclass
-class AutoscalerReport:
-    ticks: int
-    mean_active: float
-    energy_j: float
-    served: int
-    tpe: float
-    scale_events: int
+AutoscalerReport = Telemetry
 
 
 class ServingAutoscaler:
+    """Deprecated: use ``ClusterRuntime`` (or ``UnitGovernor`` directly).
+
+    Thin adapter that preserves the seed API: ``record_arrival(t, n)``,
+    ``tick(t, served_this_tick, dt_s) -> active_units``, and
+    ``report() -> AutoscalerReport`` (now a ``Telemetry``).
+    """
+
     def __init__(self, spec: ClusterSpec, unit_rate_rps: float,
                  policy: Optional[ScalePolicy] = None,
                  window_s: float = 10.0):
+        warnings.warn(
+            "ServingAutoscaler is deprecated; use "
+            "repro.runtime.ClusterRuntime (gates concurrency for real) "
+            "or repro.runtime.UnitGovernor (policy + accounting only)",
+            DeprecationWarning, stacklevel=2)
         self.spec = spec
         self.unit_rate = unit_rate_rps
-        self.policy = policy or ScalePolicy()
-        self.window_s = window_s
-        self.arrivals: List[float] = []
-        self.active_units = self.policy.min_units
-        self._last_downscale = -1e9
-        self._energy = 0.0
-        self._served = 0
-        self._ticks = 0
-        self._active_hist: List[int] = []
-        self._scale_events = 0
+        self.governor = UnitGovernor(spec, unit_rate_rps, policy,
+                                     window_s=window_s)
+        self.policy = self.governor.policy
+
+    # -- seed API ----------------------------------------------------------
+    @property
+    def active_units(self) -> int:
+        return self.governor.active_units
 
     def record_arrival(self, t: float, n: int = 1) -> None:
-        self.arrivals.extend([t] * n)
+        self.governor.record_arrival(t, n)
 
     def offered_rate(self, t: float) -> float:
-        cutoff = t - self.window_s
-        self.arrivals = [a for a in self.arrivals if a >= cutoff]
-        return len(self.arrivals) / self.window_s
+        return self.governor.offered_rate(t)
 
     def tick(self, t: float, served_this_tick: int, dt_s: float = 1.0
              ) -> int:
         """Update the activation target; charge energy. Returns the number
         of active replicas to use for the next tick."""
-        rate = self.offered_rate(t)
-        need = rate * self.policy.headroom / self.unit_rate
-        tgt = int(min(self.spec.n_units,
-                      max(self.policy.min_units, np.ceil(need))))
-        if tgt > self.active_units:
-            self.active_units = tgt
-            self._scale_events += 1
-        elif tgt < self.active_units and \
-                t - self._last_downscale > self.policy.cooldown_s:
-            self.active_units = tgt
-            self._last_downscale = t
-            self._scale_events += 1
-        util = min(1.0, rate / max(self.active_units * self.unit_rate,
-                                   1e-9))
-        self._energy += self.spec.power(self.active_units, util,
-                                        idle_units_off=True) * dt_s
-        self._served += served_this_tick
-        self._ticks += 1
-        self._active_hist.append(self.active_units)
-        return self.active_units
+        active = self.governor.update(t, dt_s)
+        rate = self.governor.offered_rate(t)
+        util = min(1.0, rate / max(active * self.unit_rate, 1e-9))
+        self.governor.charge(t, util, dt_s, served=served_this_tick)
+        return active
 
-    def report(self) -> AutoscalerReport:
-        return AutoscalerReport(
-            ticks=self._ticks,
-            mean_active=float(np.mean(self._active_hist))
-            if self._active_hist else 0.0,
-            energy_j=self._energy,
-            served=self._served,
-            tpe=self._served / max(self._energy, 1e-9),
-            scale_events=self._scale_events,
-        )
+    def report(self) -> Telemetry:
+        return self.governor.telemetry()

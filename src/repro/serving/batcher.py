@@ -36,6 +36,7 @@ class ContinuousBatcher:
         self.slots = slots
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * slots
+        self.finished: List[Request] = []
         self.positions = np.zeros(slots, np.int64)
         self.tokens = np.zeros(slots, np.int64)
         self.caches = None
@@ -68,10 +69,16 @@ class ContinuousBatcher:
             self.caches = lm.init_caches(
                 self.cfg, self.slots, self.engine.scfg.max_seq_len)
 
-    def _admit(self) -> None:
+    def _admit(self, max_slots: Optional[int] = None) -> None:
+        limit = self.slots if max_slots is None else min(max_slots,
+                                                         self.slots)
+        busy = sum(a is not None for a in self.active)
         for slot in range(self.slots):
-            if self.active[slot] is not None or not self.queue:
+            if busy >= limit or not self.queue:
+                break
+            if self.active[slot] is not None:
                 continue
+            busy += 1
             req = self.queue.pop(0)
             batch = {"tokens": jnp.asarray(req.prompt[None, :])}
             logits, cache1 = self.engine.prefill_fn(self.engine.params,
@@ -84,10 +91,13 @@ class ContinuousBatcher:
             self.positions[slot] = len(req.prompt)
             self.tokens[slot] = nxt
 
-    def step(self) -> int:
-        """One engine tick: admit + one batched decode. Returns number of
-        active slots."""
-        self._admit()
+    def step(self, max_slots: Optional[int] = None) -> int:
+        """One engine tick: admit (up to ``max_slots`` concurrent — the
+        runtime's activation gate) + one batched decode. Returns number
+        of active slots. Requests already in flight keep decoding even if
+        ``max_slots`` drops below the current occupancy; the cap throttles
+        admission only."""
+        self._admit(max_slots)
         live = [s for s in range(self.slots) if self.active[s] is not None]
         if not live:
             return 0
@@ -104,15 +114,15 @@ class ContinuousBatcher:
             if len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 self.active[s] = None
+                self.finished.append(req)
             else:
                 self.tokens[s] = int(nxt[s])
         return len(live)
 
     def run_to_completion(self, max_ticks: int = 10000) -> List[Request]:
-        finished: List[Request] = []
+        start = len(self.finished)
         for _ in range(max_ticks):
             if not self.queue and all(a is None for a in self.active):
                 break
-            before = {id(a) for a in self.active if a}
             self.step()
-        return finished
+        return self.finished[start:]

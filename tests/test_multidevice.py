@@ -6,10 +6,17 @@ import pytest
 pytestmark = pytest.mark.multidevice
 
 
+@pytest.fixture(autouse=True)
+def _need_devices(require_fake_devices):
+    """All tests here spawn subprocesses with fake XLA host devices; skip
+    the module on hosts where that capability is missing."""
+
+
 def test_ring_collective_matmuls(subproc):
     code = """
 import jax, jax.numpy as jnp, numpy as np, functools
 from jax.sharding import PartitionSpec as P
+from repro.distributed.compat import shard_map
 from repro.distributed.collectives import (ring_ag_matmul, ring_matmul_rs,
                                            naive_ag_matmul, naive_matmul_rs)
 mesh = jax.make_mesh((8,), ("model",))
@@ -17,11 +24,11 @@ rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
 w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
 ref = x @ w
-ag = jax.jit(jax.shard_map(functools.partial(ring_ag_matmul, axis_name="model"),
+ag = jax.jit(shard_map(functools.partial(ring_ag_matmul, axis_name="model"),
     mesh=mesh, in_specs=(P(None, "model"), P(None, "model")),
     out_specs=P(None, "model")))(x, w)
 assert float(jnp.max(jnp.abs(ag - ref))) < 1e-4, "ag"
-rs = jax.jit(jax.shard_map(functools.partial(ring_matmul_rs, axis_name="model"),
+rs = jax.jit(shard_map(functools.partial(ring_matmul_rs, axis_name="model"),
     mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
     out_specs=P(None, "model")))(x, w)
 assert float(jnp.max(jnp.abs(rs - ref))) < 1e-4, "rs"
@@ -35,11 +42,12 @@ def test_compressed_allreduce(subproc):
     code = """
 import jax, jax.numpy as jnp, numpy as np, functools
 from jax.sharding import PartitionSpec as P
+from repro.distributed.compat import shard_map
 from repro.distributed.compression import compressed_psum_mean, wire_bytes_fp32, wire_bytes_compressed
 mesh = jax.make_mesh((8,), ("d",))
 rng = np.random.default_rng(0)
 g = jnp.asarray(rng.standard_normal((8, 4096)), jnp.float32)
-fn = jax.jit(jax.shard_map(functools.partial(compressed_psum_mean, axis_name="d"),
+fn = jax.jit(shard_map(functools.partial(compressed_psum_mean, axis_name="d"),
     mesh=mesh, in_specs=(P("d"),), out_specs=P("d")))
 out = fn(g)
 ref = jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape)

@@ -1,0 +1,263 @@
+"""The unified ClusterRuntime request-lifecycle API (paper §5.2, Fig 12):
+workload protocol conformance, real concurrency gating, energy accounting
+against the ClusterSpec power model, and the deprecation shims."""
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterSpec, UnitSpec, soc_cluster
+from repro.core.scheduler import diurnal_trace
+from repro.runtime import (ClusterRuntime, DLServingWorkload,
+                           LMServingWorkload, QueueWorkload, Request,
+                           Response, ScalePolicy, StepStats, Telemetry,
+                           TranscodingWorkload, Workload)
+from repro.workloads.transcoding import VIDEOS
+
+
+def tiny_cluster(n_units: int = 8) -> ClusterSpec:
+    return ClusterSpec(
+        name="tiny",
+        unit=UnitSpec("u", p_off=0.0, p_idle=1.0, p_peak=10.0, gamma=1.0),
+        n_units=n_units, p_shared=5.0)
+
+
+@pytest.fixture(scope="module")
+def lm_workload_factory():
+    from repro.config import ServeConfig, get_config, smoke_config
+    from repro.serving.engine import ServingEngine
+    cfg = smoke_config(get_config("internlm2-1.8b")).replace(dtype="float32")
+    eng = ServingEngine(cfg, ServeConfig(max_seq_len=64))
+    eng.init_random(0)
+
+    def make(slots=4, **kw):
+        return LMServingWorkload(eng, slots=slots, **kw)
+
+    return make
+
+
+# ---------------------------------------------------------------------------
+# Workload protocol conformance (all three adapters).
+# ---------------------------------------------------------------------------
+def _conformance(wl, payload, cost=1.0):
+    assert isinstance(wl, Workload)
+    rid = wl.submit(Request(payload=payload, cost=cost, arrival_s=0.0))
+    assert isinstance(rid, int)
+    stats = wl.step(4, 1.0, 0.0)
+    assert isinstance(stats, StepStats)
+    desc = wl.describe()
+    assert isinstance(desc, dict) and "name" in desc and "kind" in desc
+    for _ in range(200):
+        if wl.step(4, 1.0).queued == 0 and wl.step(4, 1.0).concurrency == 0:
+            break
+    out = wl.drain()
+    assert isinstance(out, list)
+    assert all(isinstance(r, Response) for r in out)
+    assert any(r.rid == rid for r in out)
+
+
+def test_protocol_dl_serving():
+    _conformance(DLServingWorkload(unit_rate=2.0), payload=None, cost=3.0)
+
+
+def test_protocol_transcoding():
+    _conformance(TranscodingWorkload(VIDEOS[0]), payload=None, cost=5.0)
+
+
+def test_protocol_lm_serving(lm_workload_factory):
+    wl = lm_workload_factory(slots=2, max_new_tokens=4)
+    prompt = np.ones(6, np.int32)
+    _conformance(wl, payload=prompt)
+
+
+def test_dl_serving_from_point_rate():
+    wl = DLServingWorkload.from_point("resnet-50", "fp32", "soc-gpu")
+    # Table 7: 32.5 ms batch-1 -> ~30.8 samples/s per SoC
+    assert wl.unit_rate == pytest.approx(1000.0 / 32.5)
+    assert wl.describe()["platform"] == "soc-gpu"
+
+
+def test_transcoding_capacity_is_table3_streams():
+    v = VIDEOS[0]                       # V1: 13 cpu / 16 hw streams per SoC
+    assert TranscodingWorkload(v).unit_rate == v.soc_cpu_streams
+    assert TranscodingWorkload(v, hw_codec=True).unit_rate == \
+        v.soc_hw_streams
+
+
+# ---------------------------------------------------------------------------
+# Gating actually limits concurrency (the seed repo's dead-code fix).
+# ---------------------------------------------------------------------------
+def test_batcher_max_slots_caps_admission(lm_workload_factory):
+    wl = lm_workload_factory(slots=4, max_new_tokens=3)
+    bat = wl.batcher
+    for _ in range(6):
+        bat.submit(np.ones(4, np.int32), max_new_tokens=3)
+    live = bat.step(max_slots=2)
+    assert live == 2
+    assert sum(a is not None for a in bat.active) <= 2
+    # uncapped step uses all slots
+    live = bat.step()
+    assert live == 4
+
+
+def test_runtime_gates_lm_concurrency(lm_workload_factory):
+    wl = lm_workload_factory(slots=4, max_new_tokens=3)
+    for _ in range(8):
+        wl.submit(Request(payload=np.ones(4, np.int32)))
+    # one active unit x one slot/unit -> at most 1 in flight per tick
+    seen = []
+    for _ in range(40):
+        stats = wl.step(1, 1.0)
+        seen.append(stats.concurrency)
+        if stats.queued == 0 and stats.concurrency == 0:
+            break
+    assert max(seen) == 1
+    assert sum(s.rid is not None for s in wl.drain()) == 8
+
+
+def test_queue_workload_capacity_gated():
+    wl = QueueWorkload(unit_rate=2.0)
+    wl.submit(Request(cost=100.0))
+    stats = wl.step(3, 1.0)             # 3 units x 2/s x 1s = 6 done
+    assert stats.work_done == pytest.approx(6.0)
+    stats = wl.step(0, 1.0)             # fully gated: nothing moves
+    assert stats.work_done == 0.0
+    assert wl.pending_cost == pytest.approx(94.0)
+
+
+def test_run_to_completion_returns_finished(lm_workload_factory):
+    bat = lm_workload_factory(slots=2).batcher
+    rids = [bat.submit(np.ones(4, np.int32), max_new_tokens=3)
+            for _ in range(3)]
+    done = bat.run_to_completion()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    assert all(len(r.generated) == 3 for r in done)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry energy must match the ClusterSpec power integration.
+# ---------------------------------------------------------------------------
+def test_energy_matches_power_model():
+    spec = tiny_cluster(8)
+    wl = QueueWorkload(unit_rate=1.0)
+    rt = ClusterRuntime(spec, wl, policy=ScalePolicy(min_units=2),
+                        dt_s=1.0)
+    for _ in range(5):
+        rt.submit(cost=2.0, count=2.0)
+        rt.tick()
+    tel = rt.telemetry()
+    expected = sum(
+        spec.power(int(a), float(u), idle_units_off=True) * 1.0
+        for a, u in zip(tel.active_units, tel.utilization))
+    assert tel.energy_j == pytest.approx(expected)
+    # and each recorded power sample is the model's value exactly
+    for a, u, p in zip(tel.active_units, tel.utilization, tel.power_w):
+        assert p == pytest.approx(
+            spec.power(int(a), float(u), idle_units_off=True))
+
+
+def test_acceptance_diurnal_gating_tracks_load_and_saves_energy():
+    """Acceptance: under a diurnal trace the mean activation tracks the
+    offered load within the policy headroom, and gated energy beats the
+    static all-units-on baseline."""
+    spec = soc_cluster()
+    unit_rate = 10.0
+    wl = QueueWorkload(unit_rate=unit_rate)
+    rt = ClusterRuntime(spec, wl, policy=ScalePolicy(cooldown_s=120.0))
+    trace = diurnal_trace(peak_rps=unit_rate * spec.n_units * 0.8,
+                          hours=24, dt_s=60.0)
+    tel = rt.play_trace(trace, dt_s=60.0)
+    ideal = np.minimum(
+        spec.n_units,
+        np.maximum(1, np.ceil(trace * 1.25 / unit_rate))).mean()
+    assert tel.mean_active == pytest.approx(ideal, rel=0.15)
+    assert tel.energy_j < rt.static_baseline_energy()
+    assert tel.served == pytest.approx(float((trace * 60.0).sum()),
+                                       rel=1e-6)
+    # activation trace correlates with the offered load trace
+    corr = np.corrcoef(tel.offered_load, tel.active_units)[0, 1]
+    assert corr > 0.95
+
+
+def test_scale_down_keeps_inflight_powered(lm_workload_factory):
+    """In-flight slots outliving a scale-down stay powered and charged."""
+    wl = lm_workload_factory(slots=4, max_new_tokens=6)
+    spec = tiny_cluster(4)
+    rt = ClusterRuntime(spec, wl, policy=ScalePolicy(min_units=4,
+                                                     cooldown_s=0.0),
+                        unit_rate=1.0)
+    for _ in range(4):
+        rt.submit(np.ones(4, np.int32))
+    stats = rt.tick()
+    assert stats.concurrency == 4
+    # force the governor target down; in-flight work keeps its units
+    rt.governor.active_units = 1
+    rt.governor.policy.min_units = 1
+    stats = rt.tick()
+    assert stats.concurrency == 4
+    assert stats.active_units == 4          # powered for the overflow
+    assert stats.power_w == pytest.approx(
+        spec.power(4, stats.utilization, idle_units_off=True))
+
+
+def test_group_units_activates_whole_groups():
+    spec = soc_cluster()                        # 60 units, 5 per PCB
+    rt = ClusterRuntime(spec, QueueWorkload(unit_rate=1.0),
+                        policy=ScalePolicy(cooldown_s=0.0),
+                        group_units=5)
+    gov = rt.governor
+    # need 7 units -> 2 whole groups of 5
+    assert gov.target_units(7.0 / gov.policy.headroom) == 10
+    assert gov.target_units(0.0) == 5           # floor is one group
+    assert gov.target_units(1e9) == 60          # cap at whole groups
+
+
+def test_hedge_after_s_warns_on_runtime_path():
+    with pytest.warns(RuntimeWarning, match="hedge_after_s"):
+        ClusterRuntime(tiny_cluster(4), QueueWorkload(unit_rate=1.0),
+                       policy=ScalePolicy(hedge_after_s=1.0))
+
+
+def test_fluid_latency_not_inflated_when_unloaded():
+    """An uncongested fluid workload must report sub-tick latency, not
+    the tick width."""
+    wl = QueueWorkload(unit_rate=10.0)
+    rt = ClusterRuntime(tiny_cluster(8), wl)
+    tel = rt.play_trace(np.full(50, 4.0), dt_s=60.0)
+    assert tel.p99_latency_s < 60.0
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims.
+# ---------------------------------------------------------------------------
+def test_simresult_and_report_are_telemetry():
+    from repro.core.scheduler import (ElasticScheduler, SimResult,
+                                      ScalePolicy as SchedScalePolicy)
+    from repro.serving.autoscaler import AutoscalerReport
+    assert SimResult is Telemetry
+    assert AutoscalerReport is Telemetry
+    assert SchedScalePolicy is ScalePolicy
+    sched = ElasticScheduler(soc_cluster(), unit_rate=1.0)
+    res = sched.simulate(np.full(10, 5.0), dt_s=1.0)
+    assert isinstance(res, Telemetry)
+    assert res.tpe > 0 and res.ticks == 10
+    # the simulator fills every per-tick series of the unified struct
+    assert len(res.utilization) == len(res.active_units) == 10
+
+
+def test_serving_autoscaler_shim_still_works():
+    from repro.serving.autoscaler import ServingAutoscaler
+    with pytest.deprecated_call():
+        sc = ServingAutoscaler(tiny_cluster(8), unit_rate_rps=2.0,
+                               policy=ScalePolicy(min_units=1,
+                                                  cooldown_s=5.0),
+                               window_s=5.0)
+    for step in range(40):
+        t = float(step)
+        n = 8 if 10 <= step < 25 else 1
+        sc.record_arrival(t, n)
+        active = sc.tick(t, served_this_tick=n)
+        assert active >= 1
+    rep = sc.report()
+    assert isinstance(rep, Telemetry)
+    assert rep.scale_events >= 2
+    assert rep.energy_j > 0
+    assert 1.0 < rep.mean_active < 8.0

@@ -2,8 +2,10 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (RuleSet, resolve_spec, serve_rules,

@@ -18,9 +18,9 @@ def main() -> None:
     from benchmarks import (bench_kernels, bench_step, fig6_transcoding,
                             fig7_proportionality, fig8_hw_codec,
                             fig11_dl_serving, fig12_dl_proportionality,
-                            fig13_collaborative, roofline_table,
-                            table2_microbench, table3_network_bound,
-                            table4_tco, table5_tpc)
+                            fig13_collaborative, fig14_mixed_tenancy,
+                            roofline_table, table2_microbench,
+                            table3_network_bound, table4_tco, table5_tpc)
 
     suites = {
         "table2": table2_microbench.run,
@@ -32,6 +32,7 @@ def main() -> None:
         "fig12": fig12_dl_proportionality.run,
         "fig13": (lambda: fig13_collaborative.run(
             executable=not args.fast)),
+        "fig14": fig14_mixed_tenancy.run,
         "table4": table4_tco.run,
         "table5": table5_tpc.run,
         "kernels": bench_kernels.run,

@@ -2,25 +2,23 @@
 
 The paper's observation (§2.3, Fig 5): edge load is user-driven and swings
 25x within a day while deployed clusters sit below 20% utilization. Its
-thesis (§5.2): a cluster of small units saves energy by *activating only the
-units the offered load needs*. This module implements that policy as a
-discrete-event simulation plus the reusable policy object the serving
-autoscaler consumes:
+thesis (§5.2): a cluster of small units saves energy by *activating only
+the units the offered load needs*, and requests stuck past a latency
+deadline are hedged onto an extra unit (the cross-unit analogue of backup
+tasks).
 
-  * scale-up: immediate, with headroom;
-  * scale-down: hysteresis (cooldown) to avoid thrashing on bursty load;
-  * straggler hedging: requests stuck past a latency deadline are
-    re-dispatched to a second unit (first completion wins) — the
-    cross-unit analogue of backup tasks.
-
-This is the *model-level* simulator. The canonical executable loop —
-where the activation target actually gates workload concurrency — is
-:class:`repro.runtime.ClusterRuntime`; both report the unified
+Since the unit-allocation refactor, :class:`ElasticScheduler` is a **thin
+wrapper**: ``simulate()`` builds a one-tenant
+:class:`~repro.runtime.MultiTenantRuntime` over a fluid
+:class:`~repro.runtime.QueueWorkload` and plays the trace through the
+canonical runtime loop — the wake/cooldown/hedge policy lives once, in
+:class:`~repro.runtime.UnitGovernor` and the runtime's hedging pass, not
+in a duplicated simulation loop here. Both report the unified
 :class:`repro.runtime.Telemetry` (``SimResult`` is a deprecated alias).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -28,19 +26,21 @@ from repro.core.cluster import ClusterSpec
 # Deprecation shims: ScalePolicy now lives in repro.runtime.policy and the
 # result struct is the unified repro.runtime.Telemetry; both are
 # re-exported here so existing imports keep working.
+from repro.runtime.multi_tenant import MultiTenantRuntime, Tenant
 from repro.runtime.policy import ScalePolicy
 from repro.runtime.result import Telemetry
+from repro.runtime.workload import QueueWorkload
 
 SimResult = Telemetry
 
 
 class ElasticScheduler:
-    """Discrete-time simulation (dt-stepped) of the unit-activation policy.
+    """Fluid model of the unit-activation policy (thin runtime wrapper).
 
-    Each unit serves ``unit_rate`` req/s at full utilization. Queued
-    requests are FIFO; per-step latency is estimated from queue depth
-    (M/D/c-style). This is intentionally a *model* — the serving engine
-    drives real decode steps through the same policy object.
+    Each unit serves ``unit_rate`` req/s at full utilization; queued
+    requests are FIFO. The heavy lifting happens in the runtime stack —
+    this class only packages a trace into a one-tenant run and trims the
+    result to the legacy report shape.
     """
 
     def __init__(self, spec: ClusterSpec, unit_rate: float,
@@ -56,80 +56,38 @@ class ElasticScheduler:
 
     def simulate(self, load_trace: Sequence[float], dt_s: float = 1.0
                  ) -> SimResult:
-        p = self.policy
-        n_steps = len(load_trace)
-        active = p.min_units
-        pending_wake: List[Tuple[float, int]] = []  # (ready_time, count)
-        last_downscale = -1e9
-        queue = 0.0
-        served = dropped = 0.0
-        hedged = 0
-        latencies: List[float] = []
-        t_arr = np.arange(n_steps) * dt_s
-        act_arr = np.zeros(n_steps)
-        pow_arr = np.zeros(n_steps)
-        util_arr = np.zeros(n_steps)
+        """Play ``load_trace`` through a one-tenant runtime.
 
-        for i, offered in enumerate(load_trace):
-            t = i * dt_s
-            # Units finishing wake-up become active.
-            pending_wake = [(rt, c) for rt, c in pending_wake if rt > t] or []
-            waking = sum(c for rt, c in pending_wake)
-            tgt = self.target_units(offered + queue / dt_s)
-            if tgt > active + waking:
-                pending_wake.append((t + p.wake_latency_s,
-                                     tgt - active - waking))
-            elif tgt < active and t - last_downscale > p.cooldown_s:
-                active = max(p.min_units, tgt)
-                last_downscale = t
-            # Activate woken units.
-            ready = sum(c for rt, c in pending_wake if rt <= t + dt_s)
-            pending_wake = [(rt, c) for rt, c in pending_wake
-                            if rt > t + dt_s]
-            active = min(self.spec.n_units, active + ready)
-
-            capacity = active * self.unit_rate * dt_s
-            arriving = offered * dt_s
-            work = queue + arriving
-            done = min(work, capacity)
-            queue = work - done
-            served += done
-            # Latency estimate: queueing delay + service time.
-            util = min(1.0, work / max(capacity, 1e-9))
-            wait = queue / max(active * self.unit_rate, 1e-9)
-            lat = wait + 1.0 / self.unit_rate
-            if p.hedge_after_s is not None and lat > p.hedge_after_s:
-                # Hedge: borrow one extra unit this step (energy charged).
-                hedged += 1
-                extra = self.unit_rate * dt_s
-                redo = min(queue, extra)
-                queue -= redo
-                served += redo
-                lat = min(lat, p.hedge_after_s + 1.0 / self.unit_rate)
-                act_for_power = active + 1
-            else:
-                act_for_power = active
-            latencies.append(lat)
-            util_for_power = min(1.0, work / max(
-                act_for_power * self.unit_rate * dt_s, 1e-9))
-            pow_arr[i] = self.spec.power(act_for_power, util_for_power,
-                                         idle_units_off=True)
-            act_arr[i] = active
-            util_arr[i] = util_for_power
-
-        lat_a = np.array(latencies)
+        The runtime keeps ticking past the trace to drain the backlog
+        (so latencies are real completion times, not estimates); the
+        per-tick series and the energy integral are then trimmed back to
+        the trace window, which is what the legacy simulator reported.
+        """
+        trace = np.asarray(load_trace, float)
+        workload = QueueWorkload(self.unit_rate, name="elastic-sim")
+        runtime = MultiTenantRuntime(
+            self.spec,
+            [Tenant("sim", workload, policy=self.policy,
+                    unit_rate=self.unit_rate)],
+            dt_s=dt_s, model_wake_latency=True)
+        tel = runtime.play_traces({"sim": trace}, dt_s=dt_s)
+        n = len(trace)
+        energy = float(np.sum(tel.power_w[:n]) * dt_s)
+        served = float(np.sum(runtime.pool.served_hist[:n]))
         return Telemetry(
-            time_s=t_arr,
-            offered_load=np.asarray(load_trace, float),
-            active_units=act_arr,
-            power_w=pow_arr,
-            utilization=util_arr,
+            time_s=tel.time_s[:n],
+            offered_load=trace,
+            active_units=tel.active_units[:n],
+            power_w=tel.power_w[:n],
+            utilization=tel.utilization[:n],
             served=served,
-            dropped=dropped,
-            hedged=hedged,
-            p50_latency_s=float(np.percentile(lat_a, 50)),
-            p99_latency_s=float(np.percentile(lat_a, 99)),
-            energy_j=float(np.sum(pow_arr) * dt_s),
+            hedged=tel.hedged,
+            scale_events=tel.scale_events,
+            p50_latency_s=tel.p50_latency_s,
+            p99_latency_s=tel.p99_latency_s,
+            energy_j=energy,
+            responses=tel.responses,
+            workload=tel.workload,
         )
 
 

@@ -11,8 +11,9 @@ from __future__ import annotations
 
 import logging
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -27,14 +28,14 @@ log = logging.getLogger(__name__)
 class UnitHealth:
     unit_id: int
     last_heartbeat: float
-    step_times: List[float] = field(default_factory=list)
+    # bounded O(1) ring of recent step times (was list.pop(0) — O(n))
+    step_times: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=64))
     failed: bool = False
 
     def record(self, t_now: float, step_time: float) -> None:
         self.last_heartbeat = t_now
         self.step_times.append(step_time)
-        if len(self.step_times) > 64:
-            self.step_times.pop(0)
 
 
 class HealthTracker:
@@ -75,7 +76,7 @@ class HealthTracker:
         return sorted(u for u in self.units if u not in bad)
 
     def stragglers(self) -> List[int]:
-        times = {u.unit_id: np.mean(u.step_times[-8:])
+        times = {u.unit_id: np.mean(list(u.step_times)[-8:])
                  for u in self.units.values() if u.step_times}
         if len(times) < 2:
             return []

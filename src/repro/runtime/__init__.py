@@ -1,21 +1,33 @@
-"""Unified request-lifecycle runtime (paper §5.2, Fig 11/12).
+"""Unified request-lifecycle runtime (paper §2, §4-5.2, Fig 11/12).
 
 The one serving surface for the SoC-Cluster reproduction:
 
   * :class:`Request` / :class:`Response` / :class:`StepStats` /
     :class:`Telemetry` — the shared result model (also aliased by the
     deprecated ``core.scheduler.SimResult`` and
-    ``serving.autoscaler.AutoscalerReport``);
+    ``serving.autoscaler.AutoscalerReport``); ``Telemetry`` carries
+    per-tenant views under ``per_tenant``;
   * :class:`Workload` protocol with adapters :class:`LMServingWorkload`
     (live engine + continuous batcher), :class:`DLServingWorkload`
     (Fig 11/12 measured serving points), and
     :class:`TranscodingWorkload` (§4 / Table 3 stream counts);
-  * :class:`ClusterRuntime` — binds ``ClusterSpec`` + ``ScalePolicy`` +
-    ``Workload`` and runs the canonical loop, with the activation target
-    *actually gating* workload concurrency.
+  * :class:`UnitPool` — per-unit ``off → waking → active`` state over a
+    ``ClusterSpec`` with PCB-group-aligned allocations and the cluster's
+    single power integral (shared power charged once);
+  * :class:`UnitGovernor` / :class:`ScalePolicy` — the activation policy
+    engine (windowed rate → group-quantized target → wake/cooldown);
+  * :class:`MultiTenantRuntime` — N tenants on one pool, weighted-fair
+    arbitration with ``min_units`` floors, runtime-level straggler
+    hedging;
+  * :class:`ClusterRuntime` — the single-tenant facade: one
+    ``ClusterSpec`` + ``ScalePolicy`` + ``Workload``, with the
+    activation target *actually gating* workload concurrency.
 """
-from repro.runtime.cluster_runtime import ClusterRuntime, UnitGovernor
-from repro.runtime.policy import ScalePolicy
+from repro.runtime.cluster_runtime import ClusterRuntime
+from repro.runtime.multi_tenant import (MultiTenantRuntime, Tenant,
+                                        weighted_fair_share)
+from repro.runtime.policy import ScalePolicy, UnitGovernor
+from repro.runtime.pool import UnitPool, UnitState
 from repro.runtime.result import (Request, Response, StepStats, Telemetry,
                                   latency_percentiles)
 from repro.runtime.workload import (DLServingWorkload, LMServingWorkload,
@@ -23,7 +35,9 @@ from repro.runtime.workload import (DLServingWorkload, LMServingWorkload,
                                     Workload)
 
 __all__ = [
-    "ClusterRuntime", "UnitGovernor", "ScalePolicy",
+    "ClusterRuntime", "MultiTenantRuntime", "Tenant",
+    "weighted_fair_share", "UnitPool", "UnitState",
+    "UnitGovernor", "ScalePolicy",
     "Request", "Response", "StepStats", "Telemetry",
     "latency_percentiles",
     "Workload", "QueueWorkload", "DLServingWorkload", "LMServingWorkload",

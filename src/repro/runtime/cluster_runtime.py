@@ -5,11 +5,14 @@ One loop, shared by every workload and benchmark:
   arrival recording → target-unit computation → **gating of workload
   concurrency to the activation target** → per-tick energy accounting.
 
-The seed repo computed the autoscaler's target and then ignored it (the
-batcher always filled every slot); here the target is handed to
-``Workload.step(n_active_units)`` which must not exceed it, so scaling
-down genuinely sheds concurrency — the paper's "activate only the units
-the offered load needs" (Fig 12).
+Since the unit-allocation refactor this is a thin single-tenant facade
+over :class:`~repro.runtime.multi_tenant.MultiTenantRuntime`: the
+activation state lives in a :class:`~repro.runtime.pool.UnitPool`, the
+wake/cooldown policy loop lives once in
+:class:`~repro.runtime.policy.UnitGovernor`, and straggler hedging
+(``ScalePolicy.hedge_after_s``) is honored by the runtime proper — a
+request stuck past the deadline borrows a free unit for the tick and is
+charged for it.
 
 Typical use::
 
@@ -24,162 +27,23 @@ Typical use::
 """
 from __future__ import annotations
 
-import warnings
-from typing import Any, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import Any, Optional, Sequence
 
 from repro.core.cluster import ClusterSpec
-from repro.runtime.policy import ScalePolicy
-from repro.runtime.result import (Request, Response, StepStats, Telemetry,
-                                  latency_percentiles)
+from repro.runtime.multi_tenant import MultiTenantRuntime, Tenant
+from repro.runtime.policy import ScalePolicy, UnitGovernor
+from repro.runtime.result import Request, StepStats, Telemetry
 from repro.runtime.workload import Workload
 
-
-class UnitGovernor:
-    """Activation policy + energy meter for a :class:`ClusterSpec`.
-
-    Pure bookkeeping (no workload knowledge): records arrivals, estimates
-    the offered rate over a sliding window, tracks the active-unit count
-    under the :class:`ScalePolicy` (immediate scale-up with optional wake
-    latency, cooldown-hysteresis scale-down), and integrates the cluster
-    power model per tick. Shared by :class:`ClusterRuntime` and the
-    deprecated ``serving.autoscaler.ServingAutoscaler`` shim.
-    """
-
-    def __init__(self, spec: ClusterSpec, unit_rate: float,
-                 policy: Optional[ScalePolicy] = None,
-                 window_s: float = 10.0, idle_units_off: bool = True,
-                 model_wake_latency: bool = False, group_units: int = 1):
-        assert unit_rate > 0, "unit_rate must be positive"
-        self.spec = spec
-        self.unit_rate = unit_rate
-        self.policy = policy or ScalePolicy()
-        if self.policy.hedge_after_s is not None:
-            warnings.warn(
-                "ScalePolicy.hedge_after_s is only honored by the "
-                "ElasticScheduler simulation; UnitGovernor/ClusterRuntime "
-                "ignore it", RuntimeWarning, stacklevel=3)
-        self.window_s = window_s
-        self.idle_units_off = idle_units_off
-        self.model_wake_latency = model_wake_latency
-        # units activate in groups of this size (e.g. an n-SoC tensor-
-        # parallel collaboration group, §5.3): targets are rounded up to
-        # a whole number of groups so no unit is stranded in a partial one
-        self.group_units = max(1, int(group_units))
-        assert self.group_units <= spec.n_units, \
-            f"group_units={group_units} exceeds cluster size {spec.n_units}"
-        self.active_units = self._quantize(self.policy.min_units)
-        self._arrivals: List[Tuple[float, float]] = []   # (t, count)
-        self._pending_wake: List[Tuple[float, int]] = []  # (ready_t, count)
-        self._last_downscale = -1e9
-        self.energy_j = 0.0
-        self.served = 0.0
-        self.scale_events = 0
-        # per-tick history
-        self.t_hist: List[float] = []
-        self.offered_hist: List[float] = []
-        self.active_hist: List[int] = []
-        self.power_hist: List[float] = []
-        self.util_hist: List[float] = []
-
-    # ------------------------------------------------------------------
-    def record_arrival(self, t: float, n: float = 1) -> None:
-        if n > 0:
-            self._arrivals.append((float(t), float(n)))
-
-    def offered_rate(self, t: float) -> float:
-        # strict cutoff: an arrival exactly window_s old has left the
-        # window (otherwise tick-bucketed traces double-count the edge)
-        cutoff = t - self.window_s
-        self._arrivals = [(a, n) for a, n in self._arrivals if a > cutoff]
-        return sum(n for _, n in self._arrivals) / self.window_s
-
-    def _quantize(self, units: int) -> int:
-        g = self.group_units
-        whole = -(-int(units) // g) * g          # ceil to whole groups
-        if whole > self.spec.n_units:            # keep only full groups
-            whole = self.spec.n_units // g * g
-        return max(g, whole)
-
-    def target_units(self, offered: float) -> int:
-        need = offered * self.policy.headroom / self.unit_rate
-        raw = int(min(self.spec.n_units,
-                      max(self.policy.min_units, np.ceil(need))))
-        return self._quantize(raw)
-
-    # ------------------------------------------------------------------
-    def update(self, t: float, dt_s: float = 1.0,
-               offered: Optional[float] = None) -> int:
-        """Advance the activation state one tick; returns the active-unit
-        count the workload may use this tick.
-
-        Wake handling mirrors the ElasticScheduler simulation: a unit
-        waking within the tick serves the whole tick (fluid model), so
-        ``model_wake_latency`` only delays activation when
-        ``wake_latency_s > dt_s`` — with the 0.5 s default and >= 1 s
-        ticks it changes nothing."""
-        rate = self.offered_rate(t) if offered is None else offered
-        tgt = self.target_units(rate)
-        p = self.policy
-        wake_s = p.wake_latency_s if self.model_wake_latency else 0.0
-        waking = sum(c for _, c in self._pending_wake)
-        if tgt > self.active_units + waking:
-            self._pending_wake.append(
-                (t + wake_s, tgt - self.active_units - waking))
-            self.scale_events += 1
-        elif tgt < self.active_units and \
-                t - self._last_downscale > p.cooldown_s:
-            self.active_units = max(self._quantize(p.min_units), tgt)
-            self._last_downscale = t
-            self.scale_events += 1
-        ready = sum(c for rt, c in self._pending_wake if rt <= t + dt_s)
-        self._pending_wake = [(rt, c) for rt, c in self._pending_wake
-                              if rt > t + dt_s]
-        self.active_units = min(self.spec.n_units,
-                                self.active_units + ready)
-        self._tick_rate = rate
-        return self.active_units
-
-    def charge(self, t: float, utilization: float, dt_s: float = 1.0,
-               served: float = 0.0, extra_units: int = 0) -> float:
-        """Account one tick of energy at the current activation; returns
-        the tick's power draw in watts."""
-        act = min(self.spec.n_units, self.active_units + extra_units)
-        power = self.spec.power(act, min(max(utilization, 0.0), 1.0),
-                                idle_units_off=self.idle_units_off)
-        self.energy_j += power * dt_s
-        self.served += served
-        self.t_hist.append(t)
-        self.offered_hist.append(getattr(self, "_tick_rate", 0.0))
-        self.active_hist.append(act)
-        self.power_hist.append(power)
-        self.util_hist.append(utilization)
-        return power
-
-    # ------------------------------------------------------------------
-    def telemetry(self, responses: Optional[List[Response]] = None,
-                  workload: Optional[dict] = None) -> Telemetry:
-        p50, p99 = latency_percentiles(responses or [])
-        return Telemetry(
-            time_s=np.asarray(self.t_hist, float),
-            offered_load=np.asarray(self.offered_hist, float),
-            active_units=np.asarray(self.active_hist, float),
-            power_w=np.asarray(self.power_hist, float),
-            utilization=np.asarray(self.util_hist, float),
-            served=self.served,
-            scale_events=self.scale_events,
-            p50_latency_s=p50,
-            p99_latency_s=p99,
-            energy_j=self.energy_j,
-            responses=list(responses or []),
-            workload=dict(workload or {}),
-        )
+__all__ = ["ClusterRuntime", "UnitGovernor"]
 
 
-class ClusterRuntime:
-    """Binds a :class:`ClusterSpec`, a :class:`ScalePolicy`, and a
-    :class:`Workload`; runs the canonical submit/tick/account loop."""
+class ClusterRuntime(MultiTenantRuntime):
+    """Binds a :class:`ClusterSpec`, a :class:`ScalePolicy`, and a single
+    :class:`Workload`; runs the canonical submit/tick/account loop as a
+    one-tenant :class:`MultiTenantRuntime`."""
+
+    _TENANT = "default"
 
     def __init__(self, spec: ClusterSpec, workload: Workload,
                  policy: Optional[ScalePolicy] = None,
@@ -188,28 +52,25 @@ class ClusterRuntime:
                  idle_units_off: bool = True,
                  model_wake_latency: bool = False, group_units: int = 1):
         # model_wake_latency matters only for sub-tick resolution
-        # (wake_latency_s > dt_s); see UnitGovernor.update.
+        # (wake_latency_s > dt_s); see UnitGovernor.apply_target.
         if unit_rate is None:
             unit_rate = workload.describe().get("unit_rate")
         if unit_rate is None:
             raise ValueError(
                 "unit_rate not derivable from workload.describe(); pass "
                 "unit_rate= (requests/s one unit sustains) explicitly")
-        self.spec = spec
+        super().__init__(
+            spec,
+            [Tenant(self._TENANT, workload, policy=policy,
+                    unit_rate=unit_rate, group_units=group_units)],
+            dt_s=dt_s, window_s=window_s, idle_units_off=idle_units_off,
+            model_wake_latency=model_wake_latency)
         self.workload = workload
-        self.dt_s = dt_s
-        self.governor = UnitGovernor(
-            spec, unit_rate, policy, window_s=window_s,
-            idle_units_off=idle_units_off,
-            model_wake_latency=model_wake_latency,
-            group_units=group_units)
-        self._t = 0.0
-        self._responses: List[Response] = []
 
     # ------------------------------------------------------------------
     @property
-    def now(self) -> float:
-        return self._t
+    def governor(self) -> UnitGovernor:
+        return self._states[self._TENANT].governor
 
     @property
     def active_units(self) -> int:
@@ -221,89 +82,27 @@ class ClusterRuntime:
         """Record an arrival at the current runtime clock and hand the
         request to the workload. ``count`` weights the arrival-rate
         estimate (use ``count=cost`` for aggregated fluid requests)."""
-        req = request or Request(payload=payload, cost=cost,
-                                 arrival_s=self._t, meta=meta)
-        if req.arrival_s is None:
-            req.arrival_s = self._t
-        self.governor.record_arrival(self._t, count)
-        return self.workload.submit(req)
+        return super().submit(self._TENANT, payload=payload, cost=cost,
+                              count=count, request=request, **meta)
 
     def tick(self, dt_s: Optional[float] = None) -> StepStats:
         """One canonical iteration: update activation target, let the
-        workload advance under that concurrency cap, charge energy."""
-        dt = self.dt_s if dt_s is None else dt_s
-        t = self._t
-        active = self.governor.update(t, dt)
-        stats = self.workload.step(active, dt, t)
-        stats.t, stats.dt_s = t, dt
-        stats.target_units = active
-        # in-flight work that outlived a scale-down stays powered
-        extra = max(0, stats.units_used - active) if stats.units_used else 0
-        stats.active_units = active + extra
-        stats.power_w = self.governor.charge(
-            t, stats.utilization, dt, served=stats.work_done,
-            extra_units=extra)
-        stats.energy_j = self.governor.energy_j
-        self._responses.extend(stats.responses)
-        self._t = t + dt
+        workload advance under that concurrency cap, charge energy.
+        ``power_w``/``energy_j`` on the returned stats are cluster-level
+        (shared power included)."""
+        stats = self._tick_all(dt_s)[self._TENANT]
+        stats.power_w = self.pool.last_power_w
+        stats.energy_j = self.pool.energy_j
         return stats
-
-    def run(self, max_ticks: int = 100000) -> Telemetry:
-        """Tick until the workload is fully drained (or ``max_ticks``)."""
-        for _ in range(max_ticks):
-            stats = self.tick()
-            if stats.queued == 0 and stats.concurrency == 0:
-                break
-        self.workload.drain()
-        return self.telemetry()
 
     def play_trace(self, trace_rps: Sequence[float],
                    dt_s: Optional[float] = None,
                    drain: bool = True) -> Telemetry:
         """Drive the runtime with an offered-load trace (requests/s per
-        tick), e.g. :func:`repro.core.scheduler.diurnal_trace`. Each tick
-        submits one aggregated request of ``rate * dt`` request-
-        equivalents, then runs the canonical loop."""
-        dt = self.dt_s if dt_s is None else dt_s
-        # The rate estimator needs the window to cover at least one tick;
-        # widen it for the duration of the playback only.
-        saved_window = self.governor.window_s
-        self.governor.window_s = max(saved_window, dt)
-        try:
-            for rate in trace_rps:
-                work = float(rate) * dt
-                if work > 0:
-                    # arrivals are spread across the tick; stamp the
-                    # aggregate at the tick midpoint so fluid latency
-                    # isn't inflated by a full tick width
-                    self.submit(count=work, request=Request(
-                        cost=work, arrival_s=self._t + 0.5 * dt))
-                self.tick(dt)
-            if drain:
-                for _ in range(10 * len(trace_rps) + 100):
-                    stats = self.tick(dt)
-                    if stats.queued == 0 and stats.concurrency == 0:
-                        break
-        finally:
-            self.governor.window_s = saved_window
-        self.workload.drain()
-        return self.telemetry()
+        tick), e.g. :func:`repro.core.scheduler.diurnal_trace`."""
+        return self.play_traces({self._TENANT: trace_rps}, dt_s=dt_s,
+                                drain=drain)
 
     # ------------------------------------------------------------------
     def telemetry(self) -> Telemetry:
-        return self.governor.telemetry(self._responses,
-                                       self.workload.describe())
-
-    def static_baseline_energy(self, utilization: float = 1.0) -> float:
-        """Energy the same span would have cost with every unit powered
-        (the monolithic / no-gating baseline of Fig 12)."""
-        ticks = len(self.governor.t_hist)
-        if ticks == 0:
-            return 0.0
-        # reconstruct per-tick dt from the recorded clock
-        ts = self.governor.t_hist
-        dts = [t2 - t1 for t1, t2 in zip(ts, ts[1:])]
-        dts.append(dts[-1] if dts else self.dt_s)
-        p = self.spec.power(self.spec.n_units, utilization,
-                            idle_units_off=False)
-        return p * float(sum(dts))
+        return self.cluster_telemetry()

@@ -1,13 +1,20 @@
 """Unit-activation policy (paper §5.2): how a cluster of small units
-tracks offered load. Canonical home of :class:`ScalePolicy`, which is
-bound into :class:`~repro.runtime.ClusterRuntime` alongside a
-``ClusterSpec`` and a ``Workload`` (``core.scheduler`` re-exports it for
-backward compatibility).
+tracks offered load. Canonical home of :class:`ScalePolicy` and of
+:class:`UnitGovernor`, the policy engine that turns offered load into a
+per-tenant activation target and applies it to a
+:class:`~repro.runtime.pool.UnitPool` (``core.scheduler`` re-exports
+``ScalePolicy`` for backward compatibility).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec
+from repro.runtime.pool import UnitPool
+from repro.runtime.result import (Response, Telemetry, latency_percentiles)
 
 
 @dataclass
@@ -16,7 +23,187 @@ class ScalePolicy:
     cooldown_s: float = 30.0          # scale-down hysteresis
     min_units: int = 1
     wake_latency_s: float = 0.5       # unit power-on latency
-    # Straggler hedging deadline. Honored only by the model-level
-    # ``core.scheduler.ElasticScheduler`` simulation; the live
-    # ``ClusterRuntime`` path warns and ignores it (not implemented yet).
+    # Straggler hedging deadline: a tenant whose oldest queued request is
+    # older than this borrows one extra unit for the tick (and is charged
+    # for it). Honored by the runtime proper (MultiTenantRuntime /
+    # ClusterRuntime) and, through its thin wrapper, by
+    # ``core.scheduler.ElasticScheduler.simulate``.
     hedge_after_s: Optional[float] = None
+
+
+class UnitGovernor:
+    """Activation policy + per-tenant bookkeeping for one pool tenant.
+
+    Pure demand-side logic (no workload knowledge): records arrivals,
+    estimates the offered rate over a sliding window, computes the
+    group-quantized activation target, and applies a (possibly
+    arbitrated) target to the :class:`UnitPool` — immediate scale-up
+    with optional wake latency, cooldown-hysteresis scale-down. The
+    wake/cooldown loop lives *only* here (:meth:`apply_target`); the
+    single-tenant :class:`~repro.runtime.ClusterRuntime`, the
+    multi-tenant runtime, and the retired ``ElasticScheduler`` wrapper
+    all share it.
+
+    Standalone use (no pool given) creates a private single-tenant pool —
+    this is the ``serving.autoscaler.ServingAutoscaler`` compatibility
+    path, where :meth:`charge` records full-cluster power. When driven by
+    ``MultiTenantRuntime`` the pool is shared and the runtime records
+    tenant-attributed power via :meth:`note`.
+    """
+
+    def __init__(self, spec: ClusterSpec, unit_rate: float,
+                 policy: Optional[ScalePolicy] = None,
+                 window_s: float = 10.0, idle_units_off: bool = True,
+                 model_wake_latency: bool = False, group_units: int = 1,
+                 pool: Optional[UnitPool] = None, tenant: str = "default"):
+        assert unit_rate > 0, "unit_rate must be positive"
+        self.spec = spec
+        self.unit_rate = unit_rate
+        self.policy = policy or ScalePolicy()
+        self.window_s = window_s
+        self.idle_units_off = idle_units_off
+        self.model_wake_latency = model_wake_latency
+        # units activate in groups of this size (e.g. an n-SoC tensor-
+        # parallel collaboration group, §5.3): targets are rounded up to
+        # a whole number of groups so no unit is stranded in a partial one
+        self.group_units = max(1, int(group_units))
+        assert self.group_units <= spec.n_units, \
+            f"group_units={group_units} exceeds cluster size {spec.n_units}"
+        self.pool = pool if pool is not None \
+            else UnitPool(spec, idle_units_off=idle_units_off)
+        self.tenant = tenant
+        self.pool.force_active(tenant, self._quantize(self.policy.min_units))
+        self._arrivals: List[Tuple[float, float]] = []   # (t, count)
+        self._last_downscale = -1e9
+        self._tick_rate = 0.0
+        self.served = 0.0
+        self.scale_events = 0
+        self.hedged = 0
+        # per-tick history (cluster view when standalone, tenant-
+        # attributed view when driven by MultiTenantRuntime)
+        self.t_hist: List[float] = []
+        self.offered_hist: List[float] = []
+        self.active_hist: List[int] = []
+        self.power_hist: List[float] = []
+        self.util_hist: List[float] = []
+
+    # ------------------------------------------------------------------
+    @property
+    def active_units(self) -> int:
+        return self.pool.active(self.tenant)
+
+    @active_units.setter
+    def active_units(self, n: int) -> None:
+        # compatibility/testing hook: force the allocation, no wake latency
+        self.pool.force_active(self.tenant, int(n))
+
+    @property
+    def energy_j(self) -> float:
+        return self.pool.energy_j
+
+    # ------------------------------------------------------------------
+    def record_arrival(self, t: float, n: float = 1) -> None:
+        if n > 0:
+            self._arrivals.append((float(t), float(n)))
+
+    def offered_rate(self, t: float) -> float:
+        # strict cutoff: an arrival exactly window_s old has left the
+        # window (otherwise tick-bucketed traces double-count the edge)
+        cutoff = t - self.window_s
+        self._arrivals = [(a, n) for a, n in self._arrivals if a > cutoff]
+        return sum(n for _, n in self._arrivals) / self.window_s
+
+    def _quantize(self, units: int) -> int:
+        g = self.group_units
+        whole = -(-int(units) // g) * g          # ceil to whole groups
+        if whole > self.spec.n_units:            # keep only full groups
+            whole = self.spec.n_units // g * g
+        return max(g, whole)
+
+    def target_units(self, offered: float) -> int:
+        need = offered * self.policy.headroom / self.unit_rate
+        raw = int(min(self.spec.n_units,
+                      max(self.policy.min_units, np.ceil(need))))
+        return self._quantize(raw)
+
+    # ------------------------------------------------------------------
+    def desired_units(self, t: float, offered: Optional[float] = None
+                      ) -> int:
+        """The tenant's demand this tick: group-quantized activation
+        target from the (windowed) offered rate."""
+        rate = self.offered_rate(t) if offered is None else offered
+        self._tick_rate = rate
+        return self.target_units(rate)
+
+    def apply_target(self, tgt: int, t: float, dt_s: float = 1.0) -> int:
+        """Move the pool allocation toward ``tgt`` (which arbitration may
+        have capped below :meth:`desired_units`); returns the active-unit
+        count the workload may use this tick.
+
+        Wake handling is fluid: a unit waking within the tick serves the
+        whole tick, so ``model_wake_latency`` only delays activation when
+        ``wake_latency_s > dt_s`` — with the 0.5 s default and >= 1 s
+        ticks it changes nothing."""
+        p = self.policy
+        wake_s = p.wake_latency_s if self.model_wake_latency else 0.0
+        active = self.pool.active(self.tenant)
+        waking = self.pool.waking(self.tenant)
+        if tgt > active + waking:
+            # a starved wake (pool exhausted) is not a scale event
+            if self.pool.wake(self.tenant, tgt - active - waking,
+                              t + wake_s):
+                self.scale_events += 1
+        elif tgt < active and t - self._last_downscale > p.cooldown_s:
+            keep = max(self._quantize(p.min_units), tgt)
+            if self.pool.release(self.tenant, active - keep):
+                self._last_downscale = t
+                self.scale_events += 1
+        self.pool.advance(t, dt_s, self.tenant)
+        return self.pool.active(self.tenant)
+
+    def update(self, t: float, dt_s: float = 1.0,
+               offered: Optional[float] = None) -> int:
+        """Single-tenant shorthand: demand is granted unarbitrated."""
+        return self.apply_target(self.desired_units(t, offered), t, dt_s)
+
+    # ------------------------------------------------------------------
+    def note(self, t: float, active: int, power: float, util: float,
+             served: float = 0.0) -> None:
+        """Append one tick to the per-tenant history."""
+        self.served += served
+        self.t_hist.append(t)
+        self.offered_hist.append(self._tick_rate)
+        self.active_hist.append(active)
+        self.power_hist.append(power)
+        self.util_hist.append(util)
+
+    def charge(self, t: float, utilization: float, dt_s: float = 1.0,
+               served: float = 0.0, extra_units: int = 0) -> float:
+        """Standalone/single-tenant accounting: one tick of full-cluster
+        power at the current activation; returns the tick's power draw."""
+        total, _, powered = self.pool.charge(
+            t, dt_s, {self.tenant: utilization},
+            {self.tenant: extra_units},
+            offered=self._tick_rate, served=served)
+        self.note(t, powered[self.tenant], total, utilization, served)
+        return total
+
+    # ------------------------------------------------------------------
+    def telemetry(self, responses: Optional[List[Response]] = None,
+                  workload: Optional[dict] = None) -> Telemetry:
+        p50, p99 = latency_percentiles(responses or [])
+        return Telemetry(
+            time_s=np.asarray(self.t_hist, float),
+            offered_load=np.asarray(self.offered_hist, float),
+            active_units=np.asarray(self.active_hist, float),
+            power_w=np.asarray(self.power_hist, float),
+            utilization=np.asarray(self.util_hist, float),
+            served=self.served,
+            hedged=self.hedged,
+            scale_events=self.scale_events,
+            p50_latency_s=p50,
+            p99_latency_s=p99,
+            energy_j=self.energy_j,
+            responses=list(responses or []),
+            workload=dict(workload or {}),
+        )

@@ -1,0 +1,223 @@
+"""``UnitPool`` — per-unit activation state over a :class:`ClusterSpec`.
+
+The pool is the single owner of which physical units are powered (paper
+§5.2: per-SoC power gating). Every unit is in one of three states —
+``off → waking → active`` — and allocations are handed out
+**PCB-group-aligned**: a tenant's units are packed into as few
+``ClusterSpec.group_size`` groups as possible (filling groups the tenant
+already occupies first, then wholly-free groups), so tensor-parallel
+collaboration groups (§5.3) are not stranded across half-empty PCBs.
+
+The pool also owns the cluster's **single power integral**: shared
+infrastructure power (``ClusterSpec.p_shared`` — fans, switch boards,
+BMC) is charged exactly once per tick no matter how many tenants share
+the cluster, while each tenant's powered units are metered at that
+tenant's utilization and attributed to ``tenant_energy_j``.
+"""
+from __future__ import annotations
+
+from enum import Enum
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cluster import ClusterSpec
+
+
+class UnitState(str, Enum):
+    OFF = "off"
+    WAKING = "waking"
+    ACTIVE = "active"
+
+
+class UnitPool:
+    """Tracks per-unit state and hands out group-aligned allocations.
+
+    Tenants are identified by name. ``wake`` claims free units (they
+    serve only after ``advance`` passes their ready time), ``release``
+    powers active units back off, and ``charge`` integrates the cluster
+    power model for one tick. Waking units draw the same rest power as
+    off/idle units (they are not serving yet) but are *owned* — they are
+    unavailable to other tenants and to hedging.
+    """
+
+    def __init__(self, spec: ClusterSpec, idle_units_off: bool = True):
+        self.spec = spec
+        self.idle_units_off = idle_units_off
+        n = spec.n_units
+        self.state: List[UnitState] = [UnitState.OFF] * n
+        self.owner: List[Optional[str]] = [None] * n
+        self._ready_t: List[float] = [0.0] * n
+        self._groups = spec.groups()
+        # accounting (cluster level; shared power charged once)
+        self.energy_j = 0.0
+        self.served = 0.0
+        self.tenant_energy_j: Dict[str, float] = {}
+        self.last_power_w = 0.0
+        # cluster-level per-tick history
+        self.t_hist: List[float] = []
+        self.power_hist: List[float] = []
+        self.active_hist: List[int] = []
+        self.util_hist: List[float] = []
+        self.offered_hist: List[float] = []
+        self.served_hist: List[float] = []
+
+    # -- queries -----------------------------------------------------------
+    def active(self, tenant: str) -> int:
+        return sum(1 for u in range(self.spec.n_units)
+                   if self.owner[u] == tenant
+                   and self.state[u] is UnitState.ACTIVE)
+
+    def waking(self, tenant: str) -> int:
+        return sum(1 for u in range(self.spec.n_units)
+                   if self.owner[u] == tenant
+                   and self.state[u] is UnitState.WAKING)
+
+    def owned(self, tenant: str) -> int:
+        return sum(1 for u in range(self.spec.n_units)
+                   if self.owner[u] == tenant
+                   and self.state[u] is not UnitState.OFF)
+
+    def units_of(self, tenant: str) -> List[int]:
+        return [u for u in range(self.spec.n_units)
+                if self.owner[u] == tenant
+                and self.state[u] is not UnitState.OFF]
+
+    def n_allocated(self) -> int:
+        return sum(1 for s in self.state if s is not UnitState.OFF)
+
+    def n_active(self) -> int:
+        return sum(1 for s in self.state if s is UnitState.ACTIVE)
+
+    def free_units(self) -> int:
+        return self.spec.n_units - self.n_allocated()
+
+    # -- placement ---------------------------------------------------------
+    def _group_key(self, gi: int, tenant: str) -> Tuple[int, int, int, int]:
+        g = self._groups[gi]
+        mine = sum(1 for u in g if self.owner[u] == tenant
+                   and self.state[u] is not UnitState.OFF)
+        free = sum(1 for u in g if self.state[u] is UnitState.OFF)
+        # pack into groups the tenant already occupies, then wholly-free
+        # groups, then whatever has the most room
+        return (0 if mine else 1, 0 if free == len(g) else 1, -free, gi)
+
+    def _pick_units(self, tenant: str, k: int) -> List[int]:
+        if k <= 0:
+            return []
+        out: List[int] = []
+        for gi in sorted(range(len(self._groups)),
+                         key=lambda gi: self._group_key(gi, tenant)):
+            for u in self._groups[gi]:
+                if self.state[u] is UnitState.OFF:
+                    out.append(u)
+                    if len(out) == k:
+                        return out
+        return out
+
+    # -- transitions -------------------------------------------------------
+    def wake(self, tenant: str, k: int, ready_t: float) -> int:
+        """Claim up to ``k`` free units for ``tenant``; they become active
+        once ``advance`` passes ``ready_t``. Returns the claimed count."""
+        picked = self._pick_units(tenant, k)
+        for u in picked:
+            self.state[u] = UnitState.WAKING
+            self.owner[u] = tenant
+            self._ready_t[u] = ready_t
+        return len(picked)
+
+    def release(self, tenant: str, k: int) -> int:
+        """Power off up to ``k`` of the tenant's *active* units, vacating
+        its least-occupied groups first so allocations stay packed."""
+        if k <= 0:
+            return 0
+        mine = [u for u in range(self.spec.n_units)
+                if self.owner[u] == tenant
+                and self.state[u] is UnitState.ACTIVE]
+        occupancy = {gi: 0 for gi in range(len(self._groups))}
+        for u in mine:
+            occupancy[u // self.spec.group_size] += 1
+        mine.sort(key=lambda u: (occupancy[u // self.spec.group_size], -u))
+        released = 0
+        for u in mine[:k]:
+            self.state[u] = UnitState.OFF
+            self.owner[u] = None
+            released += 1
+        return released
+
+    def advance(self, t: float, dt_s: float,
+                tenant: Optional[str] = None) -> int:
+        """Waking units whose ready time falls within this tick become
+        active (fluid model: a unit waking within the tick serves it)."""
+        woke = 0
+        for u in range(self.spec.n_units):
+            if self.state[u] is UnitState.WAKING \
+                    and (tenant is None or self.owner[u] == tenant) \
+                    and self._ready_t[u] <= t + dt_s:
+                self.state[u] = UnitState.ACTIVE
+                woke += 1
+        return woke
+
+    def force_active(self, tenant: str, k: int) -> None:
+        """Set the tenant's active-unit count to exactly ``k``, skipping
+        wake latency (initial floors, tests, compatibility setters)."""
+        cur = self.active(tenant)
+        if cur > k:
+            self.release(tenant, cur - k)
+        elif cur < k:
+            for u in self._pick_units(tenant, k - cur):
+                self.state[u] = UnitState.ACTIVE
+                self.owner[u] = tenant
+
+    # -- accounting --------------------------------------------------------
+    def charge(self, t: float, dt_s: float, utils: Dict[str, float],
+               extra: Optional[Dict[str, int]] = None,
+               offered: float = 0.0, served: float = 0.0,
+               ) -> Tuple[float, Dict[str, float], Dict[str, int]]:
+        """Integrate one tick of cluster power: shared power once, each
+        tenant's powered units (allocation + borrowed/overflow ``extra``)
+        at that tenant's utilization, the rest at the off/idle floor.
+
+        Returns ``(total_power_w, per_tenant_power_w, per_tenant_powered)``.
+        """
+        extra = extra or {}
+        n = self.spec.n_units
+        powered: Dict[str, int] = {
+            name: self.active(name) + max(0, int(extra.get(name, 0)))
+            for name in utils}
+        total_powered = sum(powered.values())
+        if total_powered > n:
+            # can't power more than n units: trim the extras, largest first
+            over = total_powered - n
+            for name in sorted(powered, key=lambda m: -powered[m]):
+                cut = min(over, max(0, powered[name] - self.active(name)))
+                powered[name] -= cut
+                over -= cut
+                if over == 0:
+                    break
+            total_powered = sum(powered.values())
+        unit = self.spec.unit
+        p_tenant: Dict[str, float] = {}
+        p_units = 0.0
+        for name, cnt in powered.items():
+            u = min(max(utils[name], 0.0), 1.0)
+            p = cnt * unit.power(u)
+            p_tenant[name] = p
+            p_units += p
+        rest = n - total_powered
+        p_rest = rest * (unit.p_off if self.idle_units_off else unit.p_idle)
+        total = self.spec.p_shared + p_units + p_rest
+        self.energy_j += total * dt_s
+        self.served += served
+        for name, p in p_tenant.items():
+            self.tenant_energy_j[name] = \
+                self.tenant_energy_j.get(name, 0.0) + p * dt_s
+        self.last_power_w = total
+        cap = float(total_powered)
+        util_agg = sum(powered[m] * min(max(utils[m], 0.0), 1.0)
+                       for m in powered) / cap if cap else 0.0
+        self.t_hist.append(t)
+        self.power_hist.append(total)
+        self.active_hist.append(total_powered)
+        self.util_hist.append(util_agg)
+        self.offered_hist.append(offered)
+        self.served_hist.append(served)
+        return total, p_tenant, powered

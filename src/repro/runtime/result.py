@@ -77,9 +77,12 @@ class StepStats:
     #   in-flight requests outlive a scale-down — the runtime then powers
     #   and charges the overflow units too)
     responses: List[Response] = field(default_factory=list)
-    # activation / power side (from ClusterRuntime.tick)
+    #   per-tick observational view only: the runtime delivers responses
+    #   into Telemetry exactly once, via Workload.drain()
+    # activation / power side (from the runtime tick)
     target_units: int = 0         # policy's activation target
     active_units: int = 0         # units actually powered this tick
+    hedge_units: int = 0          # units borrowed for straggler hedging
     power_w: float = 0.0
     energy_j: float = 0.0         # cumulative runtime energy after the tick
 
@@ -107,6 +110,13 @@ class Telemetry:
     energy_j: float = 0.0
     responses: List[Response] = field(default_factory=list)
     workload: Dict[str, Any] = field(default_factory=dict)
+    # multi-tenant views (paper §2/§4-5: one cluster, many workloads).
+    # For a per-tenant Telemetry, `tenant` is the tenant name and
+    # `energy_j` holds only the tenant-attributable unit energy (shared
+    # infrastructure power is charged once, at the cluster roll-up).
+    tenant: str = ""
+    unit_energy_j: float = 0.0    # sum of tenant-attributed unit energy
+    per_tenant: Dict[str, "Telemetry"] = field(default_factory=dict)
 
     # ----- derived ---------------------------------------------------------
     @property
@@ -152,6 +162,7 @@ class Telemetry:
             "p50_latency_s": self.p50_latency_s,
             "p99_latency_s": self.p99_latency_s,
             "scale_events": self.scale_events,
+            "hedged": self.hedged,
         }
 
 

@@ -8,8 +8,17 @@ the same four calls:
   * ``step(n_active_units, dt_s, t) -> StepStats`` — advance one tick
     using *at most* the granted concurrency (this is where the activation
     target actually gates execution);
-  * ``drain() -> [Response]``    — pop completed responses;
+  * ``drain() -> [Response]``    — pop completed responses. This is the
+    **single delivery channel**: every response is returned by drain()
+    exactly once, and the runtime folds exactly that into
+    ``Telemetry.responses``. ``StepStats.responses`` is an observational
+    per-tick view of the same objects, never a second delivery path;
   * ``describe() -> dict``       — static metadata (name, unit_rate, ...).
+
+Workloads may additionally expose ``oldest_waiting_s(t) -> float | None``
+(the queue-age of the oldest waiting request); the runtime uses it for
+straggler hedging (paper §5.2) — a tenant whose oldest request has waited
+past ``ScalePolicy.hedge_after_s`` borrows an extra unit for the tick.
 
 Adapters:
 
@@ -24,7 +33,9 @@ Adapters:
 from __future__ import annotations
 
 import itertools
-from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
+from collections import deque
+from typing import (Any, Deque, Dict, List, Optional, Protocol,
+                    runtime_checkable)
 
 from repro.runtime.result import Request, Response, StepStats
 
@@ -64,7 +75,8 @@ class QueueWorkload:
         self.name = name
         self.kind = kind
         self._rid = itertools.count()
-        self._queue: List[List[Any]] = []   # [request, remaining_cost]
+        # O(1) FIFO: head pops are popleft, not list.pop(0)
+        self._queue: Deque[List[Any]] = deque()  # [request, remaining_cost]
         self._completed: List[Response] = []
 
     # -- protocol ----------------------------------------------------------
@@ -88,7 +100,7 @@ class QueueWorkload:
             used += take
             touched += 1
             if take >= remaining - 1e-12:
-                self._queue.pop(0)
+                self._queue.popleft()
                 # finish inside the tick, at the fluid completion instant
                 # (floored at one service time past arrival — latency for
                 # fluid workloads has tick resolution, no better)
@@ -120,6 +132,14 @@ class QueueWorkload:
     def describe(self) -> Dict[str, Any]:
         return {"name": self.name, "kind": self.kind,
                 "unit_rate": self.unit_rate}
+
+    def oldest_waiting_s(self, t: float) -> Optional[float]:
+        """Queue-age of the head request (None when the queue is empty);
+        feeds the runtime's straggler-hedging decision."""
+        if not self._queue:
+            return None
+        arrival = self._queue[0][0].arrival_s
+        return max(0.0, t - (arrival or 0.0))
 
     # -- helpers -----------------------------------------------------------
     @property
@@ -220,7 +240,7 @@ class LMServingWorkload:
         self.max_new_tokens = max_new_tokens
         self._requests: Dict[int, Request] = {}
         self._completed: List[Response] = []
-        self._fin_cursor = 0
+        self._tokens_done = 0
 
     # -- protocol ----------------------------------------------------------
     def submit(self, request: Request) -> int:
@@ -244,9 +264,11 @@ class LMServingWorkload:
         units_used = -(-live // self.slots_per_unit)  # ceil
         powered = max(max(0, n_active_units), units_used)
         responses: List[Response] = []
-        new_finished = self.batcher.finished[self._fin_cursor:]
-        self._fin_cursor = len(self.batcher.finished)
-        for breq in new_finished:
+        # consume the batcher's finished list destructively so a long-
+        # running serving loop doesn't retain every completed request
+        done, self.batcher.finished = self.batcher.finished, []
+        for breq in done:
+            self._tokens_done += len(breq.generated)
             req = self._requests.pop(breq.rid,
                                      Request(arrival_s=t, rid=breq.rid))
             responses.append(Response(
@@ -270,6 +292,21 @@ class LMServingWorkload:
         out, self._completed = self._completed, []
         return out
 
+    def oldest_waiting_s(self, t: float) -> Optional[float]:
+        """Queue-age of the oldest request still waiting for a decode
+        slot (None when none queue); feeds straggler hedging."""
+        if not self.batcher.queue:
+            return None
+        src = self._requests.get(self.batcher.queue[0].rid)
+        if src is None or src.arrival_s is None:
+            return None
+        return max(0.0, t - src.arrival_s)
+
+    def max_useful_units(self) -> int:
+        """Beyond this many units the slot cap binds — granting (or
+        hedging) more adds no concurrency, only powered silicon."""
+        return -(-self.batcher.slots // self.slots_per_unit)
+
     def describe(self) -> Dict[str, Any]:
         return {"name": f"lm-serving/{self.engine.cfg.name}",
                 "kind": "lm-serving",
@@ -285,5 +322,7 @@ class LMServingWorkload:
 
     @property
     def tokens_generated(self) -> int:
-        return sum(len(r.generated) for r in self.batcher.finished) + sum(
-            len(r.generated) for r in self.batcher.active if r is not None)
+        return self._tokens_done \
+            + sum(len(r.generated) for r in self.batcher.finished) \
+            + sum(len(r.generated) for r in self.batcher.active
+                  if r is not None)

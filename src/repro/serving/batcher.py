@@ -8,8 +8,9 @@ cache is inserted into the batched cache at the slot index.
 from __future__ import annotations
 
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +35,7 @@ class ContinuousBatcher:
         self.engine = engine
         self.cfg = engine.cfg
         self.slots = slots
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()   # O(1) FIFO admission
         self.active: List[Optional[Request]] = [None] * slots
         self.finished: List[Request] = []
         self.positions = np.zeros(slots, np.int64)
@@ -79,7 +80,7 @@ class ContinuousBatcher:
             if self.active[slot] is not None:
                 continue
             busy += 1
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             batch = {"tokens": jnp.asarray(req.prompt[None, :])}
             logits, cache1 = self.engine.prefill_fn(self.engine.params,
                                                     batch)

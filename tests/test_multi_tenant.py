@@ -1,0 +1,248 @@
+"""Multi-tenant unit allocation: UnitPool state machine + group-aligned
+placement, weighted-fair arbitration with min_units floors, per-tenant
+telemetry, and the single shared power integral (p_shared charged once)."""
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterSpec, UnitSpec, soc_cluster
+from repro.core.scheduler import diurnal_trace
+from repro.runtime import (ClusterRuntime, MultiTenantRuntime, QueueWorkload,
+                           ScalePolicy, Tenant, Telemetry, UnitPool,
+                           UnitState, weighted_fair_share)
+
+
+def tiny_cluster(n_units: int = 8, group_size: int = 1) -> ClusterSpec:
+    return ClusterSpec(
+        name="tiny",
+        unit=UnitSpec("u", p_off=0.0, p_idle=1.0, p_peak=10.0, gamma=1.0),
+        n_units=n_units, p_shared=5.0, group_size=group_size)
+
+
+# ---------------------------------------------------------------------------
+# UnitPool state machine.
+# ---------------------------------------------------------------------------
+def test_pool_wake_release_lifecycle():
+    pool = UnitPool(tiny_cluster(4))
+    assert pool.free_units() == 4
+    assert pool.wake("a", 2, ready_t=3.0) == 2
+    assert pool.waking("a") == 2 and pool.active("a") == 0
+    pool.advance(0.0, 1.0)                      # ready 3.0 > 1.0: still waking
+    assert pool.active("a") == 0
+    pool.advance(2.5, 1.0)                      # 3.0 <= 3.5: wakes
+    assert pool.active("a") == 2 and pool.waking("a") == 0
+    assert pool.release("a", 1) == 1
+    assert pool.active("a") == 1 and pool.free_units() == 3
+
+
+def test_pool_wake_capped_by_free_units():
+    pool = UnitPool(tiny_cluster(4))
+    pool.force_active("a", 3)
+    assert pool.wake("b", 5, ready_t=0.0) == 1  # only one unit left
+    pool.advance(0.0, 1.0)
+    assert pool.active("b") == 1
+    assert pool.free_units() == 0
+
+
+def test_pool_group_aligned_placement():
+    pool = UnitPool(soc_cluster())              # 60 units, 5 per PCB
+    pool.wake("a", 7, ready_t=0.0)
+    pool.advance(0.0, 1.0)
+    groups_a = {u // 5 for u in pool.units_of("a")}
+    assert len(groups_a) == 2                   # 7 units span exactly 2 PCBs
+    pool.wake("b", 5, ready_t=0.0)
+    pool.advance(0.0, 1.0)
+    groups_b = {u // 5 for u in pool.units_of("b")}
+    assert len(groups_b) == 1                   # whole free PCB
+    assert groups_a.isdisjoint(groups_b)
+    # growth packs into the tenant's own partial group first
+    pool.wake("a", 3, ready_t=0.0)
+    pool.advance(0.0, 1.0)
+    assert {u // 5 for u in pool.units_of("a")} == groups_a
+
+
+def test_pool_release_vacates_least_occupied_groups():
+    pool = UnitPool(soc_cluster())
+    pool.force_active("a", 7)                   # groups: 5 + 2
+    pool.release("a", 2)                        # drops the 2-unit straggler
+    assert {u // 5 for u in pool.units_of("a")} == {0}
+    assert pool.active("a") == 5
+
+
+def test_pool_charge_matches_spec_power_single_tenant():
+    spec = tiny_cluster(8)
+    pool = UnitPool(spec, idle_units_off=True)
+    pool.force_active("a", 3)
+    total, per, powered = pool.charge(0.0, 1.0, {"a": 0.5})
+    assert powered["a"] == 3
+    assert total == pytest.approx(spec.power(3, 0.5, idle_units_off=True))
+    assert per["a"] == pytest.approx(3 * spec.unit.power(0.5))
+    assert pool.energy_j == pytest.approx(total)
+    assert pool.tenant_energy_j["a"] == pytest.approx(per["a"])
+
+
+def test_pool_charge_shared_power_once():
+    spec = tiny_cluster(8)
+    pool = UnitPool(spec, idle_units_off=True)
+    pool.force_active("a", 2)
+    pool.force_active("b", 3)
+    total, per, _ = pool.charge(0.0, 1.0, {"a": 1.0, "b": 0.5})
+    expect = spec.p_shared + 2 * spec.unit.power(1.0) \
+        + 3 * spec.unit.power(0.5)
+    assert total == pytest.approx(expect)       # p_shared exactly once
+    assert sum(per.values()) == pytest.approx(expect - spec.p_shared)
+
+
+def test_pool_state_enum():
+    pool = UnitPool(tiny_cluster(2))
+    assert pool.state[0] is UnitState.OFF
+    pool.wake("a", 1, ready_t=9.0)
+    assert pool.state[pool.units_of("a")[0]] is UnitState.WAKING
+
+
+# ---------------------------------------------------------------------------
+# Weighted fair share arbitration.
+# ---------------------------------------------------------------------------
+def test_arbitration_no_contention_grants_demand():
+    grants = weighted_fair_share({"a": 3, "b": 4}, {"a": 1, "b": 1},
+                                 {"a": 1.0, "b": 1.0}, capacity=60)
+    assert grants == {"a": 3, "b": 4}
+
+
+def test_arbitration_weighted_with_floors():
+    grants = weighted_fair_share({"a": 10, "b": 10}, {"a": 2, "b": 2},
+                                 {"a": 3.0, "b": 1.0}, capacity=8)
+    assert sum(grants.values()) == 8
+    assert grants == {"a": 5, "b": 3}           # extra 4 split 3:1
+    # floors always respected
+    assert grants["a"] >= 2 and grants["b"] >= 2
+
+
+def test_arbitration_grants_whole_groups_only():
+    """A tensor-parallel tenant is never handed a partial collaboration
+    group under contention."""
+    grants = weighted_fair_share({"tp": 10, "solo": 10},
+                                 {"tp": 0, "solo": 0},
+                                 {"tp": 1.0, "solo": 1.0},
+                                 capacity=12, groups={"tp": 5, "solo": 1})
+    assert grants["tp"] % 5 == 0 and grants["tp"] > 0
+    assert sum(grants.values()) == 12
+    # capacity too small for even one group: the TP tenant gets nothing
+    grants = weighted_fair_share({"tp": 10}, {"tp": 0}, {"tp": 1.0},
+                                 capacity=3, groups={"tp": 5})
+    assert grants["tp"] == 0
+
+
+def test_arbitration_floor_capped_by_demand():
+    grants = weighted_fair_share({"a": 1, "b": 10}, {"a": 4, "b": 4},
+                                 {"a": 1.0, "b": 1.0}, capacity=6)
+    assert grants["a"] == 1                     # never granted beyond demand
+    assert grants["b"] == 5
+
+
+def test_runtime_asserts_floor_overcommit():
+    wl = lambda: QueueWorkload(unit_rate=1.0)   # noqa: E731
+    with pytest.raises(AssertionError, match="floors"):
+        MultiTenantRuntime(tiny_cluster(4), [
+            Tenant("a", wl(), policy=ScalePolicy(min_units=3)),
+            Tenant("b", wl(), policy=ScalePolicy(min_units=3)),
+        ])
+
+
+# ---------------------------------------------------------------------------
+# Colocated runtime: invariants + per-tenant telemetry.
+# ---------------------------------------------------------------------------
+def _three_tenant_run():
+    spec = soc_cluster()
+    rates = {"a": 5.0, "b": 8.0, "c": 3.0}
+    tenants = [Tenant(m, QueueWorkload(r, name=m),
+                      policy=ScalePolicy(cooldown_s=120.0))
+               for m, r in rates.items()]
+    rt = MultiTenantRuntime(spec, tenants, dt_s=60.0)
+    n = 120
+    traces = {
+        m: np.roll(diurnal_trace(peak_rps=r * spec.n_units * 0.4, hours=2,
+                                 dt_s=60.0, seed=i), i * n // 3)
+        for i, (m, r) in enumerate(rates.items())}
+    tel = rt.play_traces(traces, dt_s=60.0)
+    return spec, rt, tel
+
+
+def test_multi_tenant_capacity_and_energy_invariants():
+    spec, rt, tel = _three_tenant_run()
+    per = tel.per_tenant
+    stacked = np.vstack([per[m].active_units for m in per])
+    # sum of per-tenant active units never exceeds the pool, every tick
+    assert np.all(stacked.sum(axis=0) <= spec.n_units)
+    assert np.array_equal(stacked.sum(axis=0), tel.active_units)
+    # cluster energy is the single pool-level power integral
+    assert tel.energy_j == pytest.approx(float(np.sum(tel.power_w) * 60.0))
+    # per-tick decomposition: total = p_shared (once) + per-tenant + rest
+    rest = spec.n_units - tel.active_units
+    p_rest = rest * spec.unit.p_off
+    tenant_p = np.sum(np.vstack([per[m].power_w for m in per]), axis=0)
+    assert np.allclose(tel.power_w, spec.p_shared + tenant_p + p_rest)
+    # attributed energy sums below cluster energy (shared not in tenants)
+    assert sum(p.energy_j for p in per.values()) < tel.energy_j
+    assert tel.unit_energy_j == pytest.approx(
+        sum(p.energy_j for p in per.values()))
+    # per-tenant served roll up to the cluster count
+    assert tel.served == pytest.approx(sum(p.served for p in per.values()))
+    for m, p in per.items():
+        assert isinstance(p, Telemetry) and p.tenant == m
+        assert p.served > 0 and p.energy_j > 0
+
+
+def test_colocation_cheaper_than_dedicated_clusters():
+    spec, rt, tel = _three_tenant_run()
+    rates = {"a": 5.0, "b": 8.0, "c": 3.0}
+    n = 120
+    dedicated = 0.0
+    for i, (m, r) in enumerate(rates.items()):
+        trace = np.roll(diurnal_trace(peak_rps=r * spec.n_units * 0.4,
+                                      hours=2, dt_s=60.0, seed=i),
+                        i * n // 3)
+        one = ClusterRuntime(soc_cluster(), QueueWorkload(r, name=m),
+                             policy=ScalePolicy(cooldown_s=120.0))
+        dedicated += one.play_trace(trace, dt_s=60.0).energy_j
+    assert tel.energy_j < dedicated             # p_shared charged once
+
+
+def test_contention_respects_weights_and_floors():
+    """Two tenants who each want the whole cluster split it by weight."""
+    spec = tiny_cluster(12)
+    mk = lambda m: QueueWorkload(1.0, name=m)   # noqa: E731
+    rt = MultiTenantRuntime(spec, [
+        Tenant("heavy", mk("heavy"), weight=2.0,
+               policy=ScalePolicy(min_units=2, cooldown_s=0.0)),
+        Tenant("light", mk("light"), weight=1.0,
+               policy=ScalePolicy(min_units=2, cooldown_s=0.0)),
+    ], dt_s=1.0)
+    for t in range(30):
+        rt.submit("heavy", cost=40.0, count=40.0)
+        rt.submit("light", cost=40.0, count=40.0)
+        stats = rt.tick_all()
+        total = sum(s.active_units for s in stats.values())
+        assert total <= spec.n_units
+    # steady state: demand is 12+ each; weighted shares ~8 vs ~4
+    heavy = rt.governor_of("heavy").active_units
+    light = rt.governor_of("light").active_units
+    assert heavy + light <= spec.n_units
+    assert heavy > light >= 2
+    assert heavy == pytest.approx(8, abs=1)
+
+
+def test_single_tenant_facade_unchanged_semantics():
+    """ClusterRuntime (one tenant) reports cluster-level power/energy and
+    matches a hand-built one-tenant MultiTenantRuntime."""
+    spec = tiny_cluster(8)
+    trace = np.full(30, 4.0)
+    a = ClusterRuntime(spec, QueueWorkload(2.0),
+                       policy=ScalePolicy(cooldown_s=5.0))
+    tel_a = a.play_trace(trace, dt_s=1.0)
+    b = MultiTenantRuntime(
+        spec, [Tenant("only", QueueWorkload(2.0),
+                      policy=ScalePolicy(cooldown_s=5.0))], dt_s=1.0)
+    tel_b = b.play_traces({"only": trace}, dt_s=1.0)
+    assert tel_a.energy_j == pytest.approx(tel_b.energy_j)
+    assert tel_a.served == pytest.approx(tel_b.served)
+    np.testing.assert_allclose(tel_a.power_w, tel_b.power_w)

@@ -210,10 +210,133 @@ def test_group_units_activates_whole_groups():
     assert gov.target_units(1e9) == 60          # cap at whole groups
 
 
-def test_hedge_after_s_warns_on_runtime_path():
-    with pytest.warns(RuntimeWarning, match="hedge_after_s"):
+def test_hedge_after_s_accepted_silently():
+    """hedge_after_s is honored by the runtime now — the old 'ignored'
+    RuntimeWarning must be gone."""
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
         ClusterRuntime(tiny_cluster(4), QueueWorkload(unit_rate=1.0),
                        policy=ScalePolicy(hedge_after_s=1.0))
+
+
+# ---------------------------------------------------------------------------
+# Runtime-level straggler hedging (paper §5.2).
+# ---------------------------------------------------------------------------
+def test_runtime_hedging_borrows_and_charges():
+    """A request stuck past hedge_after_s borrows one free unit for the
+    tick, and the borrowed unit's energy is charged."""
+    spec = tiny_cluster(4)
+    wl = QueueWorkload(unit_rate=1.0)
+    rt = ClusterRuntime(spec, wl,
+                        policy=ScalePolicy(min_units=1, cooldown_s=1e9,
+                                           hedge_after_s=2.0))
+    rt.submit(cost=10.0)                  # arrives at t=0, saturates 1 unit
+    assert rt.tick().hedge_units == 0     # t=0: age 0
+    rt.tick()                             # t=1
+    rt.tick()                             # t=2: age 2, not > 2
+    stats = rt.tick()                     # t=3: age 3 > 2 -> hedge
+    assert stats.hedge_units == 1
+    assert stats.active_units == 2        # 1 granted + 1 borrowed
+    assert stats.power_w == pytest.approx(
+        spec.power(2, stats.utilization, idle_units_off=True))
+    tel = rt.telemetry()
+    assert tel.hedged >= 1
+
+
+def test_hedged_run_completes_sooner_and_cheaper_tail():
+    def run_one(hedge):
+        wl = QueueWorkload(unit_rate=1.0)
+        rt = ClusterRuntime(
+            tiny_cluster(8), wl,
+            policy=ScalePolicy(min_units=1, cooldown_s=1e9,
+                               hedge_after_s=2.0 if hedge else None))
+        rt.submit(cost=12.0)
+        return rt.run(max_ticks=200)
+    base, hedged = run_one(False), run_one(True)
+    assert hedged.hedged > 0 and base.hedged == 0
+    assert hedged.p99_latency_s < base.p99_latency_s
+    assert max(r.finish_s for r in hedged.responses) < \
+        max(r.finish_s for r in base.responses)
+    # the borrowed units were powered: mean active is higher while running
+    assert hedged.mean_active > 1.0
+
+
+def test_oldest_waiting_s_queue_workload():
+    wl = QueueWorkload(unit_rate=1.0)
+    assert wl.oldest_waiting_s(5.0) is None
+    wl.submit(Request(cost=3.0, arrival_s=1.0))
+    assert wl.oldest_waiting_s(5.0) == pytest.approx(4.0)
+
+
+def test_oldest_waiting_s_lm_workload(lm_workload_factory):
+    wl = lm_workload_factory(slots=2, max_new_tokens=3)
+    assert wl.oldest_waiting_s(1.0) is None
+    wl.submit(Request(payload=np.ones(4, np.int32), arrival_s=0.0))
+    assert wl.oldest_waiting_s(3.0) == pytest.approx(3.0)
+
+
+def test_no_hedge_when_slot_cap_binds(lm_workload_factory):
+    """Borrowing a unit beyond the batcher's slot cap adds no capacity,
+    so the runtime must not hedge (or charge) it."""
+    wl = lm_workload_factory(slots=2, max_new_tokens=8)
+    assert wl.max_useful_units() == 2
+    rt = ClusterRuntime(tiny_cluster(8), wl, unit_rate=1.0,
+                        policy=ScalePolicy(min_units=2, cooldown_s=1e9,
+                                           hedge_after_s=1.0))
+    for _ in range(6):
+        rt.submit(np.ones(4, np.int32))
+    for _ in range(4):
+        stats = rt.tick()
+        assert stats.hedge_units == 0       # slots already saturated
+        assert stats.active_units <= 2
+    assert rt.telemetry().hedged == 0
+
+
+# ---------------------------------------------------------------------------
+# Responses reach Telemetry exactly once (drain() is the delivery channel).
+# ---------------------------------------------------------------------------
+def test_responses_delivered_exactly_once_run():
+    wl = QueueWorkload(unit_rate=5.0)
+    rt = ClusterRuntime(tiny_cluster(8), wl)
+    rids = [rt.submit(cost=1.0) for _ in range(20)]
+    tel = rt.run()
+    got = [r.rid for r in tel.responses]
+    assert sorted(got) == sorted(rids)          # all delivered, no dups
+    assert wl.drain() == []                     # nothing left behind
+
+
+def test_responses_delivered_exactly_once_play_trace():
+    wl = QueueWorkload(unit_rate=10.0)
+    rt = ClusterRuntime(tiny_cluster(8), wl)
+    tel = rt.play_trace(np.full(20, 3.0), dt_s=1.0)
+    rids = [r.rid for r in tel.responses]
+    assert len(rids) == len(set(rids))
+    assert len(rids) == 20                      # one aggregate per tick
+    assert wl.drain() == []
+
+
+# ---------------------------------------------------------------------------
+# Group-quantization edge cases.
+# ---------------------------------------------------------------------------
+def test_quantize_group_not_dividing_cluster():
+    from repro.runtime import UnitGovernor
+    gov = UnitGovernor(soc_cluster(), 1.0, group_units=7)   # 60 % 7 != 0
+    assert gov._quantize(1) == 7                # floor: one whole group
+    assert gov._quantize(8) == 14
+    assert gov._quantize(58) == 56              # 63 > 60 -> whole groups
+    assert gov.target_units(1e9) == 56          # never a partial group
+    gov8 = UnitGovernor(tiny_cluster(8), 1.0, group_units=5)
+    assert gov8._quantize(6) == 5               # 10 > 8 -> one group of 5
+    assert gov8._quantize(2) == 5
+
+
+def test_quantize_min_units_below_one_group():
+    from repro.runtime import UnitGovernor
+    gov = UnitGovernor(soc_cluster(), 1.0,
+                       policy=ScalePolicy(min_units=2), group_units=5)
+    assert gov.target_units(0.0) == 5           # floor rounds up to a group
+    assert gov.active_units == 5                # initial activation too
 
 
 def test_fluid_latency_not_inflated_when_unloaded():

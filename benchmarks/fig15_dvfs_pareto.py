@@ -1,0 +1,151 @@
+"""Fig 15 (extension) — the DVFS energy/latency Pareto and thermal
+throttling on the SoC Cluster.
+
+The paper's energy-proportionality story (§5.2) is one-dimensional:
+*how many* SoCs are powered. Real SD865s add a second axis — *how fast*
+each runs — and a 2U thermal envelope that punishes ignoring it. This
+benchmark sweeps the ``repro.power`` frequency governors over the
+calibrated :func:`~repro.power.opp.sd865_opp_table`:
+
+  1. **Low-load energy** (≤30 % load): the ``schedutil`` governor
+     (lowest-energy OPP × unit-count pair meeting demand with headroom)
+     must beat binary per-unit gating on energy at equal p95 latency —
+     wide-and-slow beats narrow-and-fast once f·V² savings outweigh the
+     extra idle floors.
+  2. **Sustained peak load**: with the RC thermal network attached, the
+     ``fixed``-max governor trips the 95 °C latch and its throughput
+     sags; the ``thermal-aware`` governor holds the sustainable OPP and
+     stays flat (and above the throttler's steady state).
+  3. **Pareto sweep**: every governor × load point, as
+     (energy, p95-latency) pairs.
+  4. **Proportionality**: the frequency-resolved load→power curve must
+     not be less proportional than the binary one.
+
+Asserts (acceptance criteria) are enforced inline, like fig14.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from benchmarks.common import emit, header
+from repro.core.cluster import soc_cluster
+from repro.core.energy import dvfs_proportionality_index, proportionality_index
+from repro.power import (FixedFreqGovernor, FreqGovernor, RaceToIdleGovernor,
+                         SchedutilGovernor, ThermalAwareGovernor,
+                         ThermalParams, sd865_opp_table)
+from repro.runtime import ClusterRuntime, QueueWorkload, ScalePolicy
+
+UNIT_RATE = 10.0          # req/s one SoC sustains at the nominal OPP
+DT_S = 1.0
+WARMUP_TICKS = 30         # governor window + wake ramp settle time
+
+
+def _run_load(governor: Optional[FreqGovernor], load_frac: float,
+              ticks: int = 300, with_table: bool = True
+              ) -> Tuple[float, float]:
+    """Steady offered load at ``load_frac`` of peak; returns
+    (energy_j, p95_latency_s) over the post-warmup window."""
+    spec = soc_cluster()
+    rt = ClusterRuntime(
+        spec, QueueWorkload(unit_rate=UNIT_RATE),
+        policy=ScalePolicy(cooldown_s=30.0, freq_governor=governor),
+        opp_table=sd865_opp_table() if with_table else None, dt_s=DT_S)
+    trace = np.full(ticks, load_frac * UNIT_RATE * spec.n_units)
+    tel = rt.play_trace(trace, dt_s=DT_S)
+    lats = [r.latency_s for r in tel.responses
+            if r.arrival_s >= WARMUP_TICKS * DT_S]
+    p95 = float(np.percentile(lats, 95)) if lats else 0.0
+    # steady-state energy: skip the cold-start ramp so governors are
+    # compared on their operating point, not their warmup
+    energy = float(np.sum(tel.power_w[WARMUP_TICKS:]) * DT_S)
+    return energy, p95
+
+
+def _run_sustained(governor: FreqGovernor, ticks: int = 900
+                   ) -> Tuple[np.ndarray, ClusterRuntime]:
+    """Backlog-saturated run at full activation with the thermal model:
+    per-tick work_done isolates the frequency axis."""
+    spec = soc_cluster()
+    rt = ClusterRuntime(
+        spec, QueueWorkload(unit_rate=UNIT_RATE),
+        policy=ScalePolicy(min_units=spec.n_units, cooldown_s=1e9,
+                           freq_governor=governor),
+        opp_table=sd865_opp_table(), thermal=ThermalParams(), dt_s=DT_S)
+    offered = 2.0 * UNIT_RATE * spec.n_units       # 2x oversubscribed
+    work = np.empty(ticks)
+    for i in range(ticks):
+        rt.submit(cost=offered * DT_S, count=offered * DT_S)
+        work[i] = rt.tick().work_done
+    return work, rt
+
+
+def run() -> None:
+    header("fig15: DVFS governors — energy/latency Pareto and thermal "
+           "throttling (60x SD865)")
+    spec = soc_cluster()
+    table = sd865_opp_table()
+
+    # --- 1. schedutil vs binary gating at light load ----------------------
+    e_bin, p95_bin = _run_load(None, 0.30, with_table=False)
+    e_sched, p95_sched = _run_load(SchedutilGovernor(), 0.30)
+    emit("fig15/low_load_30pct", 0.0,
+         f"binary_j={e_bin:.0f};schedutil_j={e_sched:.0f};"
+         f"saving={1 - e_sched / e_bin:.0%};"
+         f"p95_binary_s={p95_bin:.2f};p95_schedutil_s={p95_sched:.2f}")
+    assert e_sched < e_bin, \
+        "schedutil must beat binary gating on energy at <=30% load"
+    assert abs(p95_sched - p95_bin) <= 0.15 * max(p95_bin, 1e-9), \
+        "schedutil's energy win must come at equal p95 latency"
+
+    # --- 2. sustained peak load: throttling sag vs thermal headroom -------
+    w_fixed, rt_fixed = _run_sustained(FixedFreqGovernor())
+    w_aware, rt_aware = _run_sustained(ThermalAwareGovernor())
+    n = len(w_fixed)
+    win = n // 6
+    sag_fixed = float(w_fixed[-win:].mean() / w_fixed[:win].mean())
+    sag_aware = float(w_aware[-win:].mean() / w_aware[:win].mean())
+    emit("fig15/sustained_throttling", 0.0,
+         f"fixed_late_over_early={sag_fixed:.2f};"
+         f"aware_late_over_early={sag_aware:.2f};"
+         f"fixed_peak_c={max(rt_fixed.pool.max_temp_hist):.0f};"
+         f"aware_peak_c={max(rt_aware.pool.max_temp_hist):.0f};"
+         f"fixed_throttled_units={max(rt_fixed.pool.throttled_hist)};"
+         f"aware_throttled_units={max(rt_aware.pool.throttled_hist)}")
+    # (a) the throttling model bites the fixed-max governor...
+    assert sag_fixed < 0.9, "fixed-max must sag under sustained peak load"
+    assert max(rt_fixed.pool.throttled_hist) > 0
+    # ...but not the thermal-aware one (flat, never trips, and its
+    # steady state beats the throttler's)
+    assert sag_aware > 0.95, "thermal-aware throughput must stay flat"
+    assert max(rt_aware.pool.throttled_hist) == 0
+    assert float(w_aware[-win:].mean()) > float(w_fixed[-win:].mean()), \
+        "sustained: thermal-aware steady state must beat the throttler"
+
+    # --- 3. the governor Pareto ------------------------------------------
+    governors = [
+        ("binary", None),
+        ("fixed-max", FixedFreqGovernor()),
+        ("race-to-idle", RaceToIdleGovernor()),
+        ("schedutil", SchedutilGovernor()),
+        ("thermal-aware-schedutil", ThermalAwareGovernor(
+            SchedutilGovernor())),
+    ]
+    for load in (0.1, 0.3, 0.6):
+        for name, gov in governors:
+            e, p95 = _run_load(gov, load, with_table=gov is not None)
+            emit(f"fig15/pareto/{name}@{load:.0%}", 0.0,
+                 f"energy_j={e:.0f};p95_s={p95:.2f}")
+
+    # --- 4. frequency-resolved proportionality ---------------------------
+    pi_bin = proportionality_index(spec)
+    pi_dvfs = dvfs_proportionality_index(spec, table)
+    emit("fig15/proportionality", 0.0,
+         f"binary={pi_bin:.3f};freq_resolved={pi_dvfs:.3f}")
+    assert pi_dvfs >= pi_bin - 1e-9, \
+        "the frequency-resolved power curve must not be less proportional"
+
+
+if __name__ == "__main__":
+    run()

@@ -13,14 +13,17 @@ def main() -> None:
                     help="comma-separated subset (e.g. fig6,table4)")
     ap.add_argument("--fast", action="store_true",
                     help="skip host-executed model measurements")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered suite names and exit")
     args = ap.parse_args()
 
     from benchmarks import (bench_kernels, bench_step, fig6_transcoding,
                             fig7_proportionality, fig8_hw_codec,
                             fig11_dl_serving, fig12_dl_proportionality,
                             fig13_collaborative, fig14_mixed_tenancy,
-                            roofline_table, table2_microbench,
-                            table3_network_bound, table4_tco, table5_tpc)
+                            fig15_dvfs_pareto, roofline_table,
+                            table2_microbench, table3_network_bound,
+                            table4_tco, table5_tpc)
 
     suites = {
         "table2": table2_microbench.run,
@@ -33,12 +36,17 @@ def main() -> None:
         "fig13": (lambda: fig13_collaborative.run(
             executable=not args.fast)),
         "fig14": fig14_mixed_tenancy.run,
+        "fig15": fig15_dvfs_pareto.run,
         "table4": table4_tco.run,
         "table5": table5_tpc.run,
         "kernels": bench_kernels.run,
         "steps": bench_step.run,
         "roofline": roofline_table.run,
     }
+    if args.list:
+        for name in suites:
+            print(name)
+        return
     selected = (args.only.split(",") if args.only else list(suites))
     print("name,us_per_call,derived")
     failures = []

@@ -10,7 +10,7 @@ Core quantities:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -55,16 +55,73 @@ def cluster_power_at_load(spec: ClusterSpec, load_frac: float,
     return active_power
 
 
+def dvfs_power_at_load(spec: ClusterSpec, table, load_frac: float,
+                       unit_capacity: float = 1.0,
+                       idle_units_off: bool = True) -> float:
+    """The frequency-resolved load→power curve: for each operating point
+    in ``table`` (an :class:`repro.power.opp.OPPTable`), size the unit
+    count that meets the load at that point's effective rate and take
+    the cheapest feasible (OPP, count) pair — the schedutil governor's
+    wide-and-slow vs narrow-and-fast search in closed form. At load 1.0
+    only the top OPP with every unit is feasible, so the peak matches
+    :func:`cluster_power_at_load` exactly."""
+    from repro.power.opp import unit_power as opp_unit_power
+    load = min(max(load_frac, 0.0), 1.0)
+    unit = spec.unit
+    p_rest_1 = unit.p_off if idle_units_off else unit.p_idle
+    demand = load * spec.n_units / unit_capacity   # nominal-unit equivalents
+    if demand <= 0.0:
+        return spec.p_shared + spec.n_units * p_rest_1
+    # the binary packing (nominal OPP, full units + one fractional) is
+    # always a feasible configuration, so the resolved curve is pointwise
+    # ≤ the binary one for every unit model (including gamma < 1, where
+    # packing beats spreading utilization evenly)
+    best = cluster_power_at_load(spec, load, unit_capacity=unit_capacity,
+                                 idle_units_off=idle_units_off)
+    for opp in table:
+        n_need = max(1, int(np.ceil(demand / opp.perf_scale - 1e-12)))
+        if n_need > spec.n_units:
+            continue
+        util = demand / (n_need * opp.perf_scale)
+        p = spec.p_shared + n_need * opp_unit_power(unit, util, opp) \
+            + (spec.n_units - n_need) * p_rest_1
+        best = min(best, p)
+    return float(best)
+
+
 def proportionality_index(spec: ClusterSpec, idle_units_off: bool = True,
-                          n: int = 101) -> float:
+                          n: int = 101,
+                          power_fn: Optional[
+                              Callable[[ClusterSpec, float], float]] = None
+                          ) -> float:
     """1 - mean |P(u)/P_peak - u|, in [0, 1]; 1.0 = perfectly proportional.
+
+    ``power_fn(spec, load) -> W`` swaps in an alternative load→power
+    curve (e.g. the frequency-resolved one via
+    :func:`dvfs_proportionality_index`); the default is the binary
+    per-unit-gating curve :func:`cluster_power_at_load`.
     """
+    if power_fn is None:
+        power_fn = lambda s, u: cluster_power_at_load(  # noqa: E731
+            s, u, idle_units_off=idle_units_off)
     us = np.linspace(0.0, 1.0, n)
-    peak = cluster_power_at_load(spec, 1.0, idle_units_off=idle_units_off)
-    ps = np.array([cluster_power_at_load(spec, u,
-                                         idle_units_off=idle_units_off)
-                   for u in us]) / peak
+    peak = power_fn(spec, 1.0)
+    ps = np.array([power_fn(spec, u) for u in us]) / peak
     return float(1.0 - np.mean(np.abs(ps - us)))
+
+
+def dvfs_proportionality_index(spec: ClusterSpec, table,
+                               idle_units_off: bool = True,
+                               n: int = 101) -> float:
+    """Proportionality of the frequency-resolved curve: per-unit gating
+    *plus* DVFS. Never worse than the binary index — the binary
+    configuration (nominal OPP, ceil(load·n) units) is one point in the
+    per-load search space, so the curve is pointwise ≤ the binary one
+    while the peaks coincide."""
+    return proportionality_index(
+        spec, idle_units_off=idle_units_off, n=n,
+        power_fn=lambda s, u: dvfs_power_at_load(
+            s, table, u, idle_units_off=idle_units_off))
 
 
 def dynamic_range(spec: ClusterSpec, idle_units_off: bool = True) -> float:

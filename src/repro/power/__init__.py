@@ -1,0 +1,48 @@
+"""``repro.power`` — thermal-aware DVFS: the frequency axis of the
+cluster power model.
+
+Three pieces, composing with the runtime stack:
+
+  * :mod:`repro.power.opp` — per-unit operating-point tables
+    (frequency → perf-scale, power via P ≈ P_idle + k·f·V²); a
+    calibrated SD865 table plus a generic builder for any
+    :class:`~repro.core.cluster.UnitSpec`;
+  * :mod:`repro.power.thermal` — a discrete-time RC thermal network
+    (SoC die → PCB group → rack inlet, fan curve on the shared rail)
+    with trip-point throttling that forces hot units down the table;
+  * :mod:`repro.power.governor` — pluggable frequency policies
+    (``fixed``, ``race-to-idle``, ``schedutil``, ``thermal-aware``)
+    that compose with the activation-count policy in
+    :class:`~repro.runtime.policy.UnitGovernor`.
+
+Attach a table (and optionally thermal params) to a runtime and pick a
+governor per tenant::
+
+    from repro.power import (sd865_opp_table, ThermalParams,
+                             SchedutilGovernor)
+    from repro.runtime import ClusterRuntime, ScalePolicy
+
+    rt = ClusterRuntime(soc_cluster(), workload,
+                        policy=ScalePolicy(freq_governor=SchedutilGovernor()),
+                        opp_table=sd865_opp_table(),
+                        thermal=ThermalParams())
+
+With no table configured (the default) nothing changes: the power layer
+is strictly additive.
+"""
+from repro.power.governor import (GOVERNORS, FixedFreqGovernor, FreqContext,
+                                  FreqGovernor, RaceToIdleGovernor,
+                                  SchedutilGovernor, ThermalAwareGovernor)
+from repro.power.opp import (OperatingPoint, OPPTable, build_table,
+                             opp_table_for_unit, sd865_opp_table,
+                             single_opp_table, unit_power)
+from repro.power.thermal import ThermalModel, ThermalParams
+
+__all__ = [
+    "OperatingPoint", "OPPTable", "build_table", "opp_table_for_unit",
+    "sd865_opp_table", "single_opp_table", "unit_power",
+    "ThermalModel", "ThermalParams",
+    "FreqContext", "FreqGovernor", "FixedFreqGovernor",
+    "RaceToIdleGovernor", "SchedutilGovernor", "ThermalAwareGovernor",
+    "GOVERNORS",
+]

@@ -16,6 +16,10 @@ The one serving surface for the SoC-Cluster reproduction:
     single power integral (shared power charged once);
   * :class:`UnitGovernor` / :class:`ScalePolicy` — the activation policy
     engine (windowed rate → group-quantized target → wake/cooldown);
+    with an :mod:`repro.power` OPP table on the pool,
+    ``ScalePolicy.freq_governor`` adds the frequency axis (activation
+    count × operating point co-optimized per tick, thermal throttling
+    via the pool's trip latches);
   * :class:`MultiTenantRuntime` — N tenants on one pool, weighted-fair
     arbitration with ``min_units`` floors, runtime-level straggler
     hedging;

@@ -27,9 +27,11 @@ Typical use::
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence
+from typing import Any, Optional, Sequence, Union
 
 from repro.core.cluster import ClusterSpec
+from repro.power.opp import OPPTable
+from repro.power.thermal import ThermalModel, ThermalParams
 from repro.runtime.multi_tenant import MultiTenantRuntime, Tenant
 from repro.runtime.policy import ScalePolicy, UnitGovernor
 from repro.runtime.result import Request, StepStats, Telemetry
@@ -50,7 +52,9 @@ class ClusterRuntime(MultiTenantRuntime):
                  unit_rate: Optional[float] = None,
                  window_s: float = 10.0, dt_s: float = 1.0,
                  idle_units_off: bool = True,
-                 model_wake_latency: bool = False, group_units: int = 1):
+                 model_wake_latency: bool = False, group_units: int = 1,
+                 opp_table: Optional[OPPTable] = None,
+                 thermal: Union[ThermalParams, ThermalModel, None] = None):
         # model_wake_latency matters only for sub-tick resolution
         # (wake_latency_s > dt_s); see UnitGovernor.apply_target.
         if unit_rate is None:
@@ -64,7 +68,8 @@ class ClusterRuntime(MultiTenantRuntime):
             [Tenant(self._TENANT, workload, policy=policy,
                     unit_rate=unit_rate, group_units=group_units)],
             dt_s=dt_s, window_s=window_s, idle_units_off=idle_units_off,
-            model_wake_latency=model_wake_latency)
+            model_wake_latency=model_wake_latency,
+            opp_table=opp_table, thermal=thermal)
         self.workload = workload
 
     # ------------------------------------------------------------------

@@ -41,12 +41,15 @@ Typical use::
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.cluster import ClusterSpec
+from repro.power.opp import OPPTable
+from repro.power.thermal import ThermalModel, ThermalParams
 from repro.runtime.policy import ScalePolicy, UnitGovernor
 from repro.runtime.pool import UnitPool
 from repro.runtime.result import (Request, Response, StepStats, Telemetry,
@@ -111,21 +114,32 @@ class _TenantState:
     tenant: Tenant
     governor: UnitGovernor
     responses: List[Response] = field(default_factory=list)
+    accepts_perf: bool = False    # workload.step takes perf_scale=
 
 
 class MultiTenantRuntime:
-    """Hosts N tenants on one :class:`UnitPool` over one cluster."""
+    """Hosts N tenants on one :class:`UnitPool` over one cluster.
+
+    Pass ``opp_table`` (and optionally ``thermal``) to enable the
+    frequency axis: each tenant's ``ScalePolicy.freq_governor`` then
+    picks an operating point per tick, workload service rates scale by
+    the active perf-scale, and hot units throttle down via the thermal
+    trip latch. With no table (the default) the power layer is inert.
+    """
 
     def __init__(self, spec: ClusterSpec, tenants: Sequence[Tenant],
                  dt_s: float = 1.0, window_s: float = 10.0,
                  idle_units_off: bool = True,
-                 model_wake_latency: bool = False):
+                 model_wake_latency: bool = False,
+                 opp_table: Optional[OPPTable] = None,
+                 thermal: Union[ThermalParams, ThermalModel, None] = None):
         assert tenants, "need at least one tenant"
         names = [t.name for t in tenants]
         assert len(set(names)) == len(names), f"duplicate tenant names: {names}"
         self.spec = spec
         self.dt_s = dt_s
-        self.pool = UnitPool(spec, idle_units_off=idle_units_off)
+        self.pool = UnitPool(spec, idle_units_off=idle_units_off,
+                             opp_table=opp_table, thermal=thermal)
         self._t = 0.0
         self._states: Dict[str, _TenantState] = {}
         floors = 0
@@ -144,7 +158,13 @@ class MultiTenantRuntime:
                 model_wake_latency=model_wake_latency,
                 group_units=ten.group_units,
                 pool=self.pool, tenant=ten.name)
-            self._states[ten.name] = _TenantState(ten, gov)
+            try:
+                sig = inspect.signature(ten.workload.step)
+                accepts = "perf_scale" in sig.parameters
+            except (TypeError, ValueError):
+                accepts = False
+            self._states[ten.name] = _TenantState(ten, gov,
+                                                  accepts_perf=accepts)
             floors += gov._quantize(gov.policy.min_units)
         assert floors <= spec.n_units, \
             f"sum of per-tenant min_units floors ({floors}) exceeds the " \
@@ -222,11 +242,20 @@ class MultiTenantRuntime:
         utils: Dict[str, float] = {}
         extras: Dict[str, int] = {}
         for m in names:
-            wl = self._states[m].tenant.workload
-            s = wl.step(active[m] + hedges[m], dt, t)
+            st0 = self._states[m]
+            wl = st0.tenant.workload
+            # frequency axis: workload capacity scales by the tenant's
+            # active perf-scale (throttled units drag it down)
+            perf = self.pool.perf_scale(m)
+            if st0.accepts_perf:
+                s = wl.step(active[m] + hedges[m], dt, t, perf_scale=perf)
+            else:
+                s = wl.step(active[m] + hedges[m], dt, t)
             s.t, s.dt_s = t, dt
             s.target_units = active[m]
             s.hedge_units = hedges[m]
+            s.perf_scale = perf
+            govs[m].backlog = s.queued > 0
             # in-flight work that outlived a scale-down stays powered
             over = max(0, (s.units_used or 0) - active[m] - hedges[m])
             extras[m] = hedges[m] + over

@@ -8,13 +8,16 @@ per-tenant activation target and applies it to a
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import TYPE_CHECKING, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.cluster import ClusterSpec
 from repro.runtime.pool import UnitPool
 from repro.runtime.result import (Response, Telemetry, latency_percentiles)
+
+if TYPE_CHECKING:   # deferred: repro.power.governor imports repro.core
+    from repro.power.governor import FreqGovernor
 
 
 @dataclass
@@ -29,6 +32,12 @@ class ScalePolicy:
     # ClusterRuntime) and, through its thin wrapper, by
     # ``core.scheduler.ElasticScheduler.simulate``.
     hedge_after_s: Optional[float] = None
+    # Frequency policy (repro.power.governor): picks the tenant's
+    # operating point each tick; the activation target is then sized
+    # against that point's effective service rate, so unit count and
+    # frequency are co-optimized. Only consulted when the pool carries
+    # an OPP table; None pins the nominal point (strictly additive).
+    freq_governor: Optional[FreqGovernor] = None
 
 
 class UnitGovernor:
@@ -73,6 +82,13 @@ class UnitGovernor:
             else UnitPool(spec, idle_units_off=idle_units_off)
         self.tenant = tenant
         self.pool.force_active(tenant, self._quantize(self.policy.min_units))
+        # frequency side: consulted only when the pool carries an OPP
+        # table; the chosen point feeds both the activation target (via
+        # the effective service rate) and pool.set_opp in apply_target
+        self.freq_governor = self.policy.freq_governor
+        self._opp_target: Optional[int] = None \
+            if self.pool.opp_table is None else self.pool.opp_table.nominal
+        self.backlog = False          # runtime sets from last tick's queue
         self._arrivals: List[Tuple[float, float]] = []   # (t, count)
         self._last_downscale = -1e9
         self._tick_rate = 0.0
@@ -120,20 +136,51 @@ class UnitGovernor:
             whole = self.spec.n_units // g * g
         return max(g, whole)
 
-    def target_units(self, offered: float) -> int:
-        need = offered * self.policy.headroom / self.unit_rate
+    def target_units(self, offered: float, perf_scale: float = 1.0) -> int:
+        need = offered * self.policy.headroom \
+            / (self.unit_rate * max(perf_scale, 1e-9))
         raw = int(min(self.spec.n_units,
                       max(self.policy.min_units, np.ceil(need))))
         return self._quantize(raw)
 
     # ------------------------------------------------------------------
+    def _select_opp(self, rate: float) -> float:
+        """Run the frequency governor for this tick; returns the chosen
+        point's perf scale (1.0 when the frequency axis is off)."""
+        table = self.pool.opp_table
+        if table is None:
+            return 1.0
+        from repro.power.governor import FreqContext
+        if self.freq_governor is not None:
+            # the governor may only plan with units this tenant can
+            # actually obtain (its current holding plus the free pool),
+            # not the whole cluster — otherwise a contended schedutil
+            # picks a wide-and-slow point arbitration can never grant
+            obtainable = min(self.spec.n_units,
+                             max(self.policy.min_units,
+                                 self.pool.active(self.tenant)
+                                 + self.pool.waking(self.tenant)
+                                 + self.pool.free_units()))
+            self._opp_target = table.clamp(self.freq_governor.select(
+                FreqContext(
+                    demand_rate=rate, unit_rate=self.unit_rate,
+                    headroom=self.policy.headroom,
+                    n_units=obtainable, table=table,
+                    unit=self.spec.unit, min_units=self.policy.min_units,
+                    max_sustainable=self.pool.max_sustainable_opp(),
+                    backlog=self.backlog,
+                    p_gated_w=self.spec.unit.p_off if self.idle_units_off
+                    else self.spec.unit.p_idle)))
+        return table[self._opp_target].perf_scale
+
     def desired_units(self, t: float, offered: Optional[float] = None
                       ) -> int:
         """The tenant's demand this tick: group-quantized activation
-        target from the (windowed) offered rate."""
+        target from the (windowed) offered rate, sized against the
+        frequency governor's chosen operating point."""
         rate = self.offered_rate(t) if offered is None else offered
         self._tick_rate = rate
-        return self.target_units(rate)
+        return self.target_units(rate, self._select_opp(rate))
 
     def apply_target(self, tgt: int, t: float, dt_s: float = 1.0) -> int:
         """Move the pool allocation toward ``tgt`` (which arbitration may
@@ -153,11 +200,17 @@ class UnitGovernor:
             if self.pool.wake(self.tenant, tgt - active - waking,
                               t + wake_s):
                 self.scale_events += 1
-        elif tgt < active and t - self._last_downscale > p.cooldown_s:
+        elif tgt < active + waking \
+                and t - self._last_downscale > p.cooldown_s:
+            # the pool cancels still-waking units first (they are not
+            # serving, so a demand drop costs them nothing), then powers
+            # off active ones
             keep = max(self._quantize(p.min_units), tgt)
-            if self.pool.release(self.tenant, active - keep):
+            if self.pool.release(self.tenant, active + waking - keep):
                 self._last_downscale = t
                 self.scale_events += 1
+        if self._opp_target is not None:
+            self.pool.set_opp(self.tenant, self._opp_target)
         self.pool.advance(t, dt_s, self.tenant)
         return self.pool.active(self.tenant)
 

@@ -13,13 +13,24 @@ infrastructure power (``ClusterSpec.p_shared`` — fans, switch boards,
 BMC) is charged exactly once per tick no matter how many tenants share
 the cluster, while each tenant's powered units are metered at that
 tenant's utilization and attributed to ``tenant_energy_j``.
+
+With an :class:`~repro.power.opp.OPPTable` attached the pool also owns
+the **frequency axis**: every unit carries a requested operating point
+(set per tenant via :meth:`set_opp`), a thermal trip latch may force it
+down to the lowest OPP, and :meth:`charge` meters each unit at its
+*effective* OPP's f·V² power scale while stepping the RC thermal
+network (fan power rides on the shared rail). With no table configured
+— the default — every DVFS path is skipped and the pool behaves
+bit-for-bit like the pre-power-layer code.
 """
 from __future__ import annotations
 
 from enum import Enum
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.cluster import ClusterSpec
+from repro.power.opp import OPPTable, unit_power
+from repro.power.thermal import ThermalModel, ThermalParams
 
 
 class UnitState(str, Enum):
@@ -39,7 +50,9 @@ class UnitPool:
     unavailable to other tenants and to hedging.
     """
 
-    def __init__(self, spec: ClusterSpec, idle_units_off: bool = True):
+    def __init__(self, spec: ClusterSpec, idle_units_off: bool = True,
+                 opp_table: Optional[OPPTable] = None,
+                 thermal: Union[ThermalParams, ThermalModel, None] = None):
         self.spec = spec
         self.idle_units_off = idle_units_off
         n = spec.n_units
@@ -47,6 +60,16 @@ class UnitPool:
         self.owner: List[Optional[str]] = [None] * n
         self._ready_t: List[float] = [0.0] * n
         self._groups = spec.groups()
+        # DVFS state (absent by default: strictly additive)
+        assert opp_table is not None or thermal is None, \
+            "thermal throttling needs an opp_table to throttle within"
+        self.opp_table = opp_table
+        if isinstance(thermal, ThermalParams):
+            thermal = ThermalModel(spec, thermal)
+        self.thermal: Optional[ThermalModel] = thermal
+        nominal = opp_table.nominal if opp_table is not None else 0
+        self._req_opp: List[int] = [nominal] * n
+        self._tenant_opp: Dict[str, int] = {}
         # accounting (cluster level; shared power charged once)
         self.energy_j = 0.0
         self.served = 0.0
@@ -59,6 +82,10 @@ class UnitPool:
         self.util_hist: List[float] = []
         self.offered_hist: List[float] = []
         self.served_hist: List[float] = []
+        # filled only when a thermal model is attached
+        self.max_temp_hist: List[float] = []
+        self.throttled_hist: List[int] = []
+        self.fan_power_hist: List[float] = []
 
     # -- queries -----------------------------------------------------------
     def active(self, tenant: str) -> int:
@@ -89,6 +116,54 @@ class UnitPool:
 
     def free_units(self) -> int:
         return self.spec.n_units - self.n_allocated()
+
+    # -- DVFS --------------------------------------------------------------
+    def set_opp(self, tenant: str, idx: int) -> None:
+        """Request an operating point for all of ``tenant``'s units (a
+        thermal trip latch can still force individual units lower)."""
+        if self.opp_table is None:
+            return
+        idx = self.opp_table.clamp(idx)
+        self._tenant_opp[tenant] = idx
+        for u in range(self.spec.n_units):
+            if self.owner[u] == tenant:
+                self._req_opp[u] = idx
+
+    def effective_opp(self, u: int) -> int:
+        """The OPP unit ``u`` actually runs at: its requested point, or
+        the table's lowest while its thermal trip latch is set."""
+        assert self.opp_table is not None
+        if self.thermal is not None and self.thermal.throttled[u]:
+            return self.opp_table.lowest
+        return self._req_opp[u]
+
+    def _tenant_opp_of(self, tenant: str) -> int:
+        assert self.opp_table is not None
+        return self._tenant_opp.get(tenant, self.opp_table.nominal)
+
+    def perf_scale(self, tenant: str) -> float:
+        """Mean service-rate multiplier over the tenant's active units
+        (1.0 with no OPP table, or at the nominal point). Throttled
+        units drag the mean down — this is what the workload's capacity
+        is scaled by."""
+        if self.opp_table is None:
+            return 1.0
+        mine = [u for u in range(self.spec.n_units)
+                if self.owner[u] == tenant
+                and self.state[u] is UnitState.ACTIVE]
+        if not mine:
+            return self.opp_table[self._tenant_opp_of(tenant)].perf_scale
+        return sum(self.opp_table[self.effective_opp(u)].perf_scale
+                   for u in mine) / len(mine)
+
+    def max_sustainable_opp(self) -> Optional[int]:
+        """Thermal ceiling for governors (None without a thermal model):
+        the highest OPP a fully-loaded, fully-occupied PCB group can
+        hold forever without tripping."""
+        if self.thermal is None or self.opp_table is None:
+            return None
+        return self.thermal.max_sustainable_index(self.spec.unit,
+                                                  self.opp_table)
 
     # -- placement ---------------------------------------------------------
     def _group_key(self, gi: int, tenant: str) -> Tuple[int, int, int, int]:
@@ -122,13 +197,29 @@ class UnitPool:
             self.state[u] = UnitState.WAKING
             self.owner[u] = tenant
             self._ready_t[u] = ready_t
+            if self.opp_table is not None:
+                self._req_opp[u] = self._tenant_opp_of(tenant)
         return len(picked)
 
     def release(self, tenant: str, k: int) -> int:
-        """Power off up to ``k`` of the tenant's *active* units, vacating
-        its least-occupied groups first so allocations stay packed."""
+        """Power off up to ``k`` of the tenant's units. Still-waking
+        units are cancelled first (they are not serving yet, so dropping
+        them loses nothing); active units then vacate the tenant's
+        least-occupied groups first so allocations stay packed."""
         if k <= 0:
             return 0
+        released = 0
+        # cancel pending wakes first, newest ready time first
+        waking = [u for u in range(self.spec.n_units)
+                  if self.owner[u] == tenant
+                  and self.state[u] is UnitState.WAKING]
+        waking.sort(key=lambda u: (-self._ready_t[u], -u))
+        for u in waking[:k]:
+            self.state[u] = UnitState.OFF
+            self.owner[u] = None
+            released += 1
+        if released == k:
+            return released
         mine = [u for u in range(self.spec.n_units)
                 if self.owner[u] == tenant
                 and self.state[u] is UnitState.ACTIVE]
@@ -136,8 +227,7 @@ class UnitPool:
         for u in mine:
             occupancy[u // self.spec.group_size] += 1
         mine.sort(key=lambda u: (occupancy[u // self.spec.group_size], -u))
-        released = 0
-        for u in mine[:k]:
+        for u in mine[:k - released]:
             self.state[u] = UnitState.OFF
             self.owner[u] = None
             released += 1
@@ -158,7 +248,13 @@ class UnitPool:
 
     def force_active(self, tenant: str, k: int) -> None:
         """Set the tenant's active-unit count to exactly ``k``, skipping
-        wake latency (initial floors, tests, compatibility setters)."""
+        wake latency (initial floors, tests, compatibility setters).
+        Pending wakes are cancelled first — a hard reset would otherwise
+        drift above ``k`` when they landed (and ``release`` prefers
+        waking units, so trimming actives needs them gone)."""
+        waking = self.waking(tenant)
+        if waking:
+            self.release(tenant, waking)
         cur = self.active(tenant)
         if cur > k:
             self.release(tenant, cur - k)
@@ -166,6 +262,8 @@ class UnitPool:
             for u in self._pick_units(tenant, k - cur):
                 self.state[u] = UnitState.ACTIVE
                 self.owner[u] = tenant
+                if self.opp_table is not None:
+                    self._req_opp[u] = self._tenant_opp_of(tenant)
 
     # -- accounting --------------------------------------------------------
     def charge(self, t: float, dt_s: float, utils: Dict[str, float],
@@ -175,6 +273,13 @@ class UnitPool:
         """Integrate one tick of cluster power: shared power once, each
         tenant's powered units (allocation + borrowed/overflow ``extra``)
         at that tenant's utilization, the rest at the off/idle floor.
+
+        With an OPP table attached, each of a tenant's active units is
+        metered at its *effective* operating point's f·V² power scale
+        (extra borrowed/overflow units at the tenant's requested point),
+        the thermal network advances one tick on the per-unit draw, and
+        the fan's power lands on the shared rail. Without a table this
+        is the exact pre-DVFS computation.
 
         Returns ``(total_power_w, per_tenant_power_w, per_tenant_powered)``.
         """
@@ -195,16 +300,57 @@ class UnitPool:
                     break
             total_powered = sum(powered.values())
         unit = self.spec.unit
+        p_base = unit.p_off if self.idle_units_off else unit.p_idle
         p_tenant: Dict[str, float] = {}
         p_units = 0.0
-        for name, cnt in powered.items():
-            u = min(max(utils[name], 0.0), 1.0)
-            p = cnt * unit.power(u)
-            p_tenant[name] = p
-            p_units += p
+        fan_w = 0.0
+        if self.opp_table is None:
+            for name, cnt in powered.items():
+                u = min(max(utils[name], 0.0), 1.0)
+                p = cnt * unit.power(u)
+                p_tenant[name] = p
+                p_units += p
+        else:
+            table = self.opp_table
+            # per-unit draw, for thermal: off/waking units at the floor
+            per_unit_w = [p_base] * n if self.thermal is not None else None
+            # borrowed/overflow units have no allocation of their own;
+            # their heat still lands on physical silicon, so park it on
+            # otherwise-inactive units for the thermal step
+            spare = [i for i in range(n)
+                     if self.state[i] is not UnitState.ACTIVE] \
+                if per_unit_w is not None else []
+            for name, cnt in powered.items():
+                u = min(max(utils[name], 0.0), 1.0)
+                mine = [i for i in range(n) if self.owner[i] == name
+                        and self.state[i] is UnitState.ACTIVE]
+                p = 0.0
+                for i in mine:
+                    pw = unit_power(unit, u, table[self.effective_opp(i)])
+                    p += pw
+                    if per_unit_w is not None:
+                        per_unit_w[i] = pw
+                # extras are metered at the tenant's requested point
+                n_extra = cnt - len(mine)
+                if n_extra > 0:
+                    pw = unit_power(unit, u,
+                                    table[self._tenant_opp_of(name)])
+                    p += n_extra * pw
+                    if per_unit_w is not None:
+                        for _ in range(n_extra):
+                            if not spare:
+                                break
+                            per_unit_w[spare.pop()] = pw
+                p_tenant[name] = p
+                p_units += p
+            if self.thermal is not None:
+                fan_w = self.thermal.step(dt_s, per_unit_w)
+                self.max_temp_hist.append(self.thermal.max_die_temp_c())
+                self.throttled_hist.append(self.thermal.n_throttled())
+                self.fan_power_hist.append(fan_w)
         rest = n - total_powered
-        p_rest = rest * (unit.p_off if self.idle_units_off else unit.p_idle)
-        total = self.spec.p_shared + p_units + p_rest
+        p_rest = rest * p_base
+        total = self.spec.p_shared + fan_w + p_units + p_rest
         self.energy_j += total * dt_s
         self.served += served
         for name, p in p_tenant.items():

@@ -83,6 +83,8 @@ class StepStats:
     target_units: int = 0         # policy's activation target
     active_units: int = 0         # units actually powered this tick
     hedge_units: int = 0          # units borrowed for straggler hedging
+    perf_scale: float = 1.0       # mean DVFS perf multiplier of the
+    #   tenant's active units (1.0 when no OPP table is configured)
     power_w: float = 0.0
     energy_j: float = 0.0         # cumulative runtime energy after the tick
 

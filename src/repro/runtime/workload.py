@@ -7,7 +7,9 @@ the same four calls:
   * ``submit(request) -> rid``   — enqueue work;
   * ``step(n_active_units, dt_s, t) -> StepStats`` — advance one tick
     using *at most* the granted concurrency (this is where the activation
-    target actually gates execution);
+    target actually gates execution). Adapters may additionally accept a
+    ``perf_scale=`` keyword (the runtime passes the tenant's mean DVFS
+    perf multiplier when the workload's ``step`` signature declares it);
   * ``drain() -> [Response]``    — pop completed responses. This is the
     **single delivery channel**: every response is returned by drain()
     exactly once, and the runtime folds exactly that into
@@ -89,8 +91,9 @@ class QueueWorkload:
         return rid
 
     def step(self, n_active_units: int, dt_s: float = 1.0,
-             t: float = 0.0) -> StepStats:
-        capacity = max(0, n_active_units) * self.unit_rate * dt_s
+             t: float = 0.0, perf_scale: float = 1.0) -> StepStats:
+        capacity = max(0, n_active_units) * self.unit_rate * dt_s \
+            * max(perf_scale, 0.0)
         used = 0.0
         responses: List[Response] = []
         touched = 0
@@ -102,13 +105,16 @@ class QueueWorkload:
             if take >= remaining - 1e-12:
                 self._queue.popleft()
                 # finish inside the tick, at the fluid completion instant
-                # (floored at one service time past arrival — latency for
-                # fluid workloads has tick resolution, no better)
+                # (floored at one service time past arrival — at the
+                # *effective* DVFS-scaled rate — latency for fluid
+                # workloads has tick resolution, no better)
                 frac = used / capacity if capacity > 0 else 1.0
+                service_s = 1.0 / (self.unit_rate
+                                   * max(perf_scale, 1e-9))
                 responses.append(Response(
                     rid=req.rid, arrival_s=req.arrival_s,
                     finish_s=max(t + frac * dt_s,
-                                 req.arrival_s + 1.0 / self.unit_rate),
+                                 req.arrival_s + service_s),
                     output=req.payload))
             else:
                 self._queue[0][1] = remaining - take
@@ -253,7 +259,11 @@ class LMServingWorkload:
         return rid
 
     def step(self, n_active_units: int, dt_s: float = 1.0,
-             t: float = 0.0) -> StepStats:
+             t: float = 0.0, perf_scale: float = 1.0) -> StepStats:
+        # perf_scale is accepted for protocol uniformity but unused: the
+        # live batcher is slot-gated (one decode step per tick); DVFS
+        # would change wall-clock per token, which the fluid tick model
+        # does not resolve
         cap = min(self.batcher.slots,
                   max(0, n_active_units) * self.slots_per_unit)
         queued_before = len(self.batcher.queue)

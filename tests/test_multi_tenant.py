@@ -99,6 +99,97 @@ def test_pool_state_enum():
     assert pool.state[pool.units_of("a")[0]] is UnitState.WAKING
 
 
+def test_pool_release_cancels_waking_units_first():
+    """A demand drop that lands while units are still waking cancels the
+    pending wakes (they are not serving yet) before any active unit is
+    powered off."""
+    pool = UnitPool(tiny_cluster(6))
+    pool.force_active("a", 2)
+    pool.wake("a", 2, ready_t=50.0)            # far-future wakes
+    assert pool.waking("a") == 2 and pool.active("a") == 2
+    assert pool.release("a", 2) == 2
+    assert pool.waking("a") == 0               # both wakes cancelled...
+    assert pool.active("a") == 2               # ...no active unit touched
+    assert pool.free_units() == 4
+    # over-release spills from waking into active
+    pool.wake("a", 1, ready_t=50.0)
+    assert pool.release("a", 2) == 2
+    assert pool.waking("a") == 0 and pool.active("a") == 1
+
+
+def test_pool_force_active_exact_with_waking_units():
+    """force_active's 'exactly k active' contract must hold even while
+    wakes are in flight: pending wakes are cancelled, actives trimmed."""
+    pool = UnitPool(tiny_cluster(8))
+    pool.force_active("a", 5)
+    pool.wake("a", 2, ready_t=99.0)
+    pool.force_active("a", 3)
+    assert pool.active("a") == 3 and pool.waking("a") == 0
+    pool.wake("a", 2, ready_t=99.0)
+    pool.force_active("a", 6)
+    assert pool.active("a") == 6 and pool.waking("a") == 0
+
+
+def test_pool_release_waking_prefers_newest_wake():
+    pool = UnitPool(tiny_cluster(4))
+    pool.wake("a", 1, ready_t=10.0)
+    pool.wake("a", 1, ready_t=99.0)
+    assert pool.release("a", 1) == 1
+    # the unit furthest from readiness was the one cancelled
+    left = [u for u in range(4) if pool.owner[u] == "a"]
+    assert len(left) == 1 and pool._ready_t[left[0]] == 10.0
+
+
+def test_pool_allocation_when_every_group_partially_occupied():
+    """With no wholly-free PCB left, growth packs into the tenant's own
+    partial groups first, then spills into the least-crowded foreign
+    ones — and a newcomer can still claim the leftovers."""
+    spec = soc_cluster()                       # 60 units, 5 per PCB
+    pool = UnitPool(spec)
+    # occupy 3 units in every one of the 12 groups
+    for gi, g in enumerate(pool._groups):
+        for u in g[:3]:
+            pool.state[u] = UnitState.ACTIVE
+            pool.owner[u] = f"t{gi}"
+    assert pool.free_units() == 24
+    # t0 grows by 4: its own group's 2 free slots first, then elsewhere
+    assert pool.wake("t0", 4, ready_t=0.0) == 4
+    pool.advance(0.0, 1.0)
+    by_group = {}
+    for u in pool.units_of("t0"):
+        by_group[u // 5] = by_group.get(u // 5, 0) + 1
+    assert by_group[0] == 5                    # own group filled to the brim
+    assert sum(by_group.values()) == 7
+    # a newcomer still gets units even though no group is wholly free
+    assert pool.wake("new", 3, ready_t=0.0) == 3
+    pool.advance(0.0, 1.0)
+    assert pool.active("new") == 3
+
+
+def test_hedging_borrows_when_all_groups_partially_occupied():
+    """Straggler hedging needs only a free unit, not a free group."""
+    spec = tiny_cluster(6, group_size=3)
+    mk = lambda m: QueueWorkload(1.0, name=m)   # noqa: E731
+    rt = MultiTenantRuntime(spec, [
+        Tenant("a", mk("a"), policy=ScalePolicy(min_units=2, cooldown_s=1e9,
+                                                hedge_after_s=2.0)),
+        Tenant("b", mk("b"), policy=ScalePolicy(min_units=2,
+                                                cooldown_s=1e9)),
+    ], dt_s=1.0)
+    # both groups are now partially occupied (2 of 3 units each by
+    # placement), with 2 free units total
+    occupied = {u // 3 for u in rt.pool.units_of("a")} \
+        | {u // 3 for u in rt.pool.units_of("b")}
+    assert occupied == {0, 1}
+    assert rt.pool.free_units() == 2
+    rt.submit("a", cost=30.0, count=1.0)       # deep backlog for one unit
+    hedged = 0
+    for _ in range(6):
+        stats = rt.tick_all()
+        hedged += stats["a"].hedge_units
+    assert hedged > 0                          # borrowed despite no free PCB
+
+
 # ---------------------------------------------------------------------------
 # Weighted fair share arbitration.
 # ---------------------------------------------------------------------------

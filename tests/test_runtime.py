@@ -366,6 +366,43 @@ def test_simresult_and_report_are_telemetry():
     assert len(res.utilization) == len(res.active_units) == 10
 
 
+def test_serving_autoscaler_deprecation_and_runtime_roundtrip():
+    """The shim must (a) emit DeprecationWarning on construction and
+    (b) produce, through the new UnitGovernor/UnitPool path, exactly
+    what driving an identical governor directly produces."""
+    import warnings
+    from repro.runtime import UnitGovernor
+    from repro.serving.autoscaler import ServingAutoscaler
+
+    spec = tiny_cluster(8)
+    policy = lambda: ScalePolicy(min_units=1, cooldown_s=5.0)  # noqa: E731
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        shim = ServingAutoscaler(spec, unit_rate_rps=2.0, policy=policy(),
+                                 window_s=5.0)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    # the shim is a thin veneer: its state lives in the runtime layer
+    assert isinstance(shim.governor, UnitGovernor)
+    direct = UnitGovernor(spec, 2.0, policy(), window_s=5.0)
+    for step in range(30):
+        t = float(step)
+        n = 6 if 8 <= step < 20 else 1
+        shim.record_arrival(t, n)
+        direct.record_arrival(t, n)
+        shim_active = shim.tick(t, served_this_tick=n)
+        active = direct.update(t, 1.0)
+        rate = direct.offered_rate(t)
+        util = min(1.0, rate / max(active * 2.0, 1e-9))
+        direct.charge(t, util, 1.0, served=n)
+        assert shim_active == active
+    rep, ref = shim.report(), direct.telemetry()
+    assert isinstance(rep, Telemetry)
+    assert rep.energy_j == pytest.approx(ref.energy_j)
+    assert rep.served == pytest.approx(ref.served)
+    np.testing.assert_allclose(rep.active_units, ref.active_units)
+    np.testing.assert_allclose(rep.power_w, ref.power_w)
+
+
 def test_serving_autoscaler_shim_still_works():
     from repro.serving.autoscaler import ServingAutoscaler
     with pytest.deprecated_call():

@@ -1,0 +1,89 @@
+"""pool: steady-state tick throughput of the simulation backends.
+
+The numbers this suite registers via ``emit_metric`` are the CI
+perf-regression gate's inputs (``benchmarks/perf_gate.py`` compares
+them against the committed ``benchmarks/BENCH_baseline.json`` and fails
+the build on a >2x slowdown of the vectorized paths):
+
+  * ``pool/{scalar,vector}_ticks_per_s`` — a single 60-SoC rack under
+    the full DVFS + thermal stack (schedutil governor, RC network,
+    trip latches), ticked at steady 50% load;
+  * ``fleet/{scalar,vector}_rack_ticks_per_s`` — rack-ticks/s of the
+    fleet engines (binary gating, join-shortest-queue router) at
+    steady 50% load.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, emit_metric, header
+from repro.core.cluster import soc_cluster
+from repro.fleet import Fleet, JoinShortestQueueRouter, homogeneous_fleet
+from repro.power import SchedutilGovernor, ThermalParams, sd865_opp_table
+from repro.runtime import ClusterRuntime, QueueWorkload, ScalePolicy
+
+UNIT_RATE = 10.0
+
+
+def _rack_ticks_per_s(backend: str, ticks: int = 300, reps: int = 3,
+                      warmup: int = 50) -> float:
+    """Best-of-``reps`` steady-state ticks/s of one DVFS+thermal rack."""
+    best = 0.0
+    for _ in range(reps):
+        spec = soc_cluster()
+        rt = ClusterRuntime(
+            spec, QueueWorkload(unit_rate=UNIT_RATE),
+            policy=ScalePolicy(freq_governor=SchedutilGovernor()),
+            opp_table=sd865_opp_table(), thermal=ThermalParams(),
+            dt_s=1.0, backend=backend)
+        offered = 0.5 * UNIT_RATE * spec.n_units
+        for _ in range(warmup):
+            rt.submit(cost=offered, count=offered)
+            rt.tick()
+        t0 = time.perf_counter()
+        for _ in range(ticks):
+            rt.submit(cost=offered, count=offered)
+            rt.tick()
+        best = max(best, ticks / (time.perf_counter() - t0))
+    return best
+
+
+def _fleet_rack_ticks_per_s(backend: str, n_racks: int, ticks: int,
+                            reps: int = 3, warmup: int = 10) -> float:
+    """Best-of-``reps`` steady-state rack-ticks/s of a fleet engine."""
+    best = 0.0
+    for _ in range(reps):
+        fleet = Fleet(
+            homogeneous_fleet(soc_cluster(), n_racks, unit_rate=30.0),
+            router=JoinShortestQueueRouter(), dt_s=60.0, backend=backend)
+        total = 0.5 * fleet.capacity_rps
+        for _ in range(warmup):
+            assign = fleet.router.route(total, fleet.view())
+            fleet.engine.tick(np.asarray(assign, float), fleet.dt_s)
+        t0 = time.perf_counter()
+        for _ in range(ticks):
+            assign = fleet.router.route(total, fleet.view())
+            fleet.engine.tick(np.asarray(assign, float), fleet.dt_s)
+        best = max(best, n_racks * ticks / (time.perf_counter() - t0))
+    return best
+
+
+def run() -> None:
+    header("pool: steady-state tick throughput (scalar vs vector)")
+    scalar = _rack_ticks_per_s("scalar")
+    vector = _rack_ticks_per_s("vector")
+    emit_metric("pool/scalar_ticks_per_s", scalar)
+    emit_metric("pool/vector_ticks_per_s", vector)
+    emit("pool/rack_speedup", 0.0, f"vector_over_scalar={vector/scalar:.2f}x")
+    f_scalar = _fleet_rack_ticks_per_s("scalar", n_racks=20, ticks=60)
+    f_vector = _fleet_rack_ticks_per_s("vector", n_racks=100, ticks=400)
+    emit_metric("fleet/scalar_rack_ticks_per_s", f_scalar)
+    emit_metric("fleet/vector_rack_ticks_per_s", f_vector)
+    emit("fleet/rack_speedup", 0.0,
+         f"vector_over_scalar={f_vector/f_scalar:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

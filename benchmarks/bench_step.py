@@ -4,9 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, header, time_fn
+from benchmarks.common import emit, header
 from repro.config import ServeConfig, TrainConfig, get_config, smoke_config
-from repro.configs import ASSIGNED_ARCHS
 from repro.models import model as lm
 from repro.serving.engine import ServingEngine
 from repro.training.optimizer import init_opt_state

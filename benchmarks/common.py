@@ -1,12 +1,44 @@
 """Shared benchmark utilities. Every benchmark prints CSV rows:
 ``name,us_per_call,derived`` (derived = the figure/table-specific metric).
+
+With ``benchmarks/run.py --json PATH`` a machine-readable record of the
+same run is collected here: per-suite wall times, every emitted CSV row,
+and the numeric metrics registered via :func:`emit_metric` (these feed
+the CI perf-regression gate, ``benchmarks/perf_gate.py``).
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
+
+# Active JSON sink (None unless run.py was invoked with --json).
+_json: Optional[Dict[str, Any]] = None
+_suite: Optional[str] = None
+
+
+def start_json_recording() -> Dict[str, Any]:
+    """Begin collecting rows/metrics; returns the record run.py dumps."""
+    global _json
+    _json = {"schema": 1, "suites": {}, "metrics": {}}
+    return _json
+
+
+def begin_suite(name: str) -> None:
+    global _suite
+    _suite = name
+    if _json is not None:
+        _json["suites"].setdefault(
+            name, {"wall_s": None, "rows": [], "metrics": {}})
+
+
+def end_suite(name: str, wall_s: float, ok: bool) -> None:
+    global _suite
+    if _json is not None and name in _json["suites"]:
+        _json["suites"][name]["wall_s"] = round(wall_s, 4)
+        _json["suites"][name]["ok"] = ok
+    _suite = None
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
@@ -26,6 +58,21 @@ def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    if _json is not None and _suite is not None:
+        _json["suites"][_suite]["rows"].append(
+            {"name": name, "us_per_call": us_per_call, "derived": derived})
+
+
+def emit_metric(name: str, value: float, unit: str = "") -> None:
+    """Emit a *numeric* metric: printed as a CSV row and, under
+    ``--json``, recorded under both the suite and the top-level
+    ``metrics`` map the perf gate compares against the baseline."""
+    value = float(value)
+    emit(name, 0.0, f"{value:.6g}{' ' + unit if unit else ''}")
+    if _json is not None:
+        _json["metrics"][name] = value
+        if _suite is not None:
+            _json["suites"][_suite]["metrics"][name] = value
 
 
 def header(title: str) -> None:

@@ -15,7 +15,6 @@ from __future__ import annotations
 from benchmarks.common import emit, header
 from repro.core.cluster import edge_server_cpu, edge_server_gpu, soc_cluster
 from repro.core.energy import proportionality_index
-from repro.workloads.transcoding import VIDEO_BY_ID
 
 # V4 (1080p presentation): max streams per unit (paper Table 3 / §4.1).
 SOC_STREAMS_PER_UNIT = 9       # per SoC (CPU transcode)

@@ -1,0 +1,83 @@
+"""CI perf-regression gate.
+
+Compares the metrics of a fresh ``benchmarks/run.py --json`` record
+against the committed baseline and **fails the build** (exit 1) when a
+gated metric regressed by more than ``--max-regression`` (default 2x —
+wide enough to absorb runner-to-runner variance, tight enough to catch
+an accidentally de-vectorized hot path).
+
+The baseline's ``gate`` list names the metrics under contract (the
+vectorized-pool and fleet-engine tick throughputs); everything else in
+the record is informational. Regenerate the baseline with::
+
+    PYTHONPATH=src:. python benchmarks/run.py --json \\
+        benchmarks/BENCH_baseline.json --only pool
+    # then re-add the "gate" list to the file
+
+Usage::
+
+    python benchmarks/perf_gate.py BENCH_pr4.json \\
+        [--baseline benchmarks/BENCH_baseline.json] [--max-regression 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "BENCH_baseline.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="--json record of the run under test")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--max-regression", type=float, default=2.0,
+                    help="fail when current < baseline / this factor")
+    args = ap.parse_args()
+
+    with open(args.current) as fh:
+        current = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    gate = baseline.get("gate")
+    if not gate:
+        gate = sorted(m for m in baseline.get("metrics", {})
+                      if "ticks_per_s" in m)
+    if not gate:
+        sys.exit(f"baseline {args.baseline} has no gated metrics")
+
+    failures = []
+    print(f"{'metric':44s} {'baseline':>12s} {'current':>12s} "
+          f"{'ratio':>7s}  verdict")
+    for name in gate:
+        base = baseline.get("metrics", {}).get(name)
+        cur = current.get("metrics", {}).get(name)
+        if base is None:
+            failures.append(f"{name}: missing from baseline")
+            continue
+        if cur is None:
+            failures.append(f"{name}: missing from current run "
+                            "(did the pool suite run?)")
+            print(f"{name:44s} {base:12.1f} {'---':>12s} {'---':>7s}  "
+                  "MISSING")
+            continue
+        ratio = cur / base if base > 0 else float("inf")
+        ok = cur * args.max_regression >= base
+        print(f"{name:44s} {base:12.1f} {cur:12.1f} {ratio:7.2f}  "
+              f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(
+                f"{name}: {cur:.1f} vs baseline {base:.1f} "
+                f"({base / max(cur, 1e-9):.1f}x slower; "
+                f"allowed {args.max_regression:.1f}x)")
+    if failures:
+        sys.exit("perf gate FAILED:\n  " + "\n  ".join(failures))
+    print(f"perf gate passed ({len(gate)} metrics, "
+          f"max allowed regression {args.max_regression:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

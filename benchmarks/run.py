@@ -1,9 +1,15 @@
 """Benchmark driver: one section per paper table/figure + framework
-benches. Prints ``name,us_per_call,derived`` CSV."""
+benches. Prints ``name,us_per_call,derived`` CSV; ``--json PATH``
+additionally writes a machine-readable record (per-suite wall times,
+emitted rows, numeric metrics) that ``benchmarks/perf_gate.py`` compares
+against the committed ``benchmarks/BENCH_baseline.json`` in CI."""
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
+import time
 import traceback
 
 
@@ -15,15 +21,17 @@ def main() -> None:
                     help="skip host-executed model measurements")
     ap.add_argument("--list", action="store_true",
                     help="print registered suite names and exit")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results to PATH")
     args = ap.parse_args()
 
-    from benchmarks import (bench_kernels, bench_step, fig6_transcoding,
-                            fig7_proportionality, fig8_hw_codec,
-                            fig11_dl_serving, fig12_dl_proportionality,
-                            fig13_collaborative, fig14_mixed_tenancy,
-                            fig15_dvfs_pareto, roofline_table,
-                            table2_microbench, table3_network_bound,
-                            table4_tco, table5_tpc)
+    from benchmarks import (bench_kernels, bench_pool, bench_step, common,
+                            fig6_transcoding, fig7_proportionality,
+                            fig8_hw_codec, fig11_dl_serving,
+                            fig12_dl_proportionality, fig13_collaborative,
+                            fig14_mixed_tenancy, fig15_dvfs_pareto,
+                            fig16_fleet, roofline_table, table2_microbench,
+                            table3_network_bound, table4_tco, table5_tpc)
 
     suites = {
         "table2": table2_microbench.run,
@@ -37,10 +45,12 @@ def main() -> None:
             executable=not args.fast)),
         "fig14": fig14_mixed_tenancy.run,
         "fig15": fig15_dvfs_pareto.run,
+        "fig16": (lambda: fig16_fleet.run(perf=not args.fast)),
         "table4": table4_tco.run,
         "table5": table5_tpc.run,
         "kernels": bench_kernels.run,
         "steps": bench_step.run,
+        "pool": bench_pool.run,
         "roofline": roofline_table.run,
     }
     if args.list:
@@ -48,15 +58,36 @@ def main() -> None:
             print(name)
         return
     selected = (args.only.split(",") if args.only else list(suites))
+    unknown = [name for name in selected if name not in suites]
+    if unknown:
+        sys.exit(f"unknown suite(s): {', '.join(unknown)}\n"
+                 f"valid suites: {', '.join(suites)}")
+    record = common.start_json_recording() if args.json else None
     print("name,us_per_call,derived")
     failures = []
     for name in selected:
+        common.begin_suite(name)
+        t0 = time.perf_counter()
+        ok = True
         try:
             suites[name]()
         except Exception as e:  # noqa: BLE001
+            ok = False
             failures.append((name, repr(e)))
             traceback.print_exc()
             print(f"{name}/FAILED,0.0,{e!r}")
+        finally:
+            common.end_suite(name, time.perf_counter() - t0, ok)
+    if record is not None:
+        record["meta"] = {
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "suites_run": selected,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(record, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {args.json}")
     if failures:
         sys.exit(f"benchmark suites failed: {[f[0] for f in failures]}")
 

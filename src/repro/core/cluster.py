@@ -7,8 +7,8 @@ ICI neighborhood ≙ PCB group, pod ≙ server). All downstream layers
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List
 
 
 @dataclass(frozen=True)

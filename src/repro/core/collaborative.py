@@ -18,13 +18,11 @@ This module provides:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.collectives import naive_ag_matmul, ring_ag_matmul

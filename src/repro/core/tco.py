@@ -6,8 +6,8 @@ its bottom line and ``throughput_per_cost`` produces Table 5.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+from dataclasses import dataclass
+from typing import Dict
 
 ELECTRICITY_USD_PER_KWH = 0.0786   # EIA industrial avg, Aug 2021–Jul 2022
 PUE_EDGE = 2.0

@@ -16,7 +16,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from repro.distributed.compat import pvary, shard_map
 
 

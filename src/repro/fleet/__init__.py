@@ -1,0 +1,68 @@
+"""``repro.fleet`` — fleet-scale simulation: N racks behind a router.
+
+The paper measures one 60-SoC rack; this layer aggregates many such
+racks behind a geo-routed load balancer so the energy-proportionality
+claims can be evaluated at the scale public edge platforms run at
+("millions of users"):
+
+  * :class:`~repro.fleet.fleet.Fleet` — N racks (mixed
+    :class:`~repro.core.cluster.ClusterSpec`\\ s allowed), one offered
+    load, tick-by-tick routing + per-rack elastic unit governors; two
+    engines behind ``backend="scalar" | "vector"`` with
+    bitwise-identical telemetry;
+  * :mod:`~repro.fleet.router` — round-robin, join-shortest-queue
+    (water-fill), and power-aware (efficiency-packed) request routers;
+  * :mod:`~repro.fleet.traces` — diurnal, flash-crowd, and replayed
+    arrival traces, scalable to a target user population;
+  * :class:`~repro.fleet.telemetry.FleetTelemetry` — fleet roll-ups
+    feeding the existing energy/TCO models.
+
+Typical use::
+
+    from repro.core.cluster import soc_cluster
+    from repro.fleet import (Fleet, PowerAwareRouter, diurnal_trace,
+                             homogeneous_fleet, scale_to_users)
+
+    racks = homogeneous_fleet(soc_cluster(), n_racks=100, unit_rate=30.0)
+    fleet = Fleet(racks, router=PowerAwareRouter(), dt_s=60.0)
+    trace = scale_to_users(diurnal_trace(peak_rps=1.0, hours=24),
+                           users=3e6, rps_per_user=0.05)
+    tel = fleet.play_trace(trace)
+    print(tel.summary())
+"""
+from repro.fleet.fleet import Fleet, RackConfig, homogeneous_fleet
+from repro.fleet.router import (
+    ROUTERS,
+    FleetView,
+    JoinShortestQueueRouter,
+    PowerAwareRouter,
+    RoundRobinRouter,
+    Router,
+)
+from repro.fleet.telemetry import FleetTelemetry, empirical_proportionality
+from repro.fleet.traces import (
+    diurnal_trace,
+    flash_crowd_trace,
+    replay_trace,
+    save_trace,
+    scale_to_users,
+)
+
+__all__ = [
+    "Fleet",
+    "RackConfig",
+    "homogeneous_fleet",
+    "Router",
+    "FleetView",
+    "RoundRobinRouter",
+    "JoinShortestQueueRouter",
+    "PowerAwareRouter",
+    "ROUTERS",
+    "FleetTelemetry",
+    "empirical_proportionality",
+    "diurnal_trace",
+    "flash_crowd_trace",
+    "replay_trace",
+    "save_trace",
+    "scale_to_users",
+]

@@ -1,0 +1,446 @@
+"""``Fleet`` — N racks behind a geo-routed load balancer.
+
+The paper prototypes one 60-SoC rack; public edge platforms aggregate
+hundreds of such sites behind request routers. A :class:`Fleet` holds N
+racks (mixed :class:`~repro.core.cluster.ClusterSpec`\\ s allowed), a
+:class:`~repro.fleet.router.Router` that shards the fleet-level offered
+load across racks each tick, and per-rack elastic unit governors — the
+same activation policy the single-rack runtime uses, applied one level
+up.
+
+Two engines implement the same simulation:
+
+  * ``backend="scalar"`` — one full per-unit
+    :class:`~repro.runtime.ClusterRuntime` per rack (the reference:
+    every unit is an object, every tick walks every rack's pool);
+  * ``backend="vector"`` — rack state stacked into numpy arrays
+    (activation targets, cooldown timers, and the closed-form
+    binary-gating power integral computed elementwise across all racks
+    at once), with per-rack fluid FIFO queues kept for exact request
+    latencies.
+
+The vector engine replicates the scalar engine's arithmetic operation
+for operation, so the two produce **bitwise-identical** telemetry while
+the vector engine runs an order of magnitude faster — fast enough to
+sweep 100 racks x 24 simulated hours in seconds
+(``benchmarks/fig16_fleet.py``). The vector engine covers the
+binary-gating power model (no per-rack ``freq_governor`` /
+``hedge_after_s``); configurations that need the DVFS or hedging paths
+run under ``backend="scalar"``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterSpec
+from repro.fleet.router import FleetView, JoinShortestQueueRouter, Router
+from repro.fleet.telemetry import FleetTelemetry
+from repro.runtime import (
+    ClusterRuntime,
+    QueueWorkload,
+    Request,
+    ScalePolicy,
+    Telemetry,
+    latency_percentiles,
+)
+
+__all__ = ["RackConfig", "Fleet", "homogeneous_fleet"]
+
+
+@dataclass
+class RackConfig:
+    """One rack's binding into the fleet."""
+
+    spec: ClusterSpec
+    unit_rate: float  # requests/s one unit sustains
+    policy: Optional[ScalePolicy] = None
+    name: str = ""
+
+
+def homogeneous_fleet(
+    spec: ClusterSpec,
+    n_racks: int,
+    unit_rate: float,
+    policy: Optional[ScalePolicy] = None,
+) -> List[RackConfig]:
+    """N identical racks (the common case for a single-platform fleet)."""
+    return [
+        RackConfig(spec, unit_rate, policy, name=f"{spec.name}/{i}")
+        for i in range(n_racks)
+    ]
+
+
+class _ScalarFleetEngine:
+    """Reference engine: one per-unit ClusterRuntime per rack."""
+
+    backend = "scalar"
+
+    def __init__(
+        self,
+        racks: Sequence[RackConfig],
+        dt_s: float,
+        idle_units_off: bool,
+    ):
+        self.dt_s = dt_s
+        self.now = 0.0
+        self.rts: List[ClusterRuntime] = []
+        for i, rc in enumerate(racks):
+            wl = QueueWorkload(rc.unit_rate, name=rc.name or f"rack{i}")
+            self.rts.append(
+                ClusterRuntime(
+                    rc.spec,
+                    wl,
+                    policy=rc.policy,
+                    window_s=dt_s,
+                    dt_s=dt_s,
+                    idle_units_off=idle_units_off,
+                    backend="scalar",
+                )
+            )
+
+    def queued_cost(self) -> np.ndarray:
+        return np.array([rt.workload.pending_cost for rt in self.rts], float)
+
+    def active_units(self) -> np.ndarray:
+        return np.array([rt.active_units for rt in self.rts], np.int64)
+
+    def tick(self, assign_rps, dt) -> Tuple[np.ndarray, np.ndarray]:
+        t = self.now
+        for r, rt in enumerate(self.rts):
+            work = float(assign_rps[r]) * dt
+            if work > 0:
+                rt.submit(
+                    count=work,
+                    request=Request(cost=work, arrival_s=t + 0.5 * dt),
+                )
+        n = len(self.rts)
+        queued = np.zeros(n, np.int64)
+        conc = np.zeros(n, np.int64)
+        for r, rt in enumerate(self.rts):
+            stats = rt.tick(dt)
+            queued[r] = stats.queued
+            conc[r] = stats.concurrency
+        self.now = t + dt
+        return queued, conc
+
+    def per_rack_telemetry(self) -> List[Telemetry]:
+        return [rt.cluster_telemetry() for rt in self.rts]
+
+
+class _VectorFleetEngine:
+    """Stacked engine: rack state as arrays, one numpy pass per tick.
+
+    Every floating-point expression mirrors the scalar engine's
+    operation order exactly (``UnitGovernor.target_units``,
+    ``UnitPool.charge``'s binary-gating branch, and the windowed rate
+    estimate collapse to closed forms when ``window_s == dt_s`` and
+    group size is 1), so per-rack telemetry is bitwise-identical to the
+    scalar engine's. The fluid FIFO queues stay as per-rack
+    :class:`QueueWorkload` objects — both engines share that code, so
+    request latencies match by construction.
+    """
+
+    backend = "vector"
+
+    def __init__(
+        self,
+        racks: Sequence[RackConfig],
+        dt_s: float,
+        idle_units_off: bool,
+    ):
+        for rc in racks:
+            pol = rc.policy
+            if pol is not None and (
+                pol.freq_governor is not None or pol.hedge_after_s is not None
+            ):
+                raise ValueError(
+                    "the vector fleet engine models binary per-unit "
+                    "gating only (no freq_governor / hedge_after_s); "
+                    "use Fleet(backend='scalar') for those policies"
+                )
+        self.dt_s = dt_s
+        self.now = 0.0
+        pols = [rc.policy or ScalePolicy() for rc in racks]
+        units = [rc.spec.unit for rc in racks]
+        self.n_units = np.array([rc.spec.n_units for rc in racks], np.int64)
+        self.unit_rate = np.array([rc.unit_rate for rc in racks], float)
+        self.headroom = np.array([p.headroom for p in pols], float)
+        self.min_units = np.array([p.min_units for p in pols], np.int64)
+        self.minq = np.maximum(1, np.minimum(self.min_units, self.n_units))
+        self.cooldown = np.array([p.cooldown_s for p in pols], float)
+        self.p_shared = np.array([rc.spec.p_shared for rc in racks], float)
+        self.p_idle = np.array([u.p_idle for u in units], float)
+        self.p_peak = np.array([u.p_peak for u in units], float)
+        self.gamma = np.array([u.gamma for u in units], float)
+        self.p_base = np.array(
+            [u.p_off if idle_units_off else u.p_idle for u in units],
+            float,
+        )
+        self.wls = [
+            QueueWorkload(rc.unit_rate, name=rc.name or f"rack{i}")
+            for i, rc in enumerate(racks)
+        ]
+        n = len(racks)
+        self.active = self.minq.copy()
+        self.last_down = np.full(n, -1e9)
+        self.scale_events = np.zeros(n, np.int64)
+        self.energy = np.zeros(n)
+        self.unit_energy = np.zeros(n)
+        self.served_acc = np.zeros(n)
+        self.responses: List[list] = [[] for _ in range(n)]
+        self._t_hist: List[float] = []
+        self._offered_rows: List[np.ndarray] = []
+        self._active_rows: List[np.ndarray] = []
+        self._power_rows: List[np.ndarray] = []
+        self._util_rows: List[np.ndarray] = []
+
+    def queued_cost(self) -> np.ndarray:
+        return np.array([wl.pending_cost for wl in self.wls], float)
+
+    def active_units(self) -> np.ndarray:
+        return self.active.copy()
+
+    def tick(self, assign_rps, dt) -> Tuple[np.ndarray, np.ndarray]:
+        t = self.now
+        work = assign_rps * dt
+        for r in np.nonzero(work > 0)[0]:
+            req = Request(cost=float(work[r]), arrival_s=t + 0.5 * dt)
+            self.wls[r].submit(req)
+        # windowed rate estimate with window == dt: this tick's work
+        rate = work / dt
+        # UnitGovernor.target_units with perf_scale == 1.0, group == 1
+        need = rate * self.headroom / (self.unit_rate * 1.0)
+        raw = np.minimum(self.n_units, np.maximum(self.min_units, np.ceil(need)))
+        tgt = np.maximum(1, raw.astype(np.int64))
+        # UnitGovernor.apply_target: immediate scale-up, cooldown-gated
+        # scale-down to max(min floor, target)
+        active = self.active
+        up = tgt > active
+        keep = np.maximum(self.minq, tgt)
+        in_cooldown = t - self.last_down > self.cooldown
+        down = (tgt < active) & in_cooldown & (keep < active)
+        new_active = np.where(up, tgt, np.where(down, keep, active))
+        self.scale_events += up
+        self.scale_events += down
+        self.last_down = np.where(down, t, self.last_down)
+        self.active = new_active
+        # fluid FIFO drain per rack (QueueWorkload.step_fast — the
+        # allocation-light twin of step(), identical arithmetic)
+        n = len(self.wls)
+        acts = new_active.tolist()
+        utils_l: List[float] = []
+        served_l: List[float] = []
+        queued_l: List[int] = []
+        conc_l: List[int] = []
+        for r in range(n):
+            wl = self.wls[r]
+            used, util, q, c = wl.step_fast(acts[r], dt, t)
+            utils_l.append(util)
+            served_l.append(used)
+            queued_l.append(q)
+            conc_l.append(c)
+            if wl._completed:
+                self.responses[r].extend(wl.drain())
+        utils = np.asarray(utils_l, float)
+        served = np.asarray(served_l, float)
+        queued = np.asarray(queued_l, np.int64)
+        conc = np.asarray(conc_l, np.int64)
+        # UnitPool.charge, binary-gating branch, elementwise per rack
+        u = np.minimum(np.maximum(utils, 0.0), 1.0)
+        af = new_active.astype(float)
+        p_units = 0.0 + af * (
+            self.p_idle + (self.p_peak - self.p_idle) * u**self.gamma
+        )
+        p_rest = (self.n_units - new_active).astype(float) * self.p_base
+        total = self.p_shared + 0.0 + p_units + p_rest
+        self.energy += total * dt
+        self.unit_energy += p_units * dt
+        self.served_acc += served
+        util_agg = np.divide(af * u, af, out=np.zeros(n), where=af > 0)
+        self._t_hist.append(t)
+        self._offered_rows.append(rate)
+        self._active_rows.append(new_active)
+        self._power_rows.append(total)
+        self._util_rows.append(util_agg)
+        self.now = t + dt
+        return queued, conc
+
+    def per_rack_telemetry(self) -> List[Telemetry]:
+        ts = np.asarray(self._t_hist, float)
+        offered = np.stack(self._offered_rows)  # (ticks, racks)
+        active = np.stack(self._active_rows)
+        power = np.stack(self._power_rows)
+        util = np.stack(self._util_rows)
+        out = []
+        for r in range(len(self.wls)):
+            p50, p99 = latency_percentiles(self.responses[r])
+            out.append(
+                Telemetry(
+                    time_s=ts,
+                    offered_load=offered[:, r].copy(),
+                    active_units=active[:, r].astype(float),
+                    power_w=power[:, r].copy(),
+                    utilization=util[:, r].copy(),
+                    served=float(self.served_acc[r]),
+                    scale_events=int(self.scale_events[r]),
+                    p50_latency_s=p50,
+                    p99_latency_s=p99,
+                    energy_j=float(self.energy[r]),
+                    unit_energy_j=float(self.unit_energy[r]),
+                    responses=list(self.responses[r]),
+                    workload=self.wls[r].describe(),
+                )
+            )
+        return out
+
+
+class Fleet:
+    """N racks + a router, played against a fleet-level offered load.
+
+    ``dt_s`` is fixed at construction (the per-rack rate windows are
+    sized to it). ``play_trace`` advances tick by tick: route the
+    tick's offered rps across racks, submit each rack's shard, advance
+    every rack's governor/queue/power integral, then keep ticking until
+    every queue drains.
+    """
+
+    def __init__(
+        self,
+        racks: Sequence[RackConfig],
+        router: Optional[Router] = None,
+        dt_s: float = 60.0,
+        backend: str = "vector",
+        idle_units_off: bool = True,
+    ):
+        assert racks, "need at least one rack"
+        self.racks = list(racks)
+        self.router = router or JoinShortestQueueRouter()
+        self.dt_s = dt_s
+        self.backend = backend
+        if backend == "scalar":
+            self.engine = _ScalarFleetEngine(self.racks, dt_s, idle_units_off)
+        elif backend == "vector":
+            self.engine = _VectorFleetEngine(self.racks, dt_s, idle_units_off)
+        else:
+            raise ValueError(
+                f"unknown fleet backend {backend!r}; "
+                "use 'scalar' or 'vector'"
+            )
+        self._capacity = np.array(
+            [rc.spec.n_units * rc.unit_rate for rc in self.racks], float
+        )
+        self._n_units = np.array([rc.spec.n_units for rc in self.racks], np.int64)
+        self._jpr = np.array(
+            [
+                (rc.spec.p_shared + rc.spec.n_units * rc.spec.unit.power(1.0))
+                / (rc.spec.n_units * rc.unit_rate)
+                for rc in self.racks
+            ],
+            float,
+        )
+        self.rack_names = [
+            rc.name or f"{rc.spec.name}/{i}" for i, rc in enumerate(self.racks)
+        ]
+        # cumulative per-tick driver history (grows across play_trace calls,
+        # in lockstep with the engines' own cumulative state)
+        self._offered: List[float] = []
+        self._assigned: List[np.ndarray] = []
+        self._queued_rows: List[np.ndarray] = []
+        self._wall_s = 0.0
+        self._drained = True
+
+    @property
+    def n_racks(self) -> int:
+        return len(self.racks)
+
+    @property
+    def capacity_rps(self) -> float:
+        """Aggregate peak service rate of the fleet."""
+        return float(self._capacity.sum())
+
+    def view(self) -> FleetView:
+        return FleetView(
+            t=self.engine.now,
+            dt_s=self.dt_s,
+            capacity_rps=self._capacity,
+            queued_cost=self.engine.queued_cost(),
+            active_units=self.engine.active_units(),
+            n_units=self._n_units,
+            full_load_j_per_req=self._jpr,
+        )
+
+    def play_trace(
+        self, trace_rps: Sequence[float], drain: bool = True
+    ) -> FleetTelemetry:
+        """Route and serve ``trace_rps`` tick by tick, then keep ticking
+        until every rack's queue drains (bounded by a 10x-trace-length
+        safety cap; if backlog still remains — a sustained-overload
+        trace — the returned telemetry carries ``drained=False`` and its
+        latency percentiles cover completed requests only). The
+        telemetry always covers the fleet's *entire* history — calling
+        ``play_trace`` again continues the same simulation (clock,
+        queues, energy) and returns the cumulative roll-up, mirroring
+        the engines' own cumulative state."""
+        dt = self.dt_s
+        trace = np.asarray(trace_rps, float)
+        t0 = time.perf_counter()
+        zero = np.zeros(self.n_racks)
+        queued = conc = None
+        for rps in trace:
+            assign = np.asarray(self.router.route(float(rps), self.view()), float)
+            self._offered.append(float(rps))
+            self._assigned.append(assign)
+            queued, conc = self.engine.tick(assign, dt)
+            self._queued_rows.append(queued)
+        if drain:
+            for _ in range(10 * len(trace) + 100):
+                self._offered.append(0.0)
+                self._assigned.append(zero)
+                queued, conc = self.engine.tick(zero, dt)
+                self._queued_rows.append(queued)
+                if int(queued.sum()) == 0 and int(conc.sum()) == 0:
+                    break
+        if queued is not None:
+            self._drained = (
+                int(queued.sum()) == 0 and int(conc.sum()) == 0
+            )
+        self._wall_s += time.perf_counter() - t0
+        return self._build_telemetry()
+
+    # ------------------------------------------------------------------
+    def _build_telemetry(self) -> FleetTelemetry:
+        offered = self._offered
+        assigned = self._assigned
+        queued_rows = self._queued_rows
+        wall = self._wall_s
+        per_rack = self.engine.per_rack_telemetry()
+        power = np.stack([tel.power_w for tel in per_rack])  # (R, T)
+        active = np.stack([tel.active_units for tel in per_rack])
+        lats = np.array([r.latency_s for tel in per_rack for r in tel.responses])
+        if len(lats):
+            p50, p95, p99 = (float(np.percentile(lats, q)) for q in (50, 95, 99))
+        else:
+            p50 = p95 = p99 = 0.0
+        return FleetTelemetry(
+            time_s=per_rack[0].time_s,
+            offered_rps=np.asarray(offered, float),
+            assigned_rps=np.stack(assigned).T,
+            active_units=active,
+            power_w=power,
+            queued=np.stack(queued_rows).T,
+            served=sum(tel.served for tel in per_rack),
+            energy_j=sum(tel.energy_j for tel in per_rack),
+            p50_latency_s=p50,
+            p95_latency_s=p95,
+            p99_latency_s=p99,
+            per_rack=per_rack,
+            rack_names=list(self.rack_names),
+            router=getattr(self.router, "name", type(self.router).__name__),
+            backend=self.backend,
+            wall_s=wall,
+            drained=self._drained,
+        )

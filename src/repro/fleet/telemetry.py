@@ -1,0 +1,150 @@
+"""Fleet-level telemetry roll-ups.
+
+:class:`FleetTelemetry` aggregates per-rack
+:class:`~repro.runtime.result.Telemetry` into the fleet view the paper's
+claims are made at — total power tracking total offered load — and
+feeds the existing energy/TCO models: :meth:`energy_report` produces a
+:class:`repro.core.energy.EnergyReport` and
+:meth:`monthly_electricity_usd` prices the run with the
+``repro.core.tco`` constants (EIA rate x PUE).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.energy import EnergyReport
+from repro.core.tco import ELECTRICITY_USD_PER_KWH, PUE_EDGE
+from repro.runtime.result import Telemetry
+
+__all__ = ["FleetTelemetry", "empirical_proportionality"]
+
+
+def empirical_proportionality(offered: np.ndarray, power_w: np.ndarray) -> float:
+    """1 - mean |P/P_max - load/load_max| over a run's per-tick series —
+    the trace-driven analogue of
+    :func:`repro.core.energy.proportionality_index` (which scores the
+    *model* curve; this scores what a run actually did)."""
+    offered = np.asarray(offered, float)
+    power_w = np.asarray(power_w, float)
+    if len(offered) == 0 or power_w.max() <= 0 or offered.max() <= 0:
+        return 0.0
+    load = offered / offered.max()
+    p = power_w / power_w.max()
+    return float(1.0 - np.mean(np.abs(p - load)))
+
+
+@dataclass
+class FleetTelemetry:
+    """One fleet run: per-rack series plus fleet roll-ups."""
+
+    time_s: np.ndarray  # (ticks,)
+    offered_rps: np.ndarray  # (ticks,) fleet offered load
+    assigned_rps: np.ndarray  # (racks, ticks) router shards
+    active_units: np.ndarray  # (racks, ticks)
+    power_w: np.ndarray  # (racks, ticks) rack power incl. shared rail
+    queued: np.ndarray  # (racks, ticks) requests waiting after the tick
+    served: float
+    energy_j: float
+    p50_latency_s: float
+    p95_latency_s: float
+    p99_latency_s: float
+    per_rack: List[Telemetry] = field(default_factory=list)
+    rack_names: List[str] = field(default_factory=list)
+    router: str = ""
+    backend: str = "scalar"
+    wall_s: float = 0.0
+    # False when the post-trace drain hit its safety cap with backlog
+    # still queued (sustained overload): served < offered and the
+    # latency percentiles cover completed requests only.
+    drained: bool = True
+
+    # ----- derived ---------------------------------------------------------
+    @property
+    def n_racks(self) -> int:
+        return int(self.power_w.shape[0])
+
+    @property
+    def ticks(self) -> int:
+        return int(len(self.time_s))
+
+    @property
+    def duration_s(self) -> float:
+        if self.ticks < 1:
+            return 0.0
+        dt = self.time_s[1] - self.time_s[0] if self.ticks > 1 else 1.0
+        return float(self.time_s[-1] - self.time_s[0] + dt)
+
+    @property
+    def total_power_w(self) -> np.ndarray:
+        """Fleet power per tick (sum over racks)."""
+        return self.power_w.sum(axis=0)
+
+    @property
+    def mean_power_w(self) -> float:
+        return float(self.total_power_w.mean()) if self.ticks else 0.0
+
+    @property
+    def peak_power_w(self) -> float:
+        return float(self.total_power_w.max()) if self.ticks else 0.0
+
+    @property
+    def mean_active_units(self) -> float:
+        if not self.ticks:
+            return 0.0
+        return float(self.active_units.sum(axis=0).mean())
+
+    @property
+    def throughput(self) -> float:
+        return self.served / max(self.duration_s, 1e-9)
+
+    @property
+    def tpe(self) -> float:
+        """Requests per joule — the paper's TpE, fleet-wide."""
+        return self.served / max(self.energy_j, 1e-9)
+
+    @property
+    def energy_kwh(self) -> float:
+        return self.energy_j / 3.6e6
+
+    def proportionality(self) -> float:
+        """How closely fleet power tracked fleet offered load."""
+        return empirical_proportionality(self.offered_rps, self.total_power_w)
+
+    # ----- bridges into the existing energy/TCO models ---------------------
+    def energy_report(self) -> EnergyReport:
+        return EnergyReport(
+            joules=self.energy_j,
+            avg_power_w=self.mean_power_w,
+            peak_power_w=self.peak_power_w,
+            items=self.served,
+            tpe=self.tpe,
+            proportionality=self.proportionality(),
+        )
+
+    def monthly_electricity_usd(self, pue: float = PUE_EDGE) -> float:
+        """Extrapolate the run's average power to a 30-day electricity
+        bill at the ``core.tco`` EIA rate, including PUE overhead."""
+        monthly_kwh = self.mean_power_w * 24 * 30 / 1000.0
+        return monthly_kwh * ELECTRICITY_USD_PER_KWH * pue
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "racks": self.n_racks,
+            "ticks": self.ticks,
+            "served": self.served,
+            "energy_kwh": self.energy_kwh,
+            "tpe": self.tpe,
+            "mean_power_w": self.mean_power_w,
+            "peak_power_w": self.peak_power_w,
+            "mean_active_units": self.mean_active_units,
+            "p50_latency_s": self.p50_latency_s,
+            "p95_latency_s": self.p95_latency_s,
+            "p99_latency_s": self.p99_latency_s,
+            "proportionality": self.proportionality(),
+            "monthly_electricity_usd": self.monthly_electricity_usd(),
+            "wall_s": self.wall_s,
+            "drained": float(self.drained),
+        }

@@ -2,7 +2,7 @@
 (arch x shape x step-kind) cell. No device allocation happens here."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

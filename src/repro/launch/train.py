@@ -11,9 +11,8 @@ import argparse
 import json
 import logging
 
-import jax
 
-from repro.config import SHAPES, TrainConfig, get_config, smoke_config
+from repro.config import TrainConfig, get_config, smoke_config
 from repro.launch.specs import default_train_config
 from repro.training.data import DataConfig, PrefetchingLoader
 from repro.training.train_loop import Trainer

@@ -7,7 +7,7 @@ logical sharding names for each param leaf (consumed by
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

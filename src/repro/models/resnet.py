@@ -4,7 +4,7 @@ compute on this host and to drive the energy/TCO models.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,13 +9,12 @@ depth (one trace per distinct layer signature) for the 40-cell dry-run.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import ATTN, MAMBA, ModelConfig
+from repro.config import ATTN, ModelConfig
 from repro.distributed.sharding import shard
 from repro.models import attention as attn_mod
 from repro.models import mamba2 as mamba_mod

@@ -7,7 +7,7 @@ measurements do.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -36,12 +36,13 @@ from repro.power.governor import (GOVERNORS, FixedFreqGovernor, FreqContext,
 from repro.power.opp import (OperatingPoint, OPPTable, build_table,
                              opp_table_for_unit, sd865_opp_table,
                              single_opp_table, unit_power)
-from repro.power.thermal import ThermalModel, ThermalParams
+from repro.power.thermal import (ThermalModel, ThermalParams,
+                                 VectorThermalModel)
 
 __all__ = [
     "OperatingPoint", "OPPTable", "build_table", "opp_table_for_unit",
     "sd865_opp_table", "single_opp_table", "unit_power",
-    "ThermalModel", "ThermalParams",
+    "ThermalModel", "ThermalParams", "VectorThermalModel",
     "FreqContext", "FreqGovernor", "FixedFreqGovernor",
     "RaceToIdleGovernor", "SchedutilGovernor", "ThermalAwareGovernor",
     "GOVERNORS",

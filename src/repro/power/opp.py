@@ -26,7 +26,7 @@ strictly additive by default.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 from repro.core.cluster import UnitSpec
 

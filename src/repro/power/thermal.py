@@ -26,6 +26,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
+import numpy as np
+
 from repro.core.cluster import ClusterSpec, UnitSpec
 from repro.power.opp import OPPTable, unit_power
 
@@ -149,3 +151,65 @@ class ThermalModel:
             if self.steady_die_temp_c(p_w) <= self.params.t_release_c:
                 return idx
         return table.lowest
+
+
+class VectorThermalModel(ThermalModel):
+    """Array-backed thermal network — bitwise-identical to the scalar
+    :class:`ThermalModel`.
+
+    The per-unit Euler update is elementwise (IEEE float64 ops are
+    identical whether issued one unit at a time or over a whole array)
+    and the per-group heat flows are accumulated by ``np.bincount``,
+    which adds weights in input order — the same ascending-unit order
+    the scalar loop uses — so every temperature, latch, and fan value
+    matches the scalar model bit for bit. Used by
+    :class:`~repro.runtime.pool.VectorUnitPool` (``backend="vector"``).
+    """
+
+    def __init__(self, spec: ClusterSpec,
+                 params: Optional[ThermalParams] = None):
+        super().__init__(spec, params)
+        self.t_die = np.asarray(self.t_die, float)
+        self.t_pcb = np.asarray(self.t_pcb, float)
+        self.throttled = np.zeros(spec.n_units, bool)
+        self._group_idx = np.asarray(self._group_of, np.int64)
+
+    # ------------------------------------------------------------------
+    def _fan_frac(self) -> float:
+        p = self.params
+        hottest = float(self.t_pcb.max())
+        span = max(p.fan_t_high_c - p.fan_t_low_c, 1e-9)
+        return min(1.0, max(0.0, (hottest - p.fan_t_low_c) / span))
+
+    def max_die_temp_c(self) -> float:
+        return float(self.t_die.max())
+
+    def n_throttled(self) -> int:
+        return int(np.count_nonzero(self.throttled))
+
+    # ------------------------------------------------------------------
+    def step(self, dt_s: float, unit_power_w: Sequence[float]) -> float:
+        p = self.params
+        pw = np.asarray(unit_power_w, float)
+        assert pw.shape == (self.spec.n_units,)
+        self.fan_frac = self._fan_frac()
+        r_pcb = self.r_pcb_eff(self.fan_frac)
+        tau = min(p.r_die_c_per_w * p.c_die_j_per_c,
+                  r_pcb * p.c_pcb_j_per_c)
+        n_sub = max(1, int(dt_s / max(0.25 * tau, 1e-6)) + 1)
+        h = dt_s / n_sub
+        n_groups = len(self._groups)
+        for _ in range(n_sub):
+            f = (self.t_die - self.t_pcb[self._group_idx]) \
+                / p.r_die_c_per_w
+            flows = np.bincount(self._group_idx, weights=f,
+                                minlength=n_groups)
+            self.t_die = self.t_die + h * (pw - f) / p.c_die_j_per_c
+            out = (self.t_pcb - p.t_ambient_c) / r_pcb
+            self.t_pcb = self.t_pcb + h * (flows - out) / p.c_pcb_j_per_c
+        # hysteresis latch: a throttled die stays latched until it cools
+        # below the release point; an unlatched one trips at t_trip_c
+        self.throttled = np.where(self.throttled,
+                                  ~(self.t_die <= p.t_release_c),
+                                  self.t_die >= p.t_trip_c)
+        return self.fan_power_w

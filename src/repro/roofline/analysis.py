@@ -24,10 +24,9 @@ replica-group size, and convert to ring wire bytes per chip:
 from __future__ import annotations
 
 import json
-import math
 import re
 from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 from repro.roofline.hw import TPU_V5E, ChipSpec
 

@@ -31,7 +31,8 @@ from repro.runtime.cluster_runtime import ClusterRuntime
 from repro.runtime.multi_tenant import (MultiTenantRuntime, Tenant,
                                         weighted_fair_share)
 from repro.runtime.policy import ScalePolicy, UnitGovernor
-from repro.runtime.pool import UnitPool, UnitState
+from repro.runtime.pool import (UnitPool, UnitState, VectorUnitPool,
+                                make_unit_pool)
 from repro.runtime.result import (Request, Response, StepStats, Telemetry,
                                   latency_percentiles)
 from repro.runtime.workload import (DLServingWorkload, LMServingWorkload,
@@ -40,8 +41,8 @@ from repro.runtime.workload import (DLServingWorkload, LMServingWorkload,
 
 __all__ = [
     "ClusterRuntime", "MultiTenantRuntime", "Tenant",
-    "weighted_fair_share", "UnitPool", "UnitState",
-    "UnitGovernor", "ScalePolicy",
+    "weighted_fair_share", "UnitPool", "VectorUnitPool", "make_unit_pool",
+    "UnitState", "UnitGovernor", "ScalePolicy",
     "Request", "Response", "StepStats", "Telemetry",
     "latency_percentiles",
     "Workload", "QueueWorkload", "DLServingWorkload", "LMServingWorkload",

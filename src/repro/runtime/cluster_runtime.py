@@ -54,7 +54,8 @@ class ClusterRuntime(MultiTenantRuntime):
                  idle_units_off: bool = True,
                  model_wake_latency: bool = False, group_units: int = 1,
                  opp_table: Optional[OPPTable] = None,
-                 thermal: Union[ThermalParams, ThermalModel, None] = None):
+                 thermal: Union[ThermalParams, ThermalModel, None] = None,
+                 backend: str = "scalar"):
         # model_wake_latency matters only for sub-tick resolution
         # (wake_latency_s > dt_s); see UnitGovernor.apply_target.
         if unit_rate is None:
@@ -69,7 +70,7 @@ class ClusterRuntime(MultiTenantRuntime):
                     unit_rate=unit_rate, group_units=group_units)],
             dt_s=dt_s, window_s=window_s, idle_units_off=idle_units_off,
             model_wake_latency=model_wake_latency,
-            opp_table=opp_table, thermal=thermal)
+            opp_table=opp_table, thermal=thermal, backend=backend)
         self.workload = workload
 
     # ------------------------------------------------------------------

@@ -51,7 +51,7 @@ from repro.core.cluster import ClusterSpec
 from repro.power.opp import OPPTable
 from repro.power.thermal import ThermalModel, ThermalParams
 from repro.runtime.policy import ScalePolicy, UnitGovernor
-from repro.runtime.pool import UnitPool
+from repro.runtime.pool import make_unit_pool
 from repro.runtime.result import (Request, Response, StepStats, Telemetry,
                                   latency_percentiles)
 from repro.runtime.workload import Workload
@@ -132,14 +132,17 @@ class MultiTenantRuntime:
                  idle_units_off: bool = True,
                  model_wake_latency: bool = False,
                  opp_table: Optional[OPPTable] = None,
-                 thermal: Union[ThermalParams, ThermalModel, None] = None):
+                 thermal: Union[ThermalParams, ThermalModel, None] = None,
+                 backend: str = "scalar"):
         assert tenants, "need at least one tenant"
         names = [t.name for t in tenants]
         assert len(set(names)) == len(names), f"duplicate tenant names: {names}"
         self.spec = spec
         self.dt_s = dt_s
-        self.pool = UnitPool(spec, idle_units_off=idle_units_off,
-                             opp_table=opp_table, thermal=thermal)
+        self.backend = backend
+        self.pool = make_unit_pool(spec, backend=backend,
+                                   idle_units_off=idle_units_off,
+                                   opp_table=opp_table, thermal=thermal)
         self._t = 0.0
         self._states: Dict[str, _TenantState] = {}
         floors = 0

@@ -13,7 +13,7 @@ from typing import TYPE_CHECKING, List, Optional, Tuple
 import numpy as np
 
 from repro.core.cluster import ClusterSpec
-from repro.runtime.pool import UnitPool
+from repro.runtime.pool import UnitPool, make_unit_pool
 from repro.runtime.result import (Response, Telemetry, latency_percentiles)
 
 if TYPE_CHECKING:   # deferred: repro.power.governor imports repro.core
@@ -64,7 +64,8 @@ class UnitGovernor:
                  policy: Optional[ScalePolicy] = None,
                  window_s: float = 10.0, idle_units_off: bool = True,
                  model_wake_latency: bool = False, group_units: int = 1,
-                 pool: Optional[UnitPool] = None, tenant: str = "default"):
+                 pool: Optional[UnitPool] = None, tenant: str = "default",
+                 backend: str = "scalar"):
         assert unit_rate > 0, "unit_rate must be positive"
         self.spec = spec
         self.unit_rate = unit_rate
@@ -79,7 +80,8 @@ class UnitGovernor:
         assert self.group_units <= spec.n_units, \
             f"group_units={group_units} exceeds cluster size {spec.n_units}"
         self.pool = pool if pool is not None \
-            else UnitPool(spec, idle_units_off=idle_units_off)
+            else make_unit_pool(spec, backend=backend,
+                                idle_units_off=idle_units_off)
         self.tenant = tenant
         self.pool.force_active(tenant, self._quantize(self.policy.min_units))
         # frequency side: consulted only when the pool carries an OPP

@@ -22,21 +22,78 @@ down to the lowest OPP, and :meth:`charge` meters each unit at its
 network (fan power rides on the shared rail). With no table configured
 — the default — every DVFS path is skipped and the pool behaves
 bit-for-bit like the pre-power-layer code.
+
+Two interchangeable backends implement the same API:
+
+  * :class:`UnitPool` (``backend="scalar"``) — the reference
+    implementation: Python lists and per-unit loops;
+  * :class:`VectorUnitPool` (``backend="vector"``) — numpy state
+    arrays, mask/lexsort transitions, and exact integer caches for the
+    hot-path queries.
+
+Both backends route every floating-point reduction through the same
+order-pinned helpers (:func:`_power_from_opp_counts`,
+:func:`_perf_from_opp_counts`), so their telemetry — energy integrals,
+power/active histories, temperature and throttle histograms — is
+**bitwise identical**; only the wall-clock differs. Construct via
+:func:`make_unit_pool` (or the runtimes' ``backend=`` argument).
 """
 from __future__ import annotations
 
 from enum import Enum
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.cluster import ClusterSpec
+import numpy as np
+
+from repro.core.cluster import ClusterSpec, UnitSpec
 from repro.power.opp import OPPTable, unit_power
-from repro.power.thermal import ThermalModel, ThermalParams
+from repro.power.thermal import (ThermalModel, ThermalParams,
+                                 VectorThermalModel)
 
 
 class UnitState(str, Enum):
     OFF = "off"
     WAKING = "waking"
     ACTIVE = "active"
+
+
+# Integer state codes of the vector backend (index == _STATE_ENUM order).
+_OFF, _WAKING, _ACTIVE = 0, 1, 2
+_STATE_ENUM = (UnitState.OFF, UnitState.WAKING, UnitState.ACTIVE)
+
+
+def _power_from_opp_counts(unit: UnitSpec, util: float, table: OPPTable,
+                           counts: Sequence[int],
+                           ) -> Tuple[float, List[float]]:
+    """Tenant unit power from per-OPP active-unit counts.
+
+    Accumulates in ascending OPP order in *both* backends, so the
+    floating-point sum is order-pinned — this (plus exact integer
+    counts) is what makes ``backend="vector"`` bitwise-identical to
+    ``"scalar"``. Returns ``(tenant_power_w, per_opp_unit_power_w)``.
+    """
+    total = 0.0
+    pw = [0.0] * len(counts)
+    for k in range(len(counts)):
+        c = counts[k]
+        if c:
+            w = unit_power(unit, util, table[k])
+            pw[k] = w
+            total += c * w
+    return total, pw
+
+
+def _perf_from_opp_counts(table: OPPTable, counts: Sequence[int]) -> float:
+    """Mean perf-scale over active units, from per-OPP counts (same
+    order-pinning argument as :func:`_power_from_opp_counts`)."""
+    s = 0.0
+    n = 0
+    for k in range(len(counts)):
+        c = counts[k]
+        if c:
+            s += c * table[k].perf_scale
+            n += c
+    return s / n
 
 
 class UnitPool:
@@ -50,25 +107,32 @@ class UnitPool:
     unavailable to other tenants and to hedging.
     """
 
+    backend = "scalar"
+
     def __init__(self, spec: ClusterSpec, idle_units_off: bool = True,
                  opp_table: Optional[OPPTable] = None,
                  thermal: Union[ThermalParams, ThermalModel, None] = None):
-        self.spec = spec
-        self.idle_units_off = idle_units_off
+        if isinstance(thermal, ThermalParams):
+            thermal = ThermalModel(spec, thermal)
+        self._init_common(spec, idle_units_off, opp_table, thermal)
         n = spec.n_units
+        nominal = opp_table.nominal if opp_table is not None else 0
         self.state: List[UnitState] = [UnitState.OFF] * n
         self.owner: List[Optional[str]] = [None] * n
         self._ready_t: List[float] = [0.0] * n
+        self._req_opp: List[int] = [nominal] * n
+
+    def _init_common(self, spec: ClusterSpec, idle_units_off: bool,
+                     opp_table: Optional[OPPTable],
+                     thermal: Optional[ThermalModel]) -> None:
+        self.spec = spec
+        self.idle_units_off = idle_units_off
         self._groups = spec.groups()
         # DVFS state (absent by default: strictly additive)
         assert opp_table is not None or thermal is None, \
             "thermal throttling needs an opp_table to throttle within"
         self.opp_table = opp_table
-        if isinstance(thermal, ThermalParams):
-            thermal = ThermalModel(spec, thermal)
         self.thermal: Optional[ThermalModel] = thermal
-        nominal = opp_table.nominal if opp_table is not None else 0
-        self._req_opp: List[int] = [nominal] * n
         self._tenant_opp: Dict[str, int] = {}
         # accounting (cluster level; shared power charged once)
         self.energy_j = 0.0
@@ -148,13 +212,10 @@ class UnitPool:
         is scaled by."""
         if self.opp_table is None:
             return 1.0
-        mine = [u for u in range(self.spec.n_units)
-                if self.owner[u] == tenant
-                and self.state[u] is UnitState.ACTIVE]
-        if not mine:
+        mine = self._active_units_of(tenant)
+        if len(mine) == 0:
             return self.opp_table[self._tenant_opp_of(tenant)].perf_scale
-        return sum(self.opp_table[self.effective_opp(u)].perf_scale
-                   for u in mine) / len(mine)
+        return _perf_from_opp_counts(self.opp_table, self._opp_counts(mine))
 
     def max_sustainable_opp(self) -> Optional[int]:
         """Thermal ceiling for governors (None without a thermal model):
@@ -265,6 +326,34 @@ class UnitPool:
                 if self.opp_table is not None:
                     self._req_opp[u] = self._tenant_opp_of(tenant)
 
+    # -- backend hooks (overridden by VectorUnitPool) ----------------------
+    def _active_units_of(self, tenant: str) -> Sequence[int]:
+        """The tenant's active unit indices, in ascending unit order."""
+        return [u for u in range(self.spec.n_units)
+                if self.owner[u] == tenant
+                and self.state[u] is UnitState.ACTIVE]
+
+    def _opp_counts(self, mine: Sequence[int]) -> List[int]:
+        """Active-unit count per effective OPP index (exact integers)."""
+        counts = [0] * len(self.opp_table)
+        for u in mine:
+            counts[self.effective_opp(u)] += 1
+        return counts
+
+    def _scatter_unit_power(self, buf, mine: Sequence[int],
+                            pw_per_opp: Sequence[float]) -> None:
+        for u in mine:
+            buf[u] = pw_per_opp[self.effective_opp(u)]
+
+    def _spare_units(self) -> List[int]:
+        """Non-active unit indices (ascending); extras' heat is parked
+        here for the thermal step, consumed from the back."""
+        return [u for u in range(self.spec.n_units)
+                if self.state[u] is not UnitState.ACTIVE]
+
+    def _new_power_buf(self, fill: float):
+        return [fill] * self.spec.n_units
+
     # -- accounting --------------------------------------------------------
     def charge(self, t: float, dt_s: float, utils: Dict[str, float],
                extra: Optional[Dict[str, int]] = None,
@@ -313,23 +402,19 @@ class UnitPool:
         else:
             table = self.opp_table
             # per-unit draw, for thermal: off/waking units at the floor
-            per_unit_w = [p_base] * n if self.thermal is not None else None
+            per_unit_w = self._new_power_buf(p_base) \
+                if self.thermal is not None else None
             # borrowed/overflow units have no allocation of their own;
             # their heat still lands on physical silicon, so park it on
             # otherwise-inactive units for the thermal step
-            spare = [i for i in range(n)
-                     if self.state[i] is not UnitState.ACTIVE] \
-                if per_unit_w is not None else []
+            spare: Optional[List[int]] = None
             for name, cnt in powered.items():
                 u = min(max(utils[name], 0.0), 1.0)
-                mine = [i for i in range(n) if self.owner[i] == name
-                        and self.state[i] is UnitState.ACTIVE]
-                p = 0.0
-                for i in mine:
-                    pw = unit_power(unit, u, table[self.effective_opp(i)])
-                    p += pw
-                    if per_unit_w is not None:
-                        per_unit_w[i] = pw
+                mine = self._active_units_of(name)
+                p, pw_per_opp = _power_from_opp_counts(
+                    unit, u, table, self._opp_counts(mine))
+                if per_unit_w is not None:
+                    self._scatter_unit_power(per_unit_w, mine, pw_per_opp)
                 # extras are metered at the tenant's requested point
                 n_extra = cnt - len(mine)
                 if n_extra > 0:
@@ -337,6 +422,8 @@ class UnitPool:
                                     table[self._tenant_opp_of(name)])
                     p += n_extra * pw
                     if per_unit_w is not None:
+                        if spare is None:
+                            spare = self._spare_units()
                         for _ in range(n_extra):
                             if not spare:
                                 break
@@ -367,3 +454,275 @@ class UnitPool:
         self.offered_hist.append(offered)
         self.served_hist.append(served)
         return total, p_tenant, powered
+
+
+class VectorUnitPool(UnitPool):
+    """Array-backed :class:`UnitPool` (``backend="vector"``).
+
+    State lives in numpy arrays (int8 state codes, int64 owner ids,
+    float64 ready times), transitions are mask/lexsort operations, and
+    the per-(tenant, state) unit counts are maintained as exact integer
+    caches so the hot-path queries (``active``/``waking``/
+    ``free_units``) are O(1) instead of O(n_units). All float
+    reductions go through the shared order-pinned helpers, so telemetry
+    is bitwise-identical to the scalar backend — asserted by
+    ``tests/test_vector_parity.py``.
+    """
+
+    backend = "vector"
+
+    def __init__(self, spec: ClusterSpec, idle_units_off: bool = True,
+                 opp_table: Optional[OPPTable] = None,
+                 thermal: Union[ThermalParams, ThermalModel, None] = None):
+        if isinstance(thermal, ThermalParams):
+            thermal = VectorThermalModel(spec, thermal)
+        elif isinstance(thermal, ThermalModel) \
+                and not isinstance(thermal, VectorThermalModel):
+            raise TypeError(
+                "backend='vector' needs a VectorThermalModel; pass "
+                "ThermalParams and let the pool build one")
+        self._init_common(spec, idle_units_off, opp_table, thermal)
+        n = spec.n_units
+        nominal = opp_table.nominal if opp_table is not None else 0
+        self._state = np.zeros(n, np.int8)
+        self._owner = np.full(n, -1, np.int64)
+        self._ready = np.zeros(n, float)
+        self._req = np.full(n, nominal, np.int64)
+        self._tenant_ids: Dict[str, int] = {}
+        self._tenant_names: List[str] = []
+        self._group_idx = np.asarray(
+            [u // spec.group_size for u in range(n)], np.int64)
+        self._group_len = np.asarray([len(g) for g in self._groups],
+                                     np.int64)
+        # exact integer caches (updated on every transition)
+        self._n_waking_of: Dict[int, int] = {}
+        self._n_active_of: Dict[int, int] = {}
+        self._n_alloc = 0
+
+    # -- compatibility views ----------------------------------------------
+    # Tuples, not lists: code written against the scalar backend's mutable
+    # attributes (pool.state[u] = ...) must fail fast here rather than
+    # silently mutating a materialized temporary.
+    @property
+    def state(self) -> Tuple[UnitState, ...]:
+        """Read-only scalar-compatible view (tests/debugging); mutate
+        through wake/release/advance/force_active instead."""
+        return tuple(_STATE_ENUM[c] for c in self._state)
+
+    @property
+    def owner(self) -> Tuple[Optional[str], ...]:
+        return tuple(self._tenant_names[o] if o >= 0 else None
+                     for o in self._owner)
+
+    @property
+    def _req_opp(self) -> Tuple[int, ...]:
+        return tuple(int(r) for r in self._req)
+
+    def _tid(self, tenant: str, create: bool = False) -> Optional[int]:
+        tid = self._tenant_ids.get(tenant)
+        if tid is None and create:
+            tid = len(self._tenant_names)
+            self._tenant_ids[tenant] = tid
+            self._tenant_names.append(tenant)
+        return tid
+
+    # -- queries -----------------------------------------------------------
+    def active(self, tenant: str) -> int:
+        return self._n_active_of.get(self._tenant_ids.get(tenant), 0)
+
+    def waking(self, tenant: str) -> int:
+        return self._n_waking_of.get(self._tenant_ids.get(tenant), 0)
+
+    def owned(self, tenant: str) -> int:
+        return self.active(tenant) + self.waking(tenant)
+
+    def units_of(self, tenant: str) -> List[int]:
+        tid = self._tenant_ids.get(tenant)
+        if tid is None:
+            return []
+        mask = (self._owner == tid) & (self._state != _OFF)
+        return [int(u) for u in np.nonzero(mask)[0]]
+
+    def n_allocated(self) -> int:
+        return self._n_alloc
+
+    def n_active(self) -> int:
+        return sum(self._n_active_of.values())
+
+    # -- DVFS --------------------------------------------------------------
+    def set_opp(self, tenant: str, idx: int) -> None:
+        if self.opp_table is None:
+            return
+        idx = self.opp_table.clamp(idx)
+        self._tenant_opp[tenant] = idx
+        tid = self._tenant_ids.get(tenant)
+        if tid is not None:
+            self._req[self._owner == tid] = idx
+
+    def effective_opp(self, u: int) -> int:
+        assert self.opp_table is not None
+        if self.thermal is not None and bool(self.thermal.throttled[u]):
+            return self.opp_table.lowest
+        return int(self._req[u])
+
+    def _eff_opp_arr(self) -> np.ndarray:
+        if self.thermal is not None:
+            return np.where(self.thermal.throttled,
+                            self.opp_table.lowest, self._req)
+        return self._req
+
+    # -- placement ---------------------------------------------------------
+    def _pick_units(self, tenant: str, k: int) -> List[int]:
+        if k <= 0:
+            return []
+        tid = self._tid(tenant, create=True)
+        off = self._state == _OFF
+        if not off.any():
+            return []
+        mine = (self._owner == tid) & (self._state != _OFF)
+        n_groups = len(self._groups)
+        mine_g = np.bincount(self._group_idx[mine], minlength=n_groups)
+        free_g = np.bincount(self._group_idx[off], minlength=n_groups)
+        # same key as the scalar _group_key, lexsort primary key last
+        key_mine = (mine_g == 0).astype(np.int8)
+        key_full = (free_g != self._group_len).astype(np.int8)
+        order = np.lexsort((np.arange(n_groups), -free_g,
+                            key_full, key_mine))
+        out: List[int] = []
+        gs = self.spec.group_size
+        for gi in order:
+            if free_g[gi] == 0:
+                continue
+            lo = gi * gs
+            for u in np.nonzero(off[lo:lo + int(self._group_len[gi])])[0]:
+                out.append(lo + int(u))
+                if len(out) == k:
+                    return out
+        return out
+
+    # -- transitions -------------------------------------------------------
+    def wake(self, tenant: str, k: int, ready_t: float) -> int:
+        picked = self._pick_units(tenant, k)
+        if picked:
+            tid = self._tid(tenant, create=True)
+            idx = np.asarray(picked, np.int64)
+            self._state[idx] = _WAKING
+            self._owner[idx] = tid
+            self._ready[idx] = ready_t
+            if self.opp_table is not None:
+                self._req[idx] = self._tenant_opp_of(tenant)
+            self._n_waking_of[tid] = \
+                self._n_waking_of.get(tid, 0) + len(picked)
+            self._n_alloc += len(picked)
+        return len(picked)
+
+    def release(self, tenant: str, k: int) -> int:
+        if k <= 0:
+            return 0
+        tid = self._tenant_ids.get(tenant)
+        if tid is None:
+            return 0
+        released = 0
+        widx = np.nonzero((self._owner == tid)
+                          & (self._state == _WAKING))[0]
+        if len(widx):
+            # newest ready time first, then highest unit index
+            order = np.lexsort((-widx, -self._ready[widx]))
+            take = widx[order[:k]]
+            self._state[take] = _OFF
+            self._owner[take] = -1
+            released = len(take)
+            self._n_waking_of[tid] -= released
+            self._n_alloc -= released
+        if released == k:
+            return released
+        aidx = np.nonzero((self._owner == tid)
+                          & (self._state == _ACTIVE))[0]
+        if len(aidx):
+            # least-occupied groups first, then highest unit index
+            occ = np.bincount(self._group_idx[aidx],
+                              minlength=len(self._groups))
+            order = np.lexsort((-aidx, occ[self._group_idx[aidx]]))
+            take = aidx[order[:k - released]]
+            self._state[take] = _OFF
+            self._owner[take] = -1
+            self._n_active_of[tid] = \
+                self._n_active_of.get(tid, 0) - len(take)
+            self._n_alloc -= len(take)
+            released += len(take)
+        return released
+
+    def advance(self, t: float, dt_s: float,
+                tenant: Optional[str] = None) -> int:
+        mask = (self._state == _WAKING) & (self._ready <= t + dt_s)
+        if tenant is not None:
+            tid = self._tenant_ids.get(tenant)
+            if tid is None:
+                return 0
+            mask &= self._owner == tid
+        idx = np.nonzero(mask)[0]
+        if len(idx) == 0:
+            return 0
+        self._state[idx] = _ACTIVE
+        owners, cnts = np.unique(self._owner[idx], return_counts=True)
+        for o, c in zip(owners, cnts):
+            o, c = int(o), int(c)
+            self._n_waking_of[o] -= c
+            self._n_active_of[o] = self._n_active_of.get(o, 0) + c
+        return len(idx)
+
+    def force_active(self, tenant: str, k: int) -> None:
+        waking = self.waking(tenant)
+        if waking:
+            self.release(tenant, waking)
+        cur = self.active(tenant)
+        if cur > k:
+            self.release(tenant, cur - k)
+        elif cur < k:
+            picked = self._pick_units(tenant, k - cur)
+            if picked:
+                tid = self._tid(tenant, create=True)
+                idx = np.asarray(picked, np.int64)
+                self._state[idx] = _ACTIVE
+                self._owner[idx] = tid
+                if self.opp_table is not None:
+                    self._req[idx] = self._tenant_opp_of(tenant)
+                self._n_active_of[tid] = \
+                    self._n_active_of.get(tid, 0) + len(picked)
+                self._n_alloc += len(picked)
+
+    # -- backend hooks -----------------------------------------------------
+    def _active_units_of(self, tenant: str) -> np.ndarray:
+        tid = self._tenant_ids.get(tenant)
+        if tid is None:
+            return np.empty(0, np.int64)
+        return np.nonzero((self._owner == tid)
+                          & (self._state == _ACTIVE))[0]
+
+    def _opp_counts(self, mine) -> List[int]:
+        if len(mine) == 0:
+            return [0] * len(self.opp_table)
+        eff = self._eff_opp_arr()[mine]
+        return np.bincount(eff, minlength=len(self.opp_table)).tolist()
+
+    def _scatter_unit_power(self, buf, mine, pw_per_opp) -> None:
+        if len(mine):
+            buf[mine] = np.asarray(pw_per_opp)[self._eff_opp_arr()[mine]]
+
+    def _spare_units(self) -> List[int]:
+        return np.nonzero(self._state != _ACTIVE)[0].tolist()
+
+    def _new_power_buf(self, fill: float) -> np.ndarray:
+        return np.full(self.spec.n_units, fill, float)
+
+
+def make_unit_pool(spec: ClusterSpec, backend: str = "scalar",
+                   **kwargs) -> UnitPool:
+    """Construct a pool backend: ``"scalar"`` (reference, per-unit
+    loops) or ``"vector"`` (numpy arrays, bitwise-identical telemetry)."""
+    if backend == "scalar":
+        return UnitPool(spec, **kwargs)
+    if backend == "vector":
+        return VectorUnitPool(spec, **kwargs)
+    raise ValueError(
+        f"unknown pool backend {backend!r}; use 'scalar' or 'vector'")

@@ -90,20 +90,24 @@ class QueueWorkload:
         self._queue.append([request, float(request.cost)])
         return rid
 
-    def step(self, n_active_units: int, dt_s: float = 1.0,
-             t: float = 0.0, perf_scale: float = 1.0) -> StepStats:
+    def _drain_tick(self, n_active_units: int, dt_s: float, t: float,
+                    perf_scale: float) -> "tuple[float, float, int, int]":
+        """One tick of the fluid FIFO drain — the single copy of the
+        arithmetic behind both :meth:`step` and :meth:`step_fast`.
+        Completed responses are appended to the :meth:`drain` channel;
+        returns ``(work_done, utilization, queued, concurrency)``."""
         capacity = max(0, n_active_units) * self.unit_rate * dt_s \
             * max(perf_scale, 0.0)
         used = 0.0
-        responses: List[Response] = []
         touched = 0
-        while self._queue and used < capacity:
-            req, remaining = self._queue[0]
+        queue = self._queue
+        while queue and used < capacity:
+            req, remaining = queue[0]
             take = min(remaining, capacity - used)
             used += take
             touched += 1
             if take >= remaining - 1e-12:
-                self._queue.popleft()
+                queue.popleft()
                 # finish inside the tick, at the fluid completion instant
                 # (floored at one service time past arrival — at the
                 # *effective* DVFS-scaled rate — latency for fluid
@@ -111,25 +115,43 @@ class QueueWorkload:
                 frac = used / capacity if capacity > 0 else 1.0
                 service_s = 1.0 / (self.unit_rate
                                    * max(perf_scale, 1e-9))
-                responses.append(Response(
+                self._completed.append(Response(
                     rid=req.rid, arrival_s=req.arrival_s,
                     finish_s=max(t + frac * dt_s,
                                  req.arrival_s + service_s),
                     output=req.payload))
             else:
-                self._queue[0][1] = remaining - take
+                queue[0][1] = remaining - take
                 break
-        self._completed.extend(responses)
+        return (used, used / capacity if capacity > 0 else 0.0,
+                len(queue), touched)
+
+    def step(self, n_active_units: int, dt_s: float = 1.0,
+             t: float = 0.0, perf_scale: float = 1.0) -> StepStats:
+        before = len(self._completed)
+        used, util, queued, touched = self._drain_tick(
+            n_active_units, dt_s, t, perf_scale)
+        responses = self._completed[before:]
         return StepStats(
             t=t, dt_s=dt_s,
             concurrency=touched,
             admitted=0,
             completed=len(responses),
-            queued=len(self._queue),
+            queued=queued,
             work_done=used,
-            utilization=used / capacity if capacity > 0 else 0.0,
+            utilization=util,
             responses=responses,
         )
+
+    def step_fast(self, n_active_units: int, dt_s: float = 1.0,
+                  t: float = 0.0) -> "tuple[float, float, int, int]":
+        """Allocation-light twin of :meth:`step` for hot loops (the
+        vectorized fleet engine calls it ~100k times per sweep): the
+        same :meth:`_drain_tick` core, but no :class:`StepStats` —
+        returns the plain ``(work_done, utilization, queued,
+        concurrency)`` tuple. Completed responses land in the
+        :meth:`drain` channel exactly as with ``step``."""
+        return self._drain_tick(n_active_units, dt_s, t, 1.0)
 
     def drain(self) -> List[Response]:
         out, self._completed = self._completed, []

@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, ServeConfig
 from repro.models import model as lm
 from repro.serving.engine import ServingEngine
 

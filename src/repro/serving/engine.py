@@ -7,8 +7,7 @@ load time via ``ServeConfig.quantize_weights``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ bit-identical) and the slow worker's late result is discarded.
 """
 from __future__ import annotations
 
-import queue
 import threading
 import time
 from dataclasses import dataclass

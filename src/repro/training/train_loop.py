@@ -8,9 +8,7 @@ sharding is injected by tracing under ``use_sharding(mesh, train_rules)``
 """
 from __future__ import annotations
 
-import functools
 import logging
-import os
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -18,12 +16,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig
-from repro.distributed.sharding import (RuleSet, shard, train_rules,
+from repro.distributed.sharding import (RuleSet, train_rules,
                                         use_sharding)
 from repro.models import model as lm
 from repro.training import checkpoint as ckpt
-from repro.training.optimizer import (OptState, adamw_update, init_opt_state,
-                                      lr_schedule)
+from repro.training.optimizer import (OptState, adamw_update,
+                                      init_opt_state)
 
 log = logging.getLogger(__name__)
 Params = Any

@@ -8,7 +8,7 @@ compute-ratio model to cross-check the shape of the comparisons.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Optional
 
 
 @dataclass(frozen=True)

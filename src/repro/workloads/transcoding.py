@@ -11,8 +11,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List
 
-from repro.core.cluster import (ClusterSpec, edge_server_cpu,
-                                edge_server_gpu, soc_cluster)
+from repro.core.cluster import soc_cluster
 
 
 @dataclass(frozen=True)

@@ -1,5 +1,4 @@
 """Checkpointing: atomicity, retention, bitwise resume, elastic restore."""
-import json
 import os
 
 import jax

@@ -1,5 +1,4 @@
 """Data pipeline determinism + straggler hedging; fault-tolerance logic."""
-import time
 
 import numpy as np
 import pytest

@@ -4,12 +4,12 @@ import numpy as np
 import pytest
 
 from repro.core.cluster import (a100_server, edge_server_cpu,
-                                edge_server_gpu, soc_cluster, tpu_v5e_pod)
+                                edge_server_gpu, soc_cluster)
 from repro.core.collaborative import (PAPER_FIG13, RESNET50_PROFILE,
                                       SOC_TCP, TPU_ICI, fig13_table,
                                       latency_breakdown)
 from repro.core.energy import (account_trace, cluster_power_at_load,
-                               dynamic_range, proportionality_index)
+                               proportionality_index)
 from repro.core.scheduler import ElasticScheduler, ScalePolicy, diurnal_trace
 from repro.core.tco import (PAPER_TABLE4, edge_server_nogpu_tco,
                             edge_server_tco, soc_cluster_tco)

@@ -1,0 +1,234 @@
+"""Fleet layer: routers, traces, scalar<->vector engine parity, and a
+100-rack smoke test with energy/TCO roll-up invariants."""
+import numpy as np
+import pytest
+
+from repro.core.cluster import edge_server_cpu, soc_cluster
+from repro.fleet import (Fleet, FleetView, JoinShortestQueueRouter,
+                         PowerAwareRouter, RackConfig, RoundRobinRouter,
+                         diurnal_trace, flash_crowd_trace, homogeneous_fleet,
+                         replay_trace, save_trace, scale_to_users)
+from repro.power import SchedutilGovernor
+from repro.runtime import ScalePolicy
+
+
+def small_fleet(backend="vector", router=None, n_soc=4, n_cpu=2):
+    racks = homogeneous_fleet(soc_cluster(), n_soc, unit_rate=30.0,
+                              policy=ScalePolicy(cooldown_s=300.0))
+    racks += homogeneous_fleet(edge_server_cpu(), n_cpu, unit_rate=9.0)
+    return Fleet(racks, router=router or JoinShortestQueueRouter(),
+                 dt_s=60.0, backend=backend)
+
+
+def view_of(fleet):
+    return fleet.view()
+
+
+# ---------------------------------------------------------------------------
+# Routers.
+# ---------------------------------------------------------------------------
+def test_round_robin_uniform():
+    fleet = small_fleet()
+    assign = RoundRobinRouter().route(600.0, view_of(fleet))
+    assert np.allclose(assign, 100.0)
+
+
+def test_jsq_conserves_and_prefers_short_queues():
+    fleet = small_fleet()
+    v = view_of(fleet)
+    v.queued_cost = np.array([0.0, 5000.0, 0.0, 0.0, 0.0, 0.0])
+    assign = JoinShortestQueueRouter().route(1000.0, v)
+    assert assign.min() >= 0.0
+    # water-fill conserves the offered load
+    assert np.isclose(assign.sum(), 1000.0)
+    # the backlogged rack gets strictly less than its empty twins
+    assert assign[1] < assign[0]
+
+
+def test_jsq_zero_backlog_splits_by_capacity():
+    fleet = small_fleet()
+    v = view_of(fleet)
+    v.queued_cost = np.zeros(v.n_racks)
+    assign = JoinShortestQueueRouter().route(900.0, v)
+    assert np.isclose(assign.sum(), 900.0)
+    expect = 900.0 * v.capacity_rps / v.capacity_rps.sum()
+    assert np.allclose(assign, expect)
+
+
+def test_power_aware_packs_efficient_racks_first():
+    fleet = small_fleet()
+    v = view_of(fleet)
+    router = PowerAwareRouter(util_target=0.8)
+    # soc racks are cheaper per request than the Xeon racks
+    soc_cap = float(v.capacity_rps[0])
+    assign = router.route(0.5 * soc_cap, v)
+    assert np.isclose(assign.sum(), 0.5 * soc_cap)
+    assert np.count_nonzero(assign) == 1        # fits in one efficient rack
+    # saturating demand spills but still conserves
+    total = 0.95 * float(v.capacity_rps.sum())
+    assign = router.route(total, v)
+    assert np.isclose(assign.sum(), total)
+    assert (assign <= v.capacity_rps + 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# Traces.
+# ---------------------------------------------------------------------------
+def test_flash_crowd_shape():
+    tr = flash_crowd_trace(base_rps=100.0, spike_mult=8.0, hours=2.0,
+                           dt_s=60.0, noise=0.0)
+    assert len(tr) == 120
+    assert np.isclose(tr[0], 100.0)
+    assert np.isclose(tr.max(), 800.0)
+    assert np.isclose(tr[-1], 100.0)
+
+
+def test_replay_round_trip(tmp_path):
+    tr = diurnal_trace(peak_rps=500.0, hours=1, dt_s=60.0, seed=3)
+    path = tmp_path / "trace.csv"
+    save_trace(path, tr)
+    back = replay_trace(path)
+    assert np.allclose(back, tr, atol=1e-5)
+    assert np.allclose(replay_trace(path, scale=2.0), 2 * back)
+
+
+def test_replay_csv_last_column(tmp_path):
+    path = tmp_path / "lb_export.csv"
+    path.write_text("# t,rps\n0,10.5\n60,20.25\n\n120,30.0\n")
+    assert list(replay_trace(path)) == [10.5, 20.25, 30.0]
+    with pytest.raises(ValueError):
+        empty = tmp_path / "empty.csv"
+        empty.write_text("# nothing\n")
+        replay_trace(empty)
+
+
+def test_scale_to_users():
+    tr = scale_to_users(diurnal_trace(peak_rps=7.0, hours=2), users=2e6,
+                        rps_per_user=0.01)
+    assert np.isclose(tr.max(), 2e6 * 0.01)
+
+
+# ---------------------------------------------------------------------------
+# Engines.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("router_cls", [RoundRobinRouter,
+                                        JoinShortestQueueRouter,
+                                        PowerAwareRouter])
+def test_fleet_backend_parity_bitwise(router_cls):
+    trace = scale_to_users(
+        diurnal_trace(peak_rps=1.0, hours=2, dt_s=60.0, seed=9),
+        users=3e5, rps_per_user=0.02)
+    ts = small_fleet("scalar", router_cls()).play_trace(trace)
+    tv = small_fleet("vector", router_cls()).play_trace(trace)
+    assert ts.ticks == tv.ticks
+    assert np.array_equal(ts.power_w, tv.power_w)
+    assert np.array_equal(ts.active_units, tv.active_units)
+    assert np.array_equal(ts.assigned_rps, tv.assigned_rps)
+    assert np.array_equal(ts.queued, tv.queued)
+    assert ts.energy_j == tv.energy_j
+    assert ts.served == tv.served
+    assert (ts.p50_latency_s, ts.p95_latency_s, ts.p99_latency_s) \
+        == (tv.p50_latency_s, tv.p95_latency_s, tv.p99_latency_s)
+    for a, b in zip(ts.per_rack, tv.per_rack):
+        assert a.energy_j == b.energy_j
+        assert a.served == b.served
+        assert a.scale_events == b.scale_events
+        assert np.array_equal(a.utilization, b.utilization)
+
+
+def test_vector_engine_rejects_unsupported_policies():
+    racks = homogeneous_fleet(
+        soc_cluster(), 2, 30.0,
+        policy=ScalePolicy(freq_governor=SchedutilGovernor()))
+    with pytest.raises(ValueError, match="scalar"):
+        Fleet(racks, backend="vector")
+    racks = homogeneous_fleet(soc_cluster(), 2, 30.0,
+                              policy=ScalePolicy(hedge_after_s=10.0))
+    with pytest.raises(ValueError, match="scalar"):
+        Fleet(racks, backend="vector")
+    with pytest.raises(ValueError, match="backend"):
+        Fleet(homogeneous_fleet(soc_cluster(), 2, 30.0), backend="quantum")
+
+
+def test_mixed_specs_and_rack_names():
+    fleet = Fleet([
+        RackConfig(soc_cluster(), 30.0, name="edge-site-a"),
+        RackConfig(edge_server_cpu(), 9.0),
+    ], dt_s=60.0)
+    assert fleet.rack_names[0] == "edge-site-a"
+    assert fleet.rack_names[1] == "edge-cpu/1"
+    assert fleet.n_racks == 2
+
+
+# ---------------------------------------------------------------------------
+# 100-rack fleet smoke + roll-up invariants.
+# ---------------------------------------------------------------------------
+def test_hundred_rack_smoke():
+    racks = homogeneous_fleet(soc_cluster(), 100, unit_rate=30.0,
+                              policy=ScalePolicy(cooldown_s=300.0))
+    fleet = Fleet(racks, router=JoinShortestQueueRouter(), dt_s=60.0,
+                  backend="vector")
+    trace = scale_to_users(
+        diurnal_trace(peak_rps=1.0, hours=6, dt_s=60.0, seed=5),
+        users=2e6, rps_per_user=0.045)
+    tel = fleet.play_trace(trace)
+    assert tel.n_racks == 100
+    assert tel.wall_s < 30.0, "vectorized 100-rack sweep must be fast"
+    # every queue drained, all offered work served
+    assert int(tel.queued[:, -1].sum()) == 0
+    offered_work = float(np.sum(trace) * 60.0)
+    assert tel.served == pytest.approx(offered_work, rel=1e-6)
+    # fleet roll-up is the sum of per-rack integrals
+    assert tel.energy_j == sum(t.energy_j for t in tel.per_rack)
+    assert np.array_equal(tel.total_power_w,
+                          tel.power_w.sum(axis=0))
+    # elastic fleet: power tracks the diurnal swing
+    assert tel.proportionality() > 0.6
+    # energy/TCO bridges
+    rep = tel.energy_report()
+    assert rep.joules == tel.energy_j
+    assert rep.peak_power_w == tel.peak_power_w
+    assert tel.monthly_electricity_usd() > 0
+    s = tel.summary()
+    for key in ("racks", "energy_kwh", "tpe", "p95_latency_s",
+                "proportionality", "monthly_electricity_usd"):
+        assert key in s
+
+
+def test_play_trace_twice_returns_consistent_cumulative_telemetry():
+    trace = scale_to_users(
+        diurnal_trace(peak_rps=1.0, hours=1, dt_s=60.0, seed=2),
+        users=2e5, rps_per_user=0.02)
+    fleet = small_fleet("vector")
+    t1 = fleet.play_trace(trace)
+    t2 = fleet.play_trace(trace)
+    # the second roll-up covers the whole history, arrays in lockstep
+    assert t2.ticks > t1.ticks
+    assert len(t2.offered_rps) == t2.ticks
+    assert t2.assigned_rps.shape == t2.power_w.shape == t2.queued.shape
+    assert t2.served == pytest.approx(2 * t1.served, rel=1e-6)
+    assert t2.proportionality() > 0          # broadcast-safe
+    assert t2.summary()["ticks"] == t2.ticks
+
+
+def test_vector_pool_views_are_immutable():
+    from repro.runtime import UnitState, make_unit_pool
+    pool = make_unit_pool(soc_cluster(), backend="vector")
+    pool.wake("a", 3, ready_t=0.0)
+    pool.advance(0.0, 1.0)
+    assert pool.state[pool.units_of("a")[0]] is UnitState.ACTIVE
+    with pytest.raises(TypeError):
+        pool.state[0] = UnitState.ACTIVE
+    with pytest.raises(TypeError):
+        pool.owner[0] = "b"
+
+
+def test_fleet_view_exposes_live_state():
+    fleet = small_fleet()
+    v = view_of(fleet)
+    assert isinstance(v, FleetView)
+    assert v.n_racks == 6
+    assert (v.active_units >= 1).all()          # min_units floors active
+    assert (v.full_load_j_per_req > 0).all()
+    # Xeon racks cost more energy per request than SoC racks
+    assert v.full_load_j_per_req[-1] > v.full_load_j_per_req[0]

@@ -1,6 +1,5 @@
 """Pallas flash/decode attention vs the pure-jnp oracle: shape/dtype sweeps
 (interpret=True executes the kernel body on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

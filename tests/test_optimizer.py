@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.config import TrainConfig
-from repro.training.optimizer import (OptState, QTensor, QTensorLog,
+from repro.training.optimizer import (QTensor, QTensorLog,
                                       adamw_update, global_norm,
                                       init_opt_state, lr_schedule,
                                       opt_state_bytes)

@@ -1,6 +1,5 @@
 """Properties of the logical-axis sharding resolver (hypothesis)."""
 import jax
-import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")

@@ -1,0 +1,242 @@
+"""Scalar <-> vector backend parity: the vectorized pool must reproduce
+the scalar reference **bitwise** — energy integrals (fig7/fig14),
+latency percentiles, and temperature/throttle/fan histograms (fig15) —
+across every simulation path: plain gating, multi-tenant arbitration,
+straggler hedging, DVFS governors, and thermal throttling."""
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterSpec, UnitSpec, soc_cluster
+from repro.core.scheduler import diurnal_trace
+from repro.power import (FixedFreqGovernor, SchedutilGovernor, ThermalParams,
+                         sd865_opp_table)
+from repro.runtime import (ClusterRuntime, MultiTenantRuntime, QueueWorkload,
+                           Request, ScalePolicy, Tenant, UnitPool,
+                           VectorUnitPool, make_unit_pool)
+
+BACKENDS = ("scalar", "vector")
+
+
+def tiny_spec(n=6, group=3):
+    return ClusterSpec(
+        name="tiny", n_units=n, p_shared=10.0, group_size=group,
+        unit=UnitSpec("u", p_off=0.0, p_idle=0.5, p_peak=4.0, gamma=1.0))
+
+
+def assert_telemetry_equal(a, b, thermal=False):
+    """Bitwise comparison of every fig7/fig14/fig15-relevant field."""
+    assert np.array_equal(a.time_s, b.time_s)
+    assert np.array_equal(a.power_w, b.power_w)
+    assert np.array_equal(a.active_units, b.active_units)
+    assert np.array_equal(a.utilization, b.utilization)
+    assert np.array_equal(a.offered_load, b.offered_load)
+    assert a.energy_j == b.energy_j                    # energy integral
+    assert a.unit_energy_j == b.unit_energy_j
+    assert a.served == b.served
+    assert a.hedged == b.hedged
+    assert a.scale_events == b.scale_events
+    assert a.p50_latency_s == b.p50_latency_s
+    assert a.p99_latency_s == b.p99_latency_s
+    la = sorted(r.latency_s for r in a.responses)
+    lb = sorted(r.latency_s for r in b.responses)
+    assert la == lb
+
+
+def assert_pool_hists_equal(pa, pb):
+    assert pa.power_hist == [float(x) for x in pb.power_hist]
+    assert pa.max_temp_hist == [float(x) for x in pb.max_temp_hist]
+    assert pa.throttled_hist == [int(x) for x in pb.throttled_hist]
+    assert pa.fan_power_hist == [float(x) for x in pb.fan_power_hist]
+
+
+# ---------------------------------------------------------------------------
+# fig7-style: single tenant, binary gating, diurnal energy integral.
+# ---------------------------------------------------------------------------
+def test_single_tenant_diurnal_bitwise():
+    def run(backend):
+        rt = ClusterRuntime(
+            soc_cluster(), QueueWorkload(unit_rate=10.0),
+            policy=ScalePolicy(cooldown_s=120.0), dt_s=60.0,
+            backend=backend)
+        trace = diurnal_trace(peak_rps=550.0, hours=4, dt_s=60.0, seed=0)
+        return rt.play_trace(trace, dt_s=60.0)
+
+    assert_telemetry_equal(run("scalar"), run("vector"))
+
+
+# ---------------------------------------------------------------------------
+# fig14-style: three tenants, anti-phase diurnal, hedging enabled.
+# ---------------------------------------------------------------------------
+def _mixed_run(backend):
+    spec = soc_cluster()
+    wls = {m: QueueWorkload(unit_rate=r, name=m)
+           for m, r in (("transcode", 16.0), ("dl", 30.0), ("lm", 8.0))}
+    rt = MultiTenantRuntime(
+        spec,
+        [Tenant(m, wl, policy=ScalePolicy(cooldown_s=120.0, min_units=2,
+                                          hedge_after_s=240.0))
+         for m, wl in wls.items()],
+        dt_s=60.0, backend=backend)
+    n = int(4 * 3600 / 60)
+    traces = {}
+    for i, (m, wl) in enumerate(wls.items()):
+        tr = diurnal_trace(peak_rps=wl.unit_rate * spec.n_units * 0.45,
+                           hours=4, dt_s=60.0, seed=i)
+        traces[m] = np.roll(tr, i * n // 3)
+    return rt.play_traces(traces, dt_s=60.0)
+
+
+def test_multi_tenant_bitwise():
+    ts, tv = _mixed_run("scalar"), _mixed_run("vector")
+    assert_telemetry_equal(ts, tv)
+    for m in ts.per_tenant:
+        assert_telemetry_equal(ts.per_tenant[m], tv.per_tenant[m])
+
+
+def _hedging_run(backend):
+    """A burst that outruns the governor window so backlog ages past the
+    hedge deadline while free units exist: hedging must actually fire."""
+    spec = tiny_spec(n=6, group=1)
+    rt = ClusterRuntime(
+        spec, QueueWorkload(unit_rate=2.0),
+        policy=ScalePolicy(headroom=1.0, cooldown_s=1e9,
+                           hedge_after_s=1.5),
+        dt_s=1.0, window_s=30.0, backend=backend)
+    for _ in range(5):
+        rt.submit(cost=6.0, count=6.0)
+        rt.tick()
+    for _ in range(40):
+        if rt.tick().queued == 0:
+            break
+    return rt.telemetry()
+
+
+def test_hedging_parity_and_fires():
+    ts, tv = _hedging_run("scalar"), _hedging_run("vector")
+    assert ts.hedged == tv.hedged
+    assert ts.hedged > 0, "scenario must exercise the hedging path"
+    assert_telemetry_equal(ts, tv)
+
+
+# ---------------------------------------------------------------------------
+# fig15-style: DVFS governors + thermal throttling histograms.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("governor", [None, FixedFreqGovernor(),
+                                      SchedutilGovernor()])
+def test_dvfs_thermal_bitwise(governor):
+    def run(backend):
+        spec = soc_cluster()
+        rt = ClusterRuntime(
+            spec, QueueWorkload(unit_rate=10.0),
+            policy=ScalePolicy(min_units=spec.n_units, cooldown_s=1e9,
+                               freq_governor=governor),
+            opp_table=sd865_opp_table(),
+            # low trip point: the latch must engage within the short run
+            thermal=ThermalParams(t_trip_c=70.0, t_release_c=60.0),
+            dt_s=1.0, backend=backend)
+        offered = 2.0 * 10.0 * spec.n_units       # sustained overload
+        for _ in range(240):
+            rt.submit(cost=offered, count=offered)
+            rt.tick()
+        return rt
+
+    rs, rv = run("scalar"), run("vector")
+    assert_pool_hists_equal(rs.pool, rv.pool)
+    assert rs.pool.energy_j == rv.pool.energy_j
+    if isinstance(governor, FixedFreqGovernor):
+        assert max(rs.pool.throttled_hist) > 0, \
+            "fixed-max under sustained overload must trip the latch"
+
+
+def test_schedutil_low_load_energy_bitwise():
+    def run(backend):
+        rt = ClusterRuntime(
+            soc_cluster(), QueueWorkload(unit_rate=10.0),
+            policy=ScalePolicy(freq_governor=SchedutilGovernor()),
+            opp_table=sd865_opp_table(), dt_s=1.0, backend=backend)
+        trace = np.full(120, 0.3 * 10.0 * 60)
+        return rt.play_trace(trace, dt_s=1.0)
+
+    assert_telemetry_equal(run("scalar"), run("vector"))
+
+
+# ---------------------------------------------------------------------------
+# Randomized pool transition sequences (placement, release order, OPPs).
+# ---------------------------------------------------------------------------
+def _snapshot(pool):
+    return (list(pool.state), list(pool.owner),
+            [pool.active(m) for m in ("a", "b", "c")],
+            [pool.waking(m) for m in ("a", "b", "c")],
+            pool.n_allocated(), pool.energy_j, pool.tenant_energy_j)
+
+
+def test_random_op_sequences_identical():
+    rng = np.random.default_rng(42)
+    spec = tiny_spec(n=10, group=5)
+    ps = make_unit_pool(spec, backend="scalar",
+                        opp_table=sd865_opp_table(), thermal=ThermalParams())
+    pv = make_unit_pool(spec, backend="vector",
+                        opp_table=sd865_opp_table(), thermal=ThermalParams())
+    assert isinstance(ps, UnitPool) and isinstance(pv, VectorUnitPool)
+    tenants = ("a", "b", "c")
+    t = 0.0
+    for step in range(300):
+        op = rng.integers(0, 6)
+        m = tenants[rng.integers(0, 3)]
+        k = int(rng.integers(0, 5))
+        if op == 0:
+            assert ps.wake(m, k, t + 1.0) == pv.wake(m, k, t + 1.0)
+        elif op == 1:
+            assert ps.release(m, k) == pv.release(m, k)
+        elif op == 2:
+            assert ps.advance(t, 1.0) == pv.advance(t, 1.0)
+        elif op == 3:
+            ps.force_active(m, k)
+            pv.force_active(m, k)
+        elif op == 4:
+            idx = int(rng.integers(0, 5))
+            ps.set_opp(m, idx)
+            pv.set_opp(m, idx)
+        else:
+            utils = {m2: float(rng.random()) for m2 in tenants}
+            extra = {m: k % 3}
+            rs = ps.charge(t, 1.0, utils, extra)
+            rv = pv.charge(t, 1.0, utils, extra)
+            assert rs[0] == rv[0] and rs[1] == rv[1] and rs[2] == rv[2]
+        assert _snapshot(ps) == _snapshot(pv), f"diverged at step {step}"
+        t += 1.0
+    assert ps.energy_j > 0
+
+
+def test_vector_pool_rejects_scalar_thermal_model():
+    from repro.power.thermal import ThermalModel
+    spec = tiny_spec()
+    with pytest.raises(TypeError):
+        make_unit_pool(spec, backend="vector",
+                       opp_table=sd865_opp_table(),
+                       thermal=ThermalModel(spec))
+    with pytest.raises(ValueError):
+        make_unit_pool(spec, backend="neon")
+
+
+# ---------------------------------------------------------------------------
+# QueueWorkload.step_fast is pinned to step().
+# ---------------------------------------------------------------------------
+def test_step_fast_matches_step():
+    rng = np.random.default_rng(7)
+    a, b = QueueWorkload(unit_rate=3.0), QueueWorkload(unit_rate=3.0)
+    t = 0.0
+    for _ in range(200):
+        if rng.random() < 0.7:
+            cost = float(rng.random() * 10)
+            a.submit(Request(cost=cost, arrival_s=t))
+            b.submit(Request(cost=cost, arrival_s=t))
+        n = int(rng.integers(0, 4))
+        s = a.step(n, 1.0, t)
+        used, util, queued, touched = b.step_fast(n, 1.0, t)
+        assert (s.work_done, s.utilization, s.queued, s.concurrency) \
+            == (used, util, queued, touched)
+        ra, rb = a.drain(), b.drain()
+        assert [(r.rid, r.arrival_s, r.finish_s) for r in ra] \
+            == [(r.rid, r.arrival_s, r.finish_s) for r in rb]
+        t += 1.0

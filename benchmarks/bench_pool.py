@@ -10,7 +10,12 @@ the build on a >2x slowdown of the vectorized paths):
     trip latches), ticked at steady 50% load;
   * ``fleet/{scalar,vector}_rack_ticks_per_s`` — rack-ticks/s of the
     fleet engines (binary gating, join-shortest-queue router) at
-    steady 50% load.
+    steady 50% load;
+  * ``fleet_dvfs/{scalar,vector}_rack_ticks_per_s`` — the same fleet
+    measurement with the full frequency axis on every rack (schedutil
+    governor over the SD865 OPP table plus the stacked RC thermal
+    network), i.e. the paper-relevant energy-proportionality
+    configuration running on the array path.
 """
 from __future__ import annotations
 
@@ -51,12 +56,21 @@ def _rack_ticks_per_s(backend: str, ticks: int = 300, reps: int = 3,
 
 
 def _fleet_rack_ticks_per_s(backend: str, n_racks: int, ticks: int,
-                            reps: int = 3, warmup: int = 10) -> float:
-    """Best-of-``reps`` steady-state rack-ticks/s of a fleet engine."""
+                            reps: int = 3, warmup: int = 10,
+                            dvfs: bool = False) -> float:
+    """Best-of-``reps`` steady-state rack-ticks/s of a fleet engine;
+    ``dvfs=True`` attaches the full frequency axis (schedutil + SD865
+    table + RC thermal network) to every rack."""
     best = 0.0
     for _ in range(reps):
+        policy, kwargs = None, {}
+        if dvfs:
+            policy = ScalePolicy(freq_governor=SchedutilGovernor())
+            kwargs = dict(opp_table=sd865_opp_table(),
+                          thermal=ThermalParams())
         fleet = Fleet(
-            homogeneous_fleet(soc_cluster(), n_racks, unit_rate=30.0),
+            homogeneous_fleet(soc_cluster(), n_racks, unit_rate=30.0,
+                              policy=policy, **kwargs),
             router=JoinShortestQueueRouter(), dt_s=60.0, backend=backend)
         total = 0.5 * fleet.capacity_rps
         for _ in range(warmup):
@@ -83,6 +97,14 @@ def run() -> None:
     emit_metric("fleet/vector_rack_ticks_per_s", f_vector)
     emit("fleet/rack_speedup", 0.0,
          f"vector_over_scalar={f_vector/f_scalar:.2f}x")
+    d_scalar = _fleet_rack_ticks_per_s("scalar", n_racks=20, ticks=40,
+                                       dvfs=True)
+    d_vector = _fleet_rack_ticks_per_s("vector", n_racks=100, ticks=300,
+                                       dvfs=True)
+    emit_metric("fleet_dvfs/scalar_rack_ticks_per_s", d_scalar)
+    emit_metric("fleet_dvfs/vector_rack_ticks_per_s", d_vector)
+    emit("fleet_dvfs/rack_speedup", 0.0,
+         f"vector_over_scalar={d_vector/d_scalar:.2f}x")
 
 
 if __name__ == "__main__":

@@ -21,12 +21,20 @@ conclusions can flip versus single-rack ones. This benchmark drives a
   3. **Backend parity** — the same small fleet run under
      ``backend="scalar"`` and ``"vector"`` must produce bitwise-equal
      energy and power series.
-  4. **Throughput** — steady-state rack-ticks/s of the vector engine
-     must be >= 10x the scalar engine's (the acceptance bar for the
-     vectorized simulation core; also registered for the CI perf gate).
+  4. **DVFS fleet** — 100 SoC racks under the full frequency axis
+     (schedutil governor over the SD865 OPP table + RC thermal
+     network): the 24 h sweep runs on the vector engine, the frequency
+     axis beats binary gating alone on energy at comparable p95, and a
+     small DVFS fleet matches the scalar engine bitwise (energy, power,
+     temperature/throttle/fan series).
+  5. **Throughput** — steady-state rack-ticks/s of the vector engine
+     must be >= 10x the scalar engine's, both on the binary-gating
+     mixed fleet and with the frequency governor + thermal stack
+     enabled — the configuration the PR 4 engine rejected outright
+     (also registered for the CI perf gate).
 
 Asserts are enforced inline, like fig14/fig15. Under ``run.py --fast``
-(the CI tier-1 smoke) the machine-timing assertions of steps 1 and 4
+(the CI tier-1 smoke) the machine-timing assertions of steps 1 and 5
 are skipped — on shared runners a noisy neighbor could fail the
 *functional* job on wall-clock alone; the dedicated CI perf-gate job
 (``benchmarks/perf_gate.py``, 2x headroom) owns performance-regression
@@ -45,6 +53,7 @@ from repro.fleet import (Fleet, FleetTelemetry, JoinShortestQueueRouter,
                          PowerAwareRouter, RackConfig, RoundRobinRouter,
                          Router, diurnal_trace, flash_crowd_trace,
                          homogeneous_fleet, scale_to_users)
+from repro.power import SchedutilGovernor, ThermalParams, sd865_opp_table
 from repro.runtime import ScalePolicy
 
 SOC_UNIT_RATE = 30.0      # resnet-50-class req/s per SD865 (Table 7)
@@ -73,13 +82,33 @@ def _sweep(router: Router, trace: np.ndarray,
     return _mixed_fleet(n_soc, n_cpu, backend, router).play_trace(trace)
 
 
+def _dvfs_fleet(n_racks: int, backend: str, router: Router,
+                dvfs: bool = True) -> Fleet:
+    """Homogeneous SoC fleet; ``dvfs=True`` puts the full frequency
+    axis on every rack (schedutil over the SD865 table + RC thermal
+    network), ``dvfs=False`` is the binary-gating baseline — the only
+    configuration the PR 4 vector engine could sweep."""
+    policy = ScalePolicy(
+        cooldown_s=300.0, min_units=1,
+        freq_governor=SchedutilGovernor() if dvfs else None)
+    racks = homogeneous_fleet(
+        soc_cluster(), n_racks, SOC_UNIT_RATE, policy=policy,
+        opp_table=sd865_opp_table() if dvfs else None,
+        thermal=ThermalParams() if dvfs else None)
+    return Fleet(racks, router=router, dt_s=DT_S, backend=backend)
+
+
 def _engine_rack_ticks_per_s(backend: str, ticks: int, reps: int = 3,
-                             load_frac: float = 0.5) -> float:
+                             load_frac: float = 0.5,
+                             dvfs: bool = False) -> float:
     """Best-of-``reps`` steady-state rack-ticks/s of a fleet engine on
-    the full 120-rack mixed fleet."""
+    the full 120-rack mixed fleet (or, with ``dvfs=True``, a 120-rack
+    schedutil + thermal SoC fleet)."""
     best = 0.0
     for _ in range(reps):
-        fleet = _mixed_fleet(100, 20, backend, JoinShortestQueueRouter())
+        fleet = _dvfs_fleet(120, backend, JoinShortestQueueRouter()) \
+            if dvfs else _mixed_fleet(100, 20, backend,
+                                      JoinShortestQueueRouter())
         total = load_frac * fleet.capacity_rps
         for _ in range(10):
             assign = fleet.router.route(total, fleet.view())
@@ -163,7 +192,50 @@ def run(perf: bool = True) -> None:
          f"bitwise={bitwise};energy_j={t_v.energy_j:.1f}")
     assert bitwise, "vector fleet engine must match scalar bitwise"
 
-    # --- 4. vectorized engine throughput ----------------------------------
+    # --- 4. DVFS fleet: the frequency axis at fleet scale -----------------
+    # PR 3's schedutil governor is what moves the sd865 proportionality
+    # index (0.907 -> 0.941); the stacked engine now runs it — plus the
+    # RC thermal network — on the array path. 100 racks x 24 h.
+    gating_fleet = _dvfs_fleet(100, "vector", JoinShortestQueueRouter(),
+                               dvfs=False)
+    dvfs_trace = 0.5 * gating_fleet.capacity_rps * diurnal_trace(
+        peak_rps=1.0, hours=24, dt_s=DT_S, seed=16)
+    gating = gating_fleet.play_trace(dvfs_trace)
+    sched = _dvfs_fleet(100, "vector", JoinShortestQueueRouter()) \
+        .play_trace(dvfs_trace)
+    saving = 1 - sched.energy_j / gating.energy_j
+    emit("fig16/dvfs_fleet", 0.0,
+         f"gating_only_kwh={gating.energy_kwh:.1f};"
+         f"schedutil_kwh={sched.energy_kwh:.1f};saving={saving:.1%};"
+         f"gating_p95_s={gating.p95_latency_s:.1f};"
+         f"schedutil_p95_s={sched.p95_latency_s:.1f};"
+         f"wall_s={sched.wall_s:.2f}")
+    assert gating.drained and sched.drained
+    assert saving > 0.05, \
+        "the frequency axis must save fleet energy over binary gating alone"
+    assert sched.p95_latency_s <= 1.25 * gating.p95_latency_s, \
+        "the DVFS saving may not come out of the latency budget"
+    # small-fleet bitwise parity with the governor + thermal enabled
+    dvfs_short = dvfs_trace[:120] / 10.0
+    d_s = _dvfs_fleet(6, "scalar", JoinShortestQueueRouter()) \
+        .play_trace(dvfs_short)
+    d_v = _dvfs_fleet(6, "vector", JoinShortestQueueRouter()) \
+        .play_trace(dvfs_short)
+    dvfs_bitwise = (
+        d_s.energy_j == d_v.energy_j
+        and np.array_equal(d_s.power_w, d_v.power_w)
+        and np.array_equal(d_s.active_units, d_v.active_units)
+        and d_s.p95_latency_s == d_v.p95_latency_s
+        and all(np.array_equal(a.max_temp_c, b.max_temp_c)
+                and np.array_equal(a.throttled_units, b.throttled_units)
+                and np.array_equal(a.fan_power_w, b.fan_power_w)
+                for a, b in zip(d_s.per_rack, d_v.per_rack)))
+    emit("fig16/dvfs_backend_parity", 0.0,
+         f"bitwise={dvfs_bitwise};energy_j={d_v.energy_j:.1f}")
+    assert dvfs_bitwise, \
+        "vector fleet engine must match scalar bitwise under DVFS+thermal"
+
+    # --- 5. vectorized engine throughput ----------------------------------
     if not perf:
         emit("fig16/speedup", 0.0, "skipped (--fast)")
         return
@@ -176,6 +248,16 @@ def run(perf: bool = True) -> None:
     assert speedup >= MIN_SPEEDUP, (
         f"vectorized fleet engine must be >= {MIN_SPEEDUP:.0f}x the "
         f"scalar backend (measured {speedup:.1f}x)")
+    dv_tps = _engine_rack_ticks_per_s("vector", ticks=150, dvfs=True)
+    ds_tps = _engine_rack_ticks_per_s("scalar", ticks=30, dvfs=True)
+    dvfs_speedup = dv_tps / ds_tps
+    emit_metric("fig16/dvfs_vector_rack_ticks_per_s", dv_tps)
+    emit_metric("fig16/dvfs_scalar_rack_ticks_per_s", ds_tps)
+    emit("fig16/dvfs_speedup", 0.0,
+         f"vector_over_scalar={dvfs_speedup:.1f}x")
+    assert dvfs_speedup >= MIN_SPEEDUP, (
+        f"the >= {MIN_SPEEDUP:.0f}x vector speedup must hold with a "
+        f"frequency governor enabled (measured {dvfs_speedup:.1f}x)")
 
 
 if __name__ == "__main__":

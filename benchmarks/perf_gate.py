@@ -7,8 +7,12 @@ wide enough to absorb runner-to-runner variance, tight enough to catch
 an accidentally de-vectorized hot path).
 
 The baseline's ``gate`` list names the metrics under contract (the
-vectorized-pool and fleet-engine tick throughputs); everything else in
-the record is informational. Regenerate the baseline with::
+vectorized-pool and fleet-engine tick throughputs, including the DVFS
+fleet configuration); everything else in the record is informational.
+When ``GITHUB_STEP_SUMMARY`` is set (any GitHub Actions job), the
+metric-by-metric comparison is also appended there as a Markdown table,
+so the verdicts are readable from the job page without opening logs.
+Regenerate the baseline with::
 
     PYTHONPATH=src:. python benchmarks/run.py --json \\
         benchmarks/BENCH_baseline.json --only pool
@@ -16,7 +20,7 @@ the record is informational. Regenerate the baseline with::
 
 Usage::
 
-    python benchmarks/perf_gate.py BENCH_pr4.json \\
+    python benchmarks/perf_gate.py BENCH_pr.json \\
         [--baseline benchmarks/BENCH_baseline.json] [--max-regression 2.0]
 """
 from __future__ import annotations
@@ -25,9 +29,39 @@ import argparse
 import json
 import os
 import sys
+from typing import List, Optional, Tuple
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
                                 "BENCH_baseline.json")
+
+# (metric, baseline, current, verdict) — current None when missing
+_Row = Tuple[str, float, Optional[float], str]
+
+
+def _write_summary(rows: List[_Row], max_regression: float,
+                   failed: bool) -> None:
+    """Append the comparison as a Markdown table to the GitHub Actions
+    job summary, when running inside one."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = [
+        "### Perf gate — " + ("FAILED" if failed else "passed"),
+        "",
+        f"Allowed regression: {max_regression:.1f}x vs committed baseline.",
+        "",
+        "| metric | baseline | current | ratio | verdict |",
+        "| --- | ---: | ---: | ---: | --- |",
+    ]
+    for name, base, cur, verdict in rows:
+        mark = {"ok": "✅", "REGRESSED": "❌", "MISSING": "⚠️"}[verdict]
+        cur_s = f"{cur:,.1f}" if cur is not None else "—"
+        ratio_s = f"{cur / base:.2f}x" if cur is not None and base > 0 \
+            else "—"
+        lines.append(f"| `{name}` | {base:,.1f} | {cur_s} | {ratio_s} | "
+                     f"{mark} {verdict} |")
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
 
 
 def main() -> None:
@@ -50,6 +84,7 @@ def main() -> None:
         sys.exit(f"baseline {args.baseline} has no gated metrics")
 
     failures = []
+    rows: List[_Row] = []
     print(f"{'metric':44s} {'baseline':>12s} {'current':>12s} "
           f"{'ratio':>7s}  verdict")
     for name in gate:
@@ -63,16 +98,19 @@ def main() -> None:
                             "(did the pool suite run?)")
             print(f"{name:44s} {base:12.1f} {'---':>12s} {'---':>7s}  "
                   "MISSING")
+            rows.append((name, base, None, "MISSING"))
             continue
         ratio = cur / base if base > 0 else float("inf")
         ok = cur * args.max_regression >= base
         print(f"{name:44s} {base:12.1f} {cur:12.1f} {ratio:7.2f}  "
               f"{'ok' if ok else 'REGRESSED'}")
+        rows.append((name, base, cur, "ok" if ok else "REGRESSED"))
         if not ok:
             failures.append(
                 f"{name}: {cur:.1f} vs baseline {base:.1f} "
                 f"({base / max(cur, 1e-9):.1f}x slower; "
                 f"allowed {args.max_regression:.1f}x)")
+    _write_summary(rows, args.max_regression, bool(failures))
     if failures:
         sys.exit("perf gate FAILED:\n  " + "\n  ".join(failures))
     print(f"perf gate passed ({len(gate)} metrics, "

@@ -6,27 +6,37 @@ racks (mixed :class:`~repro.core.cluster.ClusterSpec`\\ s allowed), a
 :class:`~repro.fleet.router.Router` that shards the fleet-level offered
 load across racks each tick, and per-rack elastic unit governors — the
 same activation policy the single-rack runtime uses, applied one level
-up.
+up. A rack may additionally carry the full power stack: an
+:class:`~repro.power.opp.OPPTable` with a frequency governor
+(``ScalePolicy.freq_governor``), an RC thermal network
+(:class:`~repro.power.thermal.ThermalParams`), and straggler hedging
+(``ScalePolicy.hedge_after_s``).
 
 Two engines implement the same simulation:
 
   * ``backend="scalar"`` — one full per-unit
     :class:`~repro.runtime.ClusterRuntime` per rack (the reference:
     every unit is an object, every tick walks every rack's pool);
-  * ``backend="vector"`` — rack state stacked into numpy arrays
-    (activation targets, cooldown timers, and the closed-form
-    binary-gating power integral computed elementwise across all racks
-    at once), with per-rack fluid FIFO queues kept for exact request
-    latencies.
+  * ``backend="vector"`` — rack state stacked into numpy arrays:
+    activation targets, cooldown timers, per-rack OPP indices with the
+    per-OPP perf/power scales stacked as (racks, opps) tables, the
+    frequency governors (``fixed`` / ``race-to-idle`` / ``schedutil``'s
+    lowest-energy OPP×unit-count search / the ``ThermalAwareGovernor``
+    ceiling clamp) evaluated as masked argmin passes over the OPP axis,
+    hedging as a per-rack borrowed-unit counter in the fluid drain, and
+    the RC thermal networks of every thermal-modelled rack flattened
+    into one stacked per-die state. Per-rack fluid FIFO queues are kept
+    for exact request latencies.
 
 The vector engine replicates the scalar engine's arithmetic operation
-for operation, so the two produce **bitwise-identical** telemetry while
-the vector engine runs an order of magnitude faster — fast enough to
-sweep 100 racks x 24 simulated hours in seconds
-(``benchmarks/fig16_fleet.py``). The vector engine covers the
-binary-gating power model (no per-rack ``freq_governor`` /
-``hedge_after_s``); configurations that need the DVFS or hedging paths
-run under ``backend="scalar"``.
+for operation, so the two produce **bitwise-identical** telemetry —
+energy integrals, latency percentiles, and temperature/throttle/fan
+histories — while the vector engine runs an order of magnitude faster:
+fast enough to sweep 100 racks x 24 simulated hours in seconds
+(``benchmarks/fig16_fleet.py``), with or without a frequency governor.
+Governors outside the built-in set still work: they fall back to a
+per-rack ``select`` call against a real
+:class:`~repro.power.governor.FreqContext` (correct, just not stacked).
 """
 from __future__ import annotations
 
@@ -39,6 +49,11 @@ import numpy as np
 from repro.core.cluster import ClusterSpec
 from repro.fleet.router import FleetView, JoinShortestQueueRouter, Router
 from repro.fleet.telemetry import FleetTelemetry
+from repro.power.governor import (FixedFreqGovernor, FreqContext,
+                                  RaceToIdleGovernor, SchedutilGovernor,
+                                  ThermalAwareGovernor)
+from repro.power.opp import OPPTable
+from repro.power.thermal import ThermalModel, ThermalParams
 from repro.runtime import (
     ClusterRuntime,
     QueueWorkload,
@@ -53,12 +68,19 @@ __all__ = ["RackConfig", "Fleet", "homogeneous_fleet"]
 
 @dataclass
 class RackConfig:
-    """One rack's binding into the fleet."""
+    """One rack's binding into the fleet.
+
+    ``opp_table`` enables the frequency axis for the rack (consulted by
+    ``policy.freq_governor``); ``thermal`` attaches the per-die RC
+    network with trip-latch throttling (requires an ``opp_table`` to
+    throttle within, exactly like the pool)."""
 
     spec: ClusterSpec
     unit_rate: float  # requests/s one unit sustains
     policy: Optional[ScalePolicy] = None
     name: str = ""
+    opp_table: Optional[OPPTable] = None
+    thermal: Optional[ThermalParams] = None
 
 
 def homogeneous_fleet(
@@ -66,10 +88,19 @@ def homogeneous_fleet(
     n_racks: int,
     unit_rate: float,
     policy: Optional[ScalePolicy] = None,
+    opp_table: Optional[OPPTable] = None,
+    thermal: Optional[ThermalParams] = None,
 ) -> List[RackConfig]:
     """N identical racks (the common case for a single-platform fleet)."""
     return [
-        RackConfig(spec, unit_rate, policy, name=f"{spec.name}/{i}")
+        RackConfig(
+            spec,
+            unit_rate,
+            policy,
+            name=f"{spec.name}/{i}",
+            opp_table=opp_table,
+            thermal=thermal,
+        )
         for i in range(n_racks)
     ]
 
@@ -98,6 +129,8 @@ class _ScalarFleetEngine:
                     window_s=dt_s,
                     dt_s=dt_s,
                     idle_units_off=idle_units_off,
+                    opp_table=rc.opp_table,
+                    thermal=rc.thermal,
                     backend="scalar",
                 )
             )
@@ -131,17 +164,161 @@ class _ScalarFleetEngine:
         return [rt.cluster_telemetry() for rt in self.rts]
 
 
+class _StackedThermal:
+    """Every thermal-modelled rack's RC network in one flat state.
+
+    Per-die temperatures, per-PCB-group temperatures, and trip latches
+    of all racks live in single arrays; the Euler substeps are
+    elementwise, per-group heat flows are contiguous ``reduceat``
+    segment sums (same ascending-unit accumulation order as the scalar
+    :class:`~repro.power.thermal.ThermalModel` loop), and per-rack fan
+    fractions are segment maxima. Racks whose sub-step count differs
+    (different specs/params) are frozen with zero-deltas once their own
+    sub-steps are done — adding ``0.0`` leaves a temperature bitwise
+    unchanged — so every rack integrates exactly as its scalar twin.
+    """
+
+    def __init__(self, racks: Sequence[RackConfig], t_idx: Sequence[int]):
+        self.t_idx = np.asarray(t_idx, np.int64)  # fleet rack indices
+        nt = len(t_idx)
+        specs = [racks[r].spec for r in t_idx]
+        prms = [racks[r].thermal for r in t_idx]
+        # per-rack parameter arrays
+        self.r_die = np.array([p.r_die_c_per_w for p in prms])
+        self.c_die = np.array([p.c_die_j_per_c for p in prms])
+        self.r_pcb0 = np.array([p.r_pcb_c_per_w for p in prms])
+        self.c_pcb = np.array([p.c_pcb_j_per_c for p in prms])
+        self.t_amb = np.array([p.t_ambient_c for p in prms])
+        self.fan_low = np.array([p.fan_t_low_c for p in prms])
+        self.fan_span = np.array(
+            [max(p.fan_t_high_c - p.fan_t_low_c, 1e-9) for p in prms]
+        )
+        self.fan_rmin = np.array([p.fan_r_scale_min for p in prms])
+        self.fan_pmax = np.array([p.fan_p_max_w for p in prms])
+        self.trip = np.array([p.t_trip_c for p in prms])
+        self.release = np.array([p.t_release_c for p in prms])
+        # flat unit/group layout (racks concatenated in t_idx order)
+        unit_starts: List[int] = []
+        group_starts: List[int] = []  # group segment starts, flat pcb
+        rack_u: List[int] = []
+        rack_g: List[int] = []
+        local_idx: List[int] = []
+        group_of_u: List[int] = []
+        self.last_unit = np.zeros(nt, np.int64)
+        u0 = g0 = 0
+        for j, spec in enumerate(specs):
+            unit_starts.append(u0)
+            group_starts.append(g0)
+            groups = spec.groups()
+            for _ in groups:
+                rack_g.append(j)
+            for u in range(spec.n_units):
+                rack_u.append(j)
+                local_idx.append(u)
+                group_of_u.append(g0 + u // spec.group_size)
+            self.last_unit[j] = u0 + spec.n_units - 1
+            u0 += spec.n_units
+            g0 += len(groups)
+        self.n_flat_units = u0
+        self.unit_starts = np.asarray(unit_starts, np.int64)
+        self.group_starts = np.asarray(group_starts, np.int64)
+        self.rack_u = np.asarray(rack_u, np.int64)
+        self.rack_g = np.asarray(rack_g, np.int64)
+        self.local_idx = np.asarray(local_idx, np.int64)
+        self.group_of_u = np.asarray(group_of_u, np.int64)
+        self.t_die = self.t_amb[self.rack_u].copy()
+        self.t_pcb = self.t_amb[self.rack_g].copy()
+        self.latched = np.zeros(u0, bool)
+        # per-unit broadcasts of the per-rack constants
+        self.r_die_u = self.r_die[self.rack_u]
+        self.c_die_u = self.c_die[self.rack_u]
+        self.c_pcb_g = self.c_pcb[self.rack_g]
+        self.t_amb_g = self.t_amb[self.rack_g]
+        # thermal ceilings for governors: constant per rack, computed
+        # with the same scalar helper the pool caches
+        self.max_sustainable: List[int] = []
+        for r in t_idx:
+            tm = ThermalModel(racks[r].spec, racks[r].thermal)
+            self.max_sustainable.append(
+                tm.max_sustainable_index(racks[r].spec.unit, racks[r].opp_table)
+            )
+        self._pw = np.empty(u0, float)
+
+    def any_latched(self) -> bool:
+        return bool(self.latched.any())
+
+    def step(
+        self, dt: float, pw: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Advance every stacked network one tick under the flat
+        per-unit power draw; returns per-thermal-rack ``(fan_w,
+        max_die_temp_c, n_throttled)`` — the three pool histograms."""
+        hottest = np.maximum.reduceat(self.t_pcb, self.group_starts)
+        raw_frac = (hottest - self.fan_low) / self.fan_span
+        frac = np.minimum(1.0, np.maximum(0.0, raw_frac))
+        r_pcb = self.r_pcb0 * (1.0 - (1.0 - self.fan_rmin) * frac)
+        tau = np.minimum(self.r_die * self.c_die, r_pcb * self.c_pcb)
+        denom = np.maximum(0.25 * tau, 1e-6)
+        n_sub = np.maximum(1, (dt / denom).astype(np.int64) + 1)
+        h = dt / n_sub
+        h_u = h[self.rack_u]
+        h_g = h[self.rack_g]
+        r_pcb_g = r_pcb[self.rack_g]
+        max_sub = int(n_sub.max())
+        uniform = bool((n_sub == max_sub).all())
+        n_groups = len(self.t_pcb)
+        for s in range(max_sub):
+            f = (self.t_die - self.t_pcb[self.group_of_u]) / self.r_die_u
+            # weighted bincount adds in input order — bitwise-identical
+            # to the scalar per-unit accumulation loop, which float
+            # add.reduceat is not (its reduction is not left-to-right)
+            flows = np.bincount(self.group_of_u, weights=f, minlength=n_groups)
+            d_die = h_u * (pw - f) / self.c_die_u
+            out = (self.t_pcb - self.t_amb_g) / r_pcb_g
+            d_pcb = h_g * (flows - out) / self.c_pcb_g
+            if not uniform:
+                live = s < n_sub
+                d_die = np.where(live[self.rack_u], d_die, 0.0)
+                d_pcb = np.where(live[self.rack_g], d_pcb, 0.0)
+            self.t_die += d_die
+            self.t_pcb += d_pcb
+        self.latched = np.where(
+            self.latched,
+            ~(self.t_die <= self.release[self.rack_u]),
+            self.t_die >= self.trip[self.rack_u],
+        )
+        fan_w = self.fan_pmax * frac
+        max_temp = np.maximum.reduceat(self.t_die, self.unit_starts)
+        n_thr = np.add.reduceat(self.latched.astype(np.int64), self.unit_starts)
+        return fan_w, max_temp, n_thr
+
+
+# governor kinds the stacked selection pass understands; anything else
+# falls back to a per-rack select() call with a real FreqContext
+_GOV_NONE, _GOV_FIXED, _GOV_RACE, _GOV_SCHED, _GOV_GENERIC = range(5)
+
+
 class _VectorFleetEngine:
     """Stacked engine: rack state as arrays, one numpy pass per tick.
 
     Every floating-point expression mirrors the scalar engine's
     operation order exactly (``UnitGovernor.target_units``,
-    ``UnitPool.charge``'s binary-gating branch, and the windowed rate
-    estimate collapse to closed forms when ``window_s == dt_s`` and
-    group size is 1), so per-rack telemetry is bitwise-identical to the
+    ``UnitPool.charge``, the windowed rate estimate, the frequency
+    governors, and the thermal Euler step collapse to closed forms when
+    ``window_s == dt_s``, group size is 1, and each rack hosts one
+    fluid tenant), so per-rack telemetry is bitwise-identical to the
     scalar engine's. The fluid FIFO queues stay as per-rack
     :class:`QueueWorkload` objects — both engines share that code, so
     request latencies match by construction.
+
+    The frequency axis: each rack carries one OPP index (single tenant,
+    so the pool's per-unit requested points collapse to it), the per-OPP
+    perf/power scales are stacked as (racks, opps) tables, and the
+    built-in governors run as masked argmin passes over the OPP axis.
+    Straggler hedging is a per-rack borrowed-unit counter folded into
+    the fluid drain and the power integral, exactly as the runtime
+    charges it. Trip-latched dies are metered at the floor OPP through
+    per-rack latched-active counts from the stacked thermal state.
     """
 
     backend = "vector"
@@ -153,14 +330,9 @@ class _VectorFleetEngine:
         idle_units_off: bool,
     ):
         for rc in racks:
-            pol = rc.policy
-            if pol is not None and (
-                pol.freq_governor is not None or pol.hedge_after_s is not None
-            ):
-                raise ValueError(
-                    "the vector fleet engine models binary per-unit "
-                    "gating only (no freq_governor / hedge_after_s); "
-                    "use Fleet(backend='scalar') for those policies"
+            if rc.thermal is not None and rc.opp_table is None:
+                raise AssertionError(
+                    "thermal throttling needs an opp_table to throttle within"
                 )
         self.dt_s = dt_s
         self.now = 0.0
@@ -176,6 +348,7 @@ class _VectorFleetEngine:
         self.p_idle = np.array([u.p_idle for u in units], float)
         self.p_peak = np.array([u.p_peak for u in units], float)
         self.gamma = np.array([u.gamma for u in units], float)
+        self.span = self.p_peak - self.p_idle
         self.p_base = np.array(
             [u.p_off if idle_units_off else u.p_idle for u in units],
             float,
@@ -185,9 +358,87 @@ class _VectorFleetEngine:
             for i, rc in enumerate(racks)
         ]
         n = len(racks)
+        self._rr = np.arange(n)
+        # --- frequency axis: stacked OPP tables + governor classification
+        self.has_table = np.array([rc.opp_table is not None for rc in racks], bool)
+        self.K = np.array(
+            [len(rc.opp_table) if rc.opp_table is not None else 1 for rc in racks],
+            np.int64,
+        )
+        self.Kmax = int(self.K.max())
+        # (racks, opps) perf and span*power_scale tables; rows of racks
+        # without a table carry the nominal point, columns past a short
+        # table replicate its top point (masked out of every search)
+        self.perf_tab = np.ones((n, self.Kmax), float)
+        self.spk_tab = np.repeat(self.span[:, None], self.Kmax, axis=1)
+        self.opp = np.zeros(n, np.int64)
+        for r, rc in enumerate(racks):
+            tb = rc.opp_table
+            if tb is None:
+                continue
+            for c in range(self.Kmax):
+                p = tb[min(c, len(tb) - 1)]
+                self.perf_tab[r, c] = p.perf_scale
+                self.spk_tab[r, c] = self.span[r] * p.power_scale
+            self.opp[r] = tb.nominal
+        self.nominal = self.opp.copy()
+        self.highest = self.K - 1
+        # thermal stacking (before classification: ceilings come from it)
+        t_idx = [r for r, rc in enumerate(racks) if rc.thermal is not None]
+        self.therm: Optional[_StackedThermal] = (
+            _StackedThermal(racks, t_idx) if t_idx else None
+        )
+        self.t_idx = np.asarray(t_idx, np.int64)
+        max_sust: List[Optional[int]] = [None] * n
+        if self.therm is not None:
+            for j, r in enumerate(t_idx):
+                max_sust[r] = self.therm.max_sustainable[j]
+        # classify each rack's governor for the stacked selection pass
+        self._gov_kind = np.full(n, _GOV_NONE, np.int64)
+        self._fixed_opp = np.zeros(n, np.int64)
+        self._sched_headroom = np.zeros(n, float)
+        self._ceiling = self.highest.copy()  # thermal-aware clamp
+        self._has_ceiling = np.zeros(n, bool)
+        self._generic: List[Tuple[int, object]] = []
+        self._tables = [rc.opp_table for rc in racks]
+        self._unit_specs = units
+        self._max_sust = max_sust
+        for r, (rc, pol) in enumerate(zip(racks, pols)):
+            gov = pol.freq_governor
+            tb = rc.opp_table
+            if tb is None or gov is None:
+                continue  # frequency axis off / pinned at nominal
+            inner = gov
+            if type(gov) is ThermalAwareGovernor:
+                inner = gov.inner
+                if max_sust[r] is not None:
+                    self._ceiling[r] = max_sust[r]
+                    self._has_ceiling[r] = True
+            if type(inner) is FixedFreqGovernor:
+                self._gov_kind[r] = _GOV_FIXED
+                self._fixed_opp[r] = (
+                    tb.highest if inner.index is None else tb.clamp(inner.index)
+                )
+            elif type(inner) is RaceToIdleGovernor:
+                self._gov_kind[r] = _GOV_RACE
+            elif type(inner) is SchedutilGovernor:
+                self._gov_kind[r] = _GOV_SCHED
+                self._sched_headroom[r] = (
+                    inner.headroom if inner.headroom is not None else pol.headroom
+                )
+            else:
+                self._gov_kind[r] = _GOV_GENERIC
+                self._generic.append((r, gov))
+        self._fixed_idx = np.nonzero(self._gov_kind == _GOV_FIXED)[0]
+        self._race_idx = np.nonzero(self._gov_kind == _GOV_RACE)[0]
+        self._sched_idx = np.nonzero(self._gov_kind == _GOV_SCHED)[0]
+        # hedging config (None = off), per rack
+        self._hedge_deadline = [p.hedge_after_s for p in pols]
+        self.backlog = np.zeros(n, bool)
         self.active = self.minq.copy()
         self.last_down = np.full(n, -1e9)
         self.scale_events = np.zeros(n, np.int64)
+        self.hedged_cnt = np.zeros(n, np.int64)
         self.energy = np.zeros(n)
         self.unit_energy = np.zeros(n)
         self.served_acc = np.zeros(n)
@@ -197,6 +448,9 @@ class _VectorFleetEngine:
         self._active_rows: List[np.ndarray] = []
         self._power_rows: List[np.ndarray] = []
         self._util_rows: List[np.ndarray] = []
+        self._fan_rows: List[np.ndarray] = []
+        self._temp_rows: List[np.ndarray] = []
+        self._thr_rows: List[np.ndarray] = []
 
     def queued_cost(self) -> np.ndarray:
         return np.array([wl.pending_cost for wl in self.wls], float)
@@ -204,6 +458,61 @@ class _VectorFleetEngine:
     def active_units(self) -> np.ndarray:
         return self.active.copy()
 
+    # ------------------------------------------------------------------
+    def _select_opps(self, rate: np.ndarray, t: float) -> None:
+        """One frequency-governor decision per rack, vectorized over the
+        OPP axis for the built-in governors (mirrors
+        ``UnitGovernor._select_opp`` + each governor's ``select``)."""
+        if self._fixed_idx.size:
+            self.opp[self._fixed_idx] = self._fixed_opp[self._fixed_idx]
+        ri = self._race_idx
+        if ri.size:
+            busy = (rate[ri] > 0.0) | self.backlog[ri]
+            self.opp[ri] = np.where(busy, self.highest[ri], self.nominal[ri])
+        si = self._sched_idx
+        if si.size:
+            d = rate[si]
+            need = d * self._sched_headroom[si]
+            ur = self.unit_rate[si]
+            nu = self.n_units[si]
+            mu = self.min_units[si]
+            pg = self.p_base[si]
+            pi = self.p_idle[si]
+            ga = self.gamma[si]
+            kv = self.K[si]
+            best = self.highest[si].copy()
+            bestp = np.full(si.size, np.inf)
+            pos = need > 0.0
+            for c in range(self.Kmax):
+                eff = ur * self.perf_tab[si, c]
+                ncnt = np.maximum(mu, np.ceil(need / eff)).astype(np.int64)
+                util = np.minimum(1.0, d / (np.maximum(ncnt, 1) * eff))
+                spk = self.spk_tab[si, c]
+                power = ncnt * (pi + spk * util**ga) + (nu - ncnt) * pg
+                upd = (c < kv) & (ncnt <= nu) & pos & (power < bestp - 1e-12)
+                best = np.where(upd, c, best)
+                bestp = np.where(upd, power, bestp)
+            self.opp[si] = np.where(pos, best, 0)
+        for r, gov in self._generic:
+            tb = self._tables[r]
+            ctx = FreqContext(
+                demand_rate=float(rate[r]),
+                unit_rate=float(self.unit_rate[r]),
+                headroom=float(self.headroom[r]),
+                n_units=int(self.n_units[r]),
+                table=tb,
+                unit=self._unit_specs[r],
+                min_units=int(self.min_units[r]),
+                max_sustainable=self._max_sust[r],
+                backlog=bool(self.backlog[r]),
+                p_gated_w=float(self.p_base[r]),
+            )
+            self.opp[r] = tb.clamp(gov.select(ctx))
+        if self._has_ceiling.any():
+            clamped = np.minimum(self.opp, self._ceiling)
+            self.opp = np.where(self._has_ceiling, clamped, self.opp)
+
+    # ------------------------------------------------------------------
     def tick(self, assign_rps, dt) -> Tuple[np.ndarray, np.ndarray]:
         t = self.now
         work = assign_rps * dt
@@ -212,8 +521,15 @@ class _VectorFleetEngine:
             self.wls[r].submit(req)
         # windowed rate estimate with window == dt: this tick's work
         rate = work / dt
-        # UnitGovernor.target_units with perf_scale == 1.0, group == 1
-        need = rate * self.headroom / (self.unit_rate * 1.0)
+        # frequency governors pick this tick's OPP; the activation
+        # target is then sized against that point's effective rate
+        self._select_opps(rate, t)
+        # the chosen points' perf scales, for both activation sizing and
+        # the workload's mean perf multiplier
+        perf_req = self.perf_tab[self._rr, self.opp]
+        perf_sz = np.where(self.has_table, perf_req, 1.0)
+        # UnitGovernor.target_units with group == 1
+        need = rate * self.headroom / (self.unit_rate * np.maximum(perf_sz, 1e-9))
         raw = np.minimum(self.n_units, np.maximum(self.min_units, np.ceil(need)))
         tgt = np.maximum(1, raw.astype(np.int64))
         # UnitGovernor.apply_target: immediate scale-up, cooldown-gated
@@ -228,17 +544,55 @@ class _VectorFleetEngine:
         self.scale_events += down
         self.last_down = np.where(down, t, self.last_down)
         self.active = new_active
+        k_f = new_active.astype(float)
+        # mean perf-scale over each rack's active units (pool.perf_scale:
+        # trip-latched units are dragged to the floor point)
+        perf_used = np.where(self.has_table, (k_f * perf_req) / k_f, 1.0)
+        latched_any = self.therm is not None and self.therm.any_latched()
+        floor_all = None
+        if latched_any:
+            th = self.therm
+            ti = self.t_idx
+            am = th.local_idx < new_active[ti][th.rack_u]
+            lam = (am & th.latched).astype(np.int64)
+            c_low_t = np.add.reduceat(lam, th.unit_starts)
+            c_low_f = c_low_t.astype(float)
+            k_t = k_f[ti]
+            p0 = self.perf_tab[ti, 0]
+            pr = self.perf_tab[ti, self.opp[ti]]
+            # single product when everything lands in the floor bucket,
+            # the two-bucket ascending accumulation otherwise — exactly
+            # _perf_from_opp_counts
+            floor_all = (self.opp[ti] == 0) & (c_low_t > 0)
+            mixed = c_low_f * p0 + (k_t - c_low_f) * pr
+            perf_used[ti] = np.where(floor_all, k_t * p0, mixed) / k_t
+        else:
+            am = c_low_f = None
         # fluid FIFO drain per rack (QueueWorkload.step_fast — the
-        # allocation-light twin of step(), identical arithmetic)
+        # allocation-light twin of step(), identical arithmetic), with
+        # straggler hedging: a rack whose oldest queued request has
+        # waited past hedge_after_s borrows one free unit this tick
         n = len(self.wls)
         acts = new_active.tolist()
+        nu_l = self.n_units.tolist()
+        perf_l = perf_used.tolist()
+        hedges = [0] * n
         utils_l: List[float] = []
         served_l: List[float] = []
         queued_l: List[int] = []
         conc_l: List[int] = []
         for r in range(n):
             wl = self.wls[r]
-            used, util, q, c = wl.step_fast(acts[r], dt, t)
+            a = acts[r]
+            h = 0
+            dl = self._hedge_deadline[r]
+            if dl is not None and a < nu_l[r]:
+                age = wl.oldest_waiting_s(t)
+                if age is not None and age > dl:
+                    h = 1
+                    self.hedged_cnt[r] += 1
+            hedges[r] = h
+            used, util, q, c = wl.step_fast(a + h, dt, t, perf_l[r])
             utils_l.append(util)
             served_l.append(used)
             queued_l.append(q)
@@ -249,21 +603,57 @@ class _VectorFleetEngine:
         served = np.asarray(served_l, float)
         queued = np.asarray(queued_l, np.int64)
         conc = np.asarray(conc_l, np.int64)
-        # UnitPool.charge, binary-gating branch, elementwise per rack
+        h_arr = np.asarray(hedges, np.int64)
+        self.backlog = queued > 0
+        # UnitPool.charge, elementwise per rack: active units at the
+        # rack's OPP (latched dies at the floor point), the borrowed
+        # hedge unit at the requested point, the rest at the gated floor
         u = np.minimum(np.maximum(utils, 0.0), 1.0)
-        af = new_active.astype(float)
-        p_units = 0.0 + af * (
-            self.p_idle + (self.p_peak - self.p_idle) * u**self.gamma
-        )
-        p_rest = (self.n_units - new_active).astype(float) * self.p_base
-        total = self.p_shared + 0.0 + p_units + p_rest
+        ug = u**self.gamma
+        w_req = self.p_idle + self.spk_tab[self._rr, self.opp] * ug
+        h_f = h_arr.astype(float)
+        powered = new_active + h_arr
+        powered_f = powered.astype(float)
+        p_act = k_f * w_req
+        w_low = None
+        if latched_any:
+            w_low = self.p_idle + self.spk_tab[:, 0] * ug
+            ti = self.t_idx
+            mixed = c_low_f * w_low[ti] + (k_f[ti] - c_low_f) * w_req[ti]
+            p_act[ti] = np.where(floor_all, k_f[ti] * w_low[ti], mixed)
+        p_units = np.where(self.has_table, p_act + h_f * w_req, powered_f * w_req)
+        fan_w = np.zeros(n)
+        if self.therm is not None:
+            th = self.therm
+            ti = self.t_idx
+            if am is None:
+                am = th.local_idx < new_active[ti][th.rack_u]
+            pw = th._pw
+            np.copyto(pw, self.p_base[ti][th.rack_u])
+            np.copyto(pw, w_req[ti][th.rack_u], where=am)
+            if latched_any:
+                np.copyto(pw, w_low[ti][th.rack_u], where=am & th.latched)
+            for j in np.nonzero(h_arr[ti] > 0)[0]:
+                pw[th.last_unit[j]] = w_req[ti[j]]
+            f_t, temp_t, thr_t = th.step(dt, pw)
+            fan_w[ti] = f_t
+            self._fan_rows.append(f_t)
+            self._temp_rows.append(temp_t)
+            self._thr_rows.append(thr_t)
+        p_rest = (self.n_units - powered).astype(float) * self.p_base
+        total = self.p_shared + fan_w + p_units + p_rest
         self.energy += total * dt
         self.unit_energy += p_units * dt
         self.served_acc += served
-        util_agg = np.divide(af * u, af, out=np.zeros(n), where=af > 0)
+        util_agg = np.divide(
+            powered_f * u,
+            powered_f,
+            out=np.zeros(n),
+            where=powered_f > 0,
+        )
         self._t_hist.append(t)
         self._offered_rows.append(rate)
-        self._active_rows.append(new_active)
+        self._active_rows.append(powered)
         self._power_rows.append(total)
         self._util_rows.append(util_agg)
         self.now = t + dt
@@ -275,9 +665,25 @@ class _VectorFleetEngine:
         active = np.stack(self._active_rows)
         power = np.stack(self._power_rows)
         util = np.stack(self._util_rows)
+        empty = np.zeros(0)
+        if self.therm is not None and self._fan_rows:
+            fan = np.stack(self._fan_rows)  # (ticks, thermal racks)
+            temp = np.stack(self._temp_rows)
+            thr = np.stack(self._thr_rows)
+            col_of = {int(r): j for j, r in enumerate(self.t_idx)}
+        else:
+            fan = temp = thr = None
+            col_of = {}
         out = []
         for r in range(len(self.wls)):
             p50, p99 = latency_percentiles(self.responses[r])
+            j = col_of.get(r)
+            if j is None:
+                temp_r = thr_r = fan_r = empty
+            else:
+                temp_r = temp[:, j].copy()
+                thr_r = thr[:, j].astype(float)
+                fan_r = fan[:, j].copy()
             out.append(
                 Telemetry(
                     time_s=ts,
@@ -286,6 +692,7 @@ class _VectorFleetEngine:
                     power_w=power[:, r].copy(),
                     utilization=util[:, r].copy(),
                     served=float(self.served_acc[r]),
+                    hedged=int(self.hedged_cnt[r]),
                     scale_events=int(self.scale_events[r]),
                     p50_latency_s=p50,
                     p99_latency_s=p99,
@@ -293,6 +700,9 @@ class _VectorFleetEngine:
                     unit_energy_j=float(self.unit_energy[r]),
                     responses=list(self.responses[r]),
                     workload=self.wls[r].describe(),
+                    max_temp_c=temp_r,
+                    throttled_units=thr_r,
+                    fan_power_w=fan_r,
                 )
             )
         return out

@@ -28,7 +28,7 @@ from dataclasses import dataclass
 from typing import Optional, Protocol, runtime_checkable
 
 from repro.core.cluster import UnitSpec
-from repro.power.opp import OPPTable, unit_power
+from repro.power.opp import OPPTable
 
 
 @dataclass
@@ -91,21 +91,34 @@ class SchedutilGovernor:
     def __init__(self, headroom: Optional[float] = None):
         # None: inherit the activation policy's headroom from the context
         self.headroom = headroom
+        # per-(table, unit) constants, memoized by identity — the runtime
+        # hands the same table/unit objects every tick, and this method
+        # is on the per-tick hot path of every DVFS simulation
+        self._tbl = self._unit = None
+        self._ps: "list[float]" = []
+        self._spk: "list[float]" = []
 
     def select(self, ctx: FreqContext) -> int:
         need = ctx.demand_rate * (self.headroom if self.headroom is not None
                                   else ctx.headroom)
         if need <= 0.0:
             return ctx.table.lowest
+        if self._tbl is not ctx.table or self._unit is not ctx.unit:
+            span = ctx.unit.p_peak - ctx.unit.p_idle
+            self._ps = [p.perf_scale for p in ctx.table.points]
+            self._spk = [span * p.power_scale for p in ctx.table.points]
+            self._tbl, self._unit = ctx.table, ctx.unit
+        p_idle, gamma = ctx.unit.p_idle, ctx.unit.gamma
         best_idx, best_power = ctx.table.highest, math.inf
-        for idx in range(len(ctx.table)):
-            opp = ctx.table[idx]
-            eff_rate = ctx.unit_rate * opp.perf_scale
+        for idx in range(len(self._ps)):
+            eff_rate = ctx.unit_rate * self._ps[idx]
             n = max(ctx.min_units, math.ceil(need / eff_rate))
             if n > ctx.n_units:
                 continue                      # can't meet demand this slow
             util = min(1.0, ctx.demand_rate / (n * eff_rate))
-            power = n * unit_power(ctx.unit, util, opp) \
+            # inlined unit_power(ctx.unit, util, table[idx]) — identical
+            # association, with span * power_scale folded into _spk
+            power = n * (p_idle + self._spk[idx] * util ** gamma) \
                 + (ctx.n_units - n) * ctx.p_gated_w
             if power < best_power - 1e-12:
                 best_idx, best_power = idx, power

@@ -173,6 +173,8 @@ class VectorThermalModel(ThermalModel):
         self.t_pcb = np.asarray(self.t_pcb, float)
         self.throttled = np.zeros(spec.n_units, bool)
         self._group_idx = np.asarray(self._group_of, np.int64)
+        self._scr_f: Optional[np.ndarray] = None
+        self._scr_g: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------------
     def _fan_frac(self) -> float:
@@ -199,14 +201,31 @@ class VectorThermalModel(ThermalModel):
         n_sub = max(1, int(dt_s / max(0.25 * tau, 1e-6)) + 1)
         h = dt_s / n_sub
         n_groups = len(self._groups)
+        # scratch buffers (ufunc out= — same float ops, no allocations)
+        f = self._scr_f
+        if f is None:
+            f = self._scr_f = np.empty(self.spec.n_units, float)
+            self._scr_g = np.empty(n_groups, float)
+        out = self._scr_g
         for _ in range(n_sub):
-            f = (self.t_die - self.t_pcb[self._group_idx]) \
-                / p.r_die_c_per_w
+            np.subtract(self.t_die, self.t_pcb[self._group_idx], out=f)
+            f /= p.r_die_c_per_w
+            # weighted bincount adds in input order — the only numpy
+            # group-sum whose accumulation is bitwise-identical to the
+            # scalar loop (reduceat / reshape-sum reductions are not
+            # strictly left-to-right)
             flows = np.bincount(self._group_idx, weights=f,
                                 minlength=n_groups)
-            self.t_die = self.t_die + h * (pw - f) / p.c_die_j_per_c
-            out = (self.t_pcb - p.t_ambient_c) / r_pcb
-            self.t_pcb = self.t_pcb + h * (flows - out) / p.c_pcb_j_per_c
+            np.subtract(pw, f, out=f)
+            f *= h
+            f /= p.c_die_j_per_c
+            self.t_die += f
+            np.subtract(self.t_pcb, p.t_ambient_c, out=out)
+            out /= r_pcb
+            np.subtract(flows, out, out=flows)
+            flows *= h
+            flows /= p.c_pcb_j_per_c
+            self.t_pcb += flows
         # hysteresis latch: a throttled die stays latched until it cools
         # below the release point; an unlatched one trips at t_trip_c
         self.throttled = np.where(self.throttled,

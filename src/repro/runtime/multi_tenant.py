@@ -87,8 +87,17 @@ def weighted_fair_share(demands: Dict[str, int], floors: Dict[str, int],
     group-aligned, everyone simply gets their demand.
     """
     groups = groups or {}
-    order = {name: i for i, name in enumerate(demands)}
     grants = {m: min(demands[m], floors.get(m, 0)) for m in demands}
+    # Uncontended fast path: when total demand fits the capacity and every
+    # tenant's beyond-floor demand is a whole number of its groups, the
+    # progressive fill below provably lands on the demands themselves —
+    # skip the unit-at-a-time loop (it is O(capacity) and dominates the
+    # single-tenant tick otherwise).
+    if sum(demands.values()) <= capacity and all(
+            (demands[m] - grants[m]) % groups.get(m, 1) == 0
+            for m in demands):
+        return dict(demands)
+    order = {name: i for i, name in enumerate(demands)}
     remaining = capacity - sum(grants.values())
     while remaining > 0:
         cand = [m for m in demands
@@ -400,6 +409,9 @@ class MultiTenantRuntime:
             responses=responses,
             workload=wl_desc,
             per_tenant=per,
+            max_temp_c=np.asarray(pool.max_temp_hist, float),
+            throttled_units=np.asarray(pool.throttled_hist, float),
+            fan_power_w=np.asarray(pool.fan_power_hist, float),
         )
 
     def static_baseline_energy(self, utilization: float = 1.0) -> float:

@@ -7,6 +7,7 @@ per-tenant activation target and applies it to a
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, List, Optional, Tuple
 
@@ -141,8 +142,10 @@ class UnitGovernor:
     def target_units(self, offered: float, perf_scale: float = 1.0) -> int:
         need = offered * self.policy.headroom \
             / (self.unit_rate * max(perf_scale, 1e-9))
+        # math.ceil == np.ceil for any finite float but skips the numpy
+        # scalar round-trip on this per-tick path
         raw = int(min(self.spec.n_units,
-                      max(self.policy.min_units, np.ceil(need))))
+                      max(self.policy.min_units, math.ceil(need))))
         return self._quantize(raw)
 
     # ------------------------------------------------------------------

@@ -133,6 +133,7 @@ class UnitPool:
             "thermal throttling needs an opp_table to throttle within"
         self.opp_table = opp_table
         self.thermal: Optional[ThermalModel] = thermal
+        self._max_sustainable: Optional[int] = None
         self._tenant_opp: Dict[str, int] = {}
         # accounting (cluster level; shared power charged once)
         self.energy_j = 0.0
@@ -220,11 +221,15 @@ class UnitPool:
     def max_sustainable_opp(self) -> Optional[int]:
         """Thermal ceiling for governors (None without a thermal model):
         the highest OPP a fully-loaded, fully-occupied PCB group can
-        hold forever without tripping."""
+        hold forever without tripping. Constant over the pool's lifetime
+        (params, unit, and table are fixed at construction), so it is
+        computed once and cached — governors consult it every tick."""
         if self.thermal is None or self.opp_table is None:
             return None
-        return self.thermal.max_sustainable_index(self.spec.unit,
-                                                  self.opp_table)
+        if self._max_sustainable is None:
+            self._max_sustainable = self.thermal.max_sustainable_index(
+                self.spec.unit, self.opp_table)
+        return self._max_sustainable
 
     # -- placement ---------------------------------------------------------
     def _group_key(self, gi: int, tenant: str) -> Tuple[int, int, int, int]:
@@ -498,6 +503,22 @@ class VectorUnitPool(UnitPool):
         self._n_waking_of: Dict[int, int] = {}
         self._n_active_of: Dict[int, int] = {}
         self._n_alloc = 0
+        self._n_waking_total = 0
+        # incrementally-maintained per-group counts: free units per group,
+        # and per tenant the owned (not-off) / active units per group.
+        # Placement and release read these instead of re-deriving them
+        # with bincount + lexsort on every operation.
+        self._free_g = self._group_len.copy()
+        self._mine_g: Dict[int, np.ndarray] = {}
+        self._act_g: Dict[int, np.ndarray] = {}
+        # composite placement-key constants: (no-units-here, not-wholly-
+        # free, fullness) packed into one int so a single stable argsort
+        # reproduces the scalar _group_key ordering (gi breaks ties)
+        self._lmax = int(self._group_len.max())
+        # cached per-tenant active-index arrays (invalidated whenever a
+        # transition changes an active set; callers must not mutate)
+        self._active_idx: Dict[int, np.ndarray] = {}
+        self._pwbuf: Optional[np.ndarray] = None
 
     # -- compatibility views ----------------------------------------------
     # Tuples, not lists: code written against the scalar backend's mutable
@@ -554,7 +575,13 @@ class VectorUnitPool(UnitPool):
         if self.opp_table is None:
             return
         idx = self.opp_table.clamp(idx)
+        prev = self._tenant_opp.get(tenant, self.opp_table.nominal)
         self._tenant_opp[tenant] = idx
+        if idx == prev:
+            # every acquisition (wake / force_active) stamps the tenant's
+            # current point onto the unit, so owned units already carry
+            # ``idx`` — skip the per-unit write on the steady-state tick
+            return
         tid = self._tenant_ids.get(tenant)
         if tid is not None:
             self._req[self._owner == tid] = idx
@@ -572,35 +599,48 @@ class VectorUnitPool(UnitPool):
         return self._req
 
     # -- placement ---------------------------------------------------------
+    def _group_counts_of(self, tid: int) -> "tuple[np.ndarray, np.ndarray]":
+        n_groups = len(self._groups)
+        mine = self._mine_g.get(tid)
+        if mine is None:
+            mine = self._mine_g[tid] = np.zeros(n_groups, np.int64)
+        act = self._act_g.get(tid)
+        if act is None:
+            act = self._act_g[tid] = np.zeros(n_groups, np.int64)
+        return mine, act
+
     def _pick_units(self, tenant: str, k: int) -> List[int]:
-        if k <= 0:
+        if k <= 0 or self._n_alloc == self.spec.n_units:
             return []
         tid = self._tid(tenant, create=True)
-        off = self._state == _OFF
-        if not off.any():
-            return []
-        mine = (self._owner == tid) & (self._state != _OFF)
-        n_groups = len(self._groups)
-        mine_g = np.bincount(self._group_idx[mine], minlength=n_groups)
-        free_g = np.bincount(self._group_idx[off], minlength=n_groups)
-        # same key as the scalar _group_key, lexsort primary key last
-        key_mine = (mine_g == 0).astype(np.int8)
-        key_full = (free_g != self._group_len).astype(np.int8)
-        order = np.lexsort((np.arange(n_groups), -free_g,
-                            key_full, key_mine))
+        mine_g, _ = self._group_counts_of(tid)
+        free_g = self._free_g
+        # the scalar _group_key — (no units here, not wholly free, -free)
+        # with gi tie-break — packed into one int; stable argsort keeps
+        # ascending gi among equal keys
+        key = ((mine_g == 0).astype(np.int64) * 2
+               + (free_g != self._group_len)) * (self._lmax + 1) \
+            + (self._lmax - free_g)
+        order = np.argsort(key, kind="stable")
         out: List[int] = []
         gs = self.spec.group_size
+        state = self._state
         for gi in order:
             if free_g[gi] == 0:
                 continue
             lo = gi * gs
-            for u in np.nonzero(off[lo:lo + int(self._group_len[gi])])[0]:
+            for u in np.nonzero(state[lo:lo + int(self._group_len[gi])]
+                                == _OFF)[0]:
                 out.append(lo + int(u))
                 if len(out) == k:
                     return out
         return out
 
     # -- transitions -------------------------------------------------------
+    def _count_groups(self, idx: np.ndarray) -> np.ndarray:
+        return np.bincount(self._group_idx[idx],
+                           minlength=len(self._groups))
+
     def wake(self, tenant: str, k: int, ready_t: float) -> int:
         picked = self._pick_units(tenant, k)
         if picked:
@@ -614,6 +654,11 @@ class VectorUnitPool(UnitPool):
             self._n_waking_of[tid] = \
                 self._n_waking_of.get(tid, 0) + len(picked)
             self._n_alloc += len(picked)
+            self._n_waking_total += len(picked)
+            g = self._count_groups(idx)
+            mine_g, _ = self._group_counts_of(tid)
+            mine_g += g
+            self._free_g -= g
         return len(picked)
 
     def release(self, tenant: str, k: int) -> int:
@@ -623,9 +668,9 @@ class VectorUnitPool(UnitPool):
         if tid is None:
             return 0
         released = 0
-        widx = np.nonzero((self._owner == tid)
-                          & (self._state == _WAKING))[0]
-        if len(widx):
+        if self._n_waking_of.get(tid, 0):
+            widx = np.nonzero((self._owner == tid)
+                              & (self._state == _WAKING))[0]
             # newest ready time first, then highest unit index
             order = np.lexsort((-widx, -self._ready[widx]))
             take = widx[order[:k]]
@@ -634,26 +679,43 @@ class VectorUnitPool(UnitPool):
             released = len(take)
             self._n_waking_of[tid] -= released
             self._n_alloc -= released
+            self._n_waking_total -= released
+            g = self._count_groups(take)
+            mine_g, _ = self._group_counts_of(tid)
+            mine_g -= g
+            self._free_g += g
         if released == k:
             return released
-        aidx = np.nonzero((self._owner == tid)
-                          & (self._state == _ACTIVE))[0]
-        if len(aidx):
-            # least-occupied groups first, then highest unit index
-            occ = np.bincount(self._group_idx[aidx],
-                              minlength=len(self._groups))
-            order = np.lexsort((-aidx, occ[self._group_idx[aidx]]))
+        if self._n_active_of.get(tid, 0):
+            aidx = self._active_units_of(tenant)
+            # least-occupied groups first, then highest unit index —
+            # the cached per-group active counts *are* the occupancy the
+            # scalar backend derives per call, and packing (occupancy,
+            # n_units - u) into one key makes a single argsort reproduce
+            # the scalar ordering (keys are unique: one per unit)
+            _, act_g = self._group_counts_of(tid)
+            key = act_g[self._group_idx[aidx]] * (self.spec.n_units + 1) \
+                + (self.spec.n_units - aidx)
+            order = np.argsort(key)
             take = aidx[order[:k - released]]
             self._state[take] = _OFF
             self._owner[take] = -1
             self._n_active_of[tid] = \
                 self._n_active_of.get(tid, 0) - len(take)
             self._n_alloc -= len(take)
+            g = self._count_groups(take)
+            mine_g, act_g = self._group_counts_of(tid)
+            mine_g -= g
+            act_g -= g
+            self._free_g += g
+            self._active_idx.pop(tid, None)
             released += len(take)
         return released
 
     def advance(self, t: float, dt_s: float,
                 tenant: Optional[str] = None) -> int:
+        if self._n_waking_total == 0:
+            return 0
         mask = (self._state == _WAKING) & (self._ready <= t + dt_s)
         if tenant is not None:
             tid = self._tenant_ids.get(tenant)
@@ -669,6 +731,11 @@ class VectorUnitPool(UnitPool):
             o, c = int(o), int(c)
             self._n_waking_of[o] -= c
             self._n_active_of[o] = self._n_active_of.get(o, 0) + c
+            self._n_waking_total -= c
+            sel = idx[self._owner[idx] == o]
+            _, act_g = self._group_counts_of(o)
+            act_g += self._count_groups(sel)
+            self._active_idx.pop(o, None)
         return len(idx)
 
     def force_active(self, tenant: str, k: int) -> None:
@@ -690,30 +757,76 @@ class VectorUnitPool(UnitPool):
                 self._n_active_of[tid] = \
                     self._n_active_of.get(tid, 0) + len(picked)
                 self._n_alloc += len(picked)
+                g = self._count_groups(idx)
+                mine_g, act_g = self._group_counts_of(tid)
+                mine_g += g
+                act_g += g
+                self._free_g -= g
+                self._active_idx.pop(tid, None)
 
     # -- backend hooks -----------------------------------------------------
+    def _latch_free(self) -> bool:
+        """True when no die carries a trip latch — then every unit of a
+        tenant runs at the tenant's requested OPP (wake/force_active/
+        set_opp maintain that invariant) and the per-unit effective-OPP
+        gathers collapse to a single bucket. Read live off the thermal
+        model (tests may set latches by hand)."""
+        return self.thermal is None or not self.thermal.throttled.any()
+
     def _active_units_of(self, tenant: str) -> np.ndarray:
         tid = self._tenant_ids.get(tenant)
         if tid is None:
             return np.empty(0, np.int64)
-        return np.nonzero((self._owner == tid)
-                          & (self._state == _ACTIVE))[0]
+        cached = self._active_idx.get(tid)
+        if cached is None:
+            cached = np.nonzero((self._owner == tid)
+                                & (self._state == _ACTIVE))[0]
+            self._active_idx[tid] = cached
+        return cached
+
+    def perf_scale(self, tenant: str) -> float:
+        if self.opp_table is None:
+            return 1.0
+        k = self.active(tenant)
+        if k == 0:
+            return self.opp_table[self._tenant_opp_of(tenant)].perf_scale
+        if self._latch_free():
+            # single bucket: same accumulation as _perf_from_opp_counts
+            # with one non-zero count
+            return (k * self.opp_table[self._tenant_opp_of(tenant)]
+                    .perf_scale) / k
+        return _perf_from_opp_counts(
+            self.opp_table, self._opp_counts(self._active_units_of(tenant)))
 
     def _opp_counts(self, mine) -> List[int]:
+        counts = [0] * len(self.opp_table)
         if len(mine) == 0:
-            return [0] * len(self.opp_table)
+            return counts
+        if self._latch_free():
+            counts[int(self._req[mine[0]])] = len(mine)
+            return counts
         eff = self._eff_opp_arr()[mine]
         return np.bincount(eff, minlength=len(self.opp_table)).tolist()
 
     def _scatter_unit_power(self, buf, mine, pw_per_opp) -> None:
-        if len(mine):
-            buf[mine] = np.asarray(pw_per_opp)[self._eff_opp_arr()[mine]]
+        if len(mine) == 0:
+            return
+        if self._latch_free():
+            buf[mine] = pw_per_opp[int(self._req[mine[0]])]
+            return
+        buf[mine] = np.asarray(pw_per_opp)[self._eff_opp_arr()[mine]]
 
     def _spare_units(self) -> List[int]:
         return np.nonzero(self._state != _ACTIVE)[0].tolist()
 
     def _new_power_buf(self, fill: float) -> np.ndarray:
-        return np.full(self.spec.n_units, fill, float)
+        # one reusable buffer: charge() consumes it within the tick and
+        # the thermal step never retains it
+        buf = self._pwbuf
+        if buf is None:
+            buf = self._pwbuf = np.empty(self.spec.n_units, float)
+        buf.fill(fill)
+        return buf
 
 
 def make_unit_pool(spec: ClusterSpec, backend: str = "scalar",

@@ -119,6 +119,11 @@ class Telemetry:
     tenant: str = ""
     unit_energy_j: float = 0.0    # sum of tenant-attributed unit energy
     per_tenant: Dict[str, "Telemetry"] = field(default_factory=dict)
+    # thermal per-tick series (empty unless a thermal model is attached):
+    # hottest die, number of trip-latched units, and fan power per tick
+    max_temp_c: np.ndarray = field(default_factory=lambda: np.zeros(0))
+    throttled_units: np.ndarray = field(default_factory=lambda: np.zeros(0))
+    fan_power_w: np.ndarray = field(default_factory=lambda: np.zeros(0))
 
     # ----- derived ---------------------------------------------------------
     @property

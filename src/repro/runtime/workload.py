@@ -144,14 +144,16 @@ class QueueWorkload:
         )
 
     def step_fast(self, n_active_units: int, dt_s: float = 1.0,
-                  t: float = 0.0) -> "tuple[float, float, int, int]":
+                  t: float = 0.0, perf_scale: float = 1.0
+                  ) -> "tuple[float, float, int, int]":
         """Allocation-light twin of :meth:`step` for hot loops (the
         vectorized fleet engine calls it ~100k times per sweep): the
         same :meth:`_drain_tick` core, but no :class:`StepStats` —
         returns the plain ``(work_done, utilization, queued,
-        concurrency)`` tuple. Completed responses land in the
-        :meth:`drain` channel exactly as with ``step``."""
-        return self._drain_tick(n_active_units, dt_s, t, 1.0)
+        concurrency)`` tuple. ``perf_scale`` is the tenant's mean DVFS
+        perf multiplier, exactly as ``step`` takes it. Completed
+        responses land in the :meth:`drain` channel as with ``step``."""
+        return self._drain_tick(n_active_units, dt_s, t, perf_scale)
 
     def drain(self) -> List[Response]:
         out, self._completed = self._completed, []

@@ -136,16 +136,17 @@ def test_fleet_backend_parity_bitwise(router_cls):
         assert np.array_equal(a.utilization, b.utilization)
 
 
-def test_vector_engine_rejects_unsupported_policies():
+def test_vector_engine_accepts_dvfs_and_hedging_policies():
+    # DVFS + hedging configs used to be scalar-only; they now construct
+    # (and run) on the vector engine
+    from repro.power import sd865_opp_table
     racks = homogeneous_fleet(
         soc_cluster(), 2, 30.0,
-        policy=ScalePolicy(freq_governor=SchedutilGovernor()))
-    with pytest.raises(ValueError, match="scalar"):
-        Fleet(racks, backend="vector")
-    racks = homogeneous_fleet(soc_cluster(), 2, 30.0,
-                              policy=ScalePolicy(hedge_after_s=10.0))
-    with pytest.raises(ValueError, match="scalar"):
-        Fleet(racks, backend="vector")
+        policy=ScalePolicy(freq_governor=SchedutilGovernor(),
+                           hedge_after_s=10.0),
+        opp_table=sd865_opp_table())
+    tel = Fleet(racks, backend="vector", dt_s=60.0).play_trace([600.0] * 4)
+    assert tel.served > 0
     with pytest.raises(ValueError, match="backend"):
         Fleet(homogeneous_fleet(soc_cluster(), 2, 30.0), backend="quantum")
 

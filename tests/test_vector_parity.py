@@ -1,15 +1,19 @@
-"""Scalar <-> vector backend parity: the vectorized pool must reproduce
-the scalar reference **bitwise** — energy integrals (fig7/fig14),
-latency percentiles, and temperature/throttle/fan histograms (fig15) —
-across every simulation path: plain gating, multi-tenant arbitration,
-straggler hedging, DVFS governors, and thermal throttling."""
+"""Scalar <-> vector backend parity: the vectorized pool and fleet
+engines must reproduce the scalar reference **bitwise** — energy
+integrals (fig7/fig14), latency percentiles, and temperature/throttle/
+fan histograms (fig15/fig16) — across every simulation path: plain
+gating, multi-tenant arbitration, straggler hedging, DVFS governors,
+and thermal throttling, at both rack and fleet scale."""
 import numpy as np
 import pytest
 
-from repro.core.cluster import ClusterSpec, UnitSpec, soc_cluster
+from repro.core.cluster import (ClusterSpec, UnitSpec, edge_server_gpu,
+                                soc_cluster)
 from repro.core.scheduler import diurnal_trace
-from repro.power import (FixedFreqGovernor, SchedutilGovernor, ThermalParams,
-                         sd865_opp_table)
+from repro.fleet import Fleet, RackConfig, RoundRobinRouter, homogeneous_fleet
+from repro.power import (FixedFreqGovernor, RaceToIdleGovernor,
+                         SchedutilGovernor, ThermalAwareGovernor,
+                         ThermalParams, opp_table_for_unit, sd865_opp_table)
 from repro.runtime import (ClusterRuntime, MultiTenantRuntime, QueueWorkload,
                            Request, ScalePolicy, Tenant, UnitPool,
                            VectorUnitPool, make_unit_pool)
@@ -232,11 +236,283 @@ def test_step_fast_matches_step():
             a.submit(Request(cost=cost, arrival_s=t))
             b.submit(Request(cost=cost, arrival_s=t))
         n = int(rng.integers(0, 4))
-        s = a.step(n, 1.0, t)
-        used, util, queued, touched = b.step_fast(n, 1.0, t)
+        perf = float(rng.choice([0.5, 1.0, 1.3]))
+        s = a.step(n, 1.0, t, perf_scale=perf)
+        used, util, queued, touched = b.step_fast(n, 1.0, t,
+                                                  perf_scale=perf)
         assert (s.work_done, s.utilization, s.queued, s.concurrency) \
             == (used, util, queued, touched)
         ra, rb = a.drain(), b.drain()
         assert [(r.rid, r.arrival_s, r.finish_s) for r in ra] \
             == [(r.rid, r.arrival_s, r.finish_s) for r in rb]
         t += 1.0
+
+
+# ---------------------------------------------------------------------------
+# VectorUnitPool OPP edge cases.
+# ---------------------------------------------------------------------------
+def _dvfs_pools():
+    spec = tiny_spec(n=10, group=5)
+    mk = lambda b: make_unit_pool(spec, backend=b,  # noqa: E731
+                                  opp_table=sd865_opp_table(),
+                                  thermal=ThermalParams())
+    return spec, mk("scalar"), mk("vector")
+
+
+def test_all_throttled_rack_metered_at_floor_opp():
+    """Every die latched: charge() must meter every active unit at the
+    table's lowest OPP regardless of the requested point, identically
+    in both backends."""
+    spec, ps, pv = _dvfs_pools()
+    table = sd865_opp_table()
+    for p in (ps, pv):
+        p.force_active("a", spec.n_units)
+        p.set_opp("a", table.highest)
+        p.thermal.throttled[:] = [True] * spec.n_units
+    for p in (ps, pv):
+        assert [p.effective_opp(u) for u in range(spec.n_units)] \
+            == [table.lowest] * spec.n_units
+        assert p.perf_scale("a") == \
+            pytest.approx(table[table.lowest].perf_scale)
+    assert ps.perf_scale("a") == pv.perf_scale("a")
+    rs = ps.charge(0.0, 1.0, {"a": 1.0})
+    rv = pv.charge(0.0, 1.0, {"a": 1.0})
+    assert rs == rv
+    # the floor point draws strictly less than the requested top point
+    from repro.power import unit_power
+    w_low = unit_power(spec.unit, 1.0, table[table.lowest])
+    w_top = unit_power(spec.unit, 1.0, table[table.highest])
+    assert w_low < w_top
+    expected_units = spec.n_units * w_low
+    assert rs[1]["a"] == expected_units
+
+
+def test_release_while_waking_under_non_nominal_opp():
+    """Cancelling still-waking units under a non-nominal requested OPP:
+    counts, requested points, and the next charge stay in lockstep."""
+    spec, ps, pv = _dvfs_pools()
+    for p in (ps, pv):
+        p.set_opp("a", 1)                     # non-nominal, pre-wake
+        p.force_active("a", 2)
+        p.wake("a", 5, ready_t=10.0)          # still waking at t=0
+        assert p.waking("a") == 5 and p.active("a") == 2
+        # release 3: waking units are cancelled first
+        assert p.release("a", 3) == 3
+        assert p.waking("a") == 2 and p.active("a") == 2
+    assert list(ps._req_opp) == list(pv._req_opp)
+    assert _snapshot(ps) == _snapshot(pv)
+    rs = ps.charge(0.0, 1.0, {"a": 0.7})
+    rv = pv.charge(0.0, 1.0, {"a": 0.7})
+    assert rs == rv
+    # waking units are owned but draw only the off/idle floor: tenant
+    # power covers exactly the 2 active units at OPP 1
+    from repro.power import unit_power
+    assert rs[1]["a"] == 2 * unit_power(spec.unit, 0.7,
+                                        sd865_opp_table()[1])
+
+
+def test_random_opp_state_lockstep_with_forced_latches():
+    """Randomized OPP churn with latches flipped by hand between ops —
+    the effective-OPP fast paths must agree with the scalar reference
+    even when the latch state did not come from the thermal step."""
+    rng = np.random.default_rng(11)
+    spec, ps, pv = _dvfs_pools()
+    tenants = ("a", "b", "c")
+    t = 0.0
+    for step in range(250):
+        op = rng.integers(0, 7)
+        m = tenants[rng.integers(0, 3)]
+        k = int(rng.integers(0, 5))
+        if op == 0:
+            assert ps.wake(m, k, t + 1.0) == pv.wake(m, k, t + 1.0)
+        elif op == 1:
+            assert ps.release(m, k) == pv.release(m, k)
+        elif op == 2:
+            assert ps.advance(t, 1.0) == pv.advance(t, 1.0)
+        elif op == 3:
+            ps.force_active(m, k)
+            pv.force_active(m, k)
+        elif op == 4:
+            idx = int(rng.integers(0, 5))
+            ps.set_opp(m, idx)
+            pv.set_opp(m, idx)
+        elif op == 5:
+            lat = rng.random(spec.n_units) < 0.3
+            for u in range(spec.n_units):
+                ps.thermal.throttled[u] = bool(lat[u])
+            pv.thermal.throttled[:] = lat
+        else:
+            utils = {m2: float(rng.random()) for m2 in tenants}
+            extra = {m: k % 3}
+            rs = ps.charge(t, 1.0, utils, extra)
+            rv = pv.charge(t, 1.0, utils, extra)
+            assert rs == rv
+        assert [ps.perf_scale(m2) for m2 in tenants] \
+            == [pv.perf_scale(m2) for m2 in tenants]
+        assert _snapshot(ps) == _snapshot(pv), f"diverged at step {step}"
+        t += 1.0
+    assert_pool_hists_equal(ps, pv)
+
+
+# ---------------------------------------------------------------------------
+# fig16-style: fleet engines under DVFS / thermal / hedging.
+# ---------------------------------------------------------------------------
+def assert_fleet_equal(a, b, thermal=False):
+    """Bitwise comparison of the fleet roll-up and per-rack series."""
+    assert a.energy_j == b.energy_j
+    assert np.array_equal(a.power_w, b.power_w)
+    assert np.array_equal(a.active_units, b.active_units)
+    assert np.array_equal(a.queued, b.queued)
+    assert a.served == b.served
+    assert (a.p50_latency_s, a.p95_latency_s, a.p99_latency_s) \
+        == (b.p50_latency_s, b.p95_latency_s, b.p99_latency_s)
+    for ra, rb in zip(a.per_rack, b.per_rack):
+        assert ra.energy_j == rb.energy_j
+        assert ra.unit_energy_j == rb.unit_energy_j
+        assert ra.hedged == rb.hedged
+        assert ra.scale_events == rb.scale_events
+        assert np.array_equal(ra.utilization, rb.utilization)
+        assert np.array_equal(ra.max_temp_c, rb.max_temp_c)
+        assert np.array_equal(ra.throttled_units, rb.throttled_units)
+        assert np.array_equal(ra.fan_power_w, rb.fan_power_w)
+        if thermal:
+            assert len(ra.max_temp_c), "thermal series must be recorded"
+
+
+def _fleet_run(backend, racks, trace, dt_s=60.0):
+    return Fleet(racks, router=RoundRobinRouter(), dt_s=dt_s,
+                 backend=backend).play_trace(trace)
+
+
+def test_fleet_schedutil_bitwise():
+    def racks():
+        return homogeneous_fleet(
+            soc_cluster(), 4, 30.0,
+            policy=ScalePolicy(cooldown_s=300.0,
+                               freq_governor=SchedutilGovernor()),
+            opp_table=sd865_opp_table())
+
+    trace = diurnal_trace(peak_rps=3000.0, hours=3, dt_s=60.0, seed=3)
+    a = _fleet_run("scalar", racks(), trace)
+    b = _fleet_run("vector", racks(), trace)
+    assert_fleet_equal(a, b)
+
+
+def test_fleet_thermal_throttle_bitwise_and_fires():
+    """fig15-style sustained overload on pinned-max racks: the trip
+    latch must fire, and a mixed-in GPU rack (gamma != 1, generic OPP
+    ladder, race-to-idle governor) must match too."""
+    def racks():
+        rs = homogeneous_fleet(
+            soc_cluster(), 3, 30.0,
+            policy=ScalePolicy(min_units=60, cooldown_s=1e9,
+                               freq_governor=FixedFreqGovernor()),
+            opp_table=sd865_opp_table(),
+            thermal=ThermalParams(t_trip_c=70.0, t_release_c=60.0))
+        gpu = edge_server_gpu()
+        rs.append(RackConfig(
+            gpu, 20.0,
+            policy=ScalePolicy(freq_governor=RaceToIdleGovernor()),
+            opp_table=opp_table_for_unit(gpu.unit)))
+        return rs
+
+    trace = np.full(40, 9000.0)
+    a = _fleet_run("scalar", racks(), trace)
+    b = _fleet_run("vector", racks(), trace)
+    assert_fleet_equal(a, b, thermal=False)
+    assert sum(t.throttled_units.sum() for t in b.per_rack
+               if len(t.throttled_units)) > 0, \
+        "scenario must exercise the trip latch"
+
+
+def test_fleet_thermal_aware_clamp_bitwise():
+    def racks():
+        return homogeneous_fleet(
+            soc_cluster(), 3, 30.0,
+            policy=ScalePolicy(
+                hedge_after_s=120.0,
+                freq_governor=ThermalAwareGovernor(SchedutilGovernor())),
+            opp_table=sd865_opp_table(), thermal=ThermalParams())
+
+    trace = diurnal_trace(peak_rps=2500.0, hours=2, dt_s=60.0, seed=5)
+    a = _fleet_run("scalar", racks(), trace)
+    b = _fleet_run("vector", racks(), trace)
+    assert_fleet_equal(a, b, thermal=True)
+    # the clamp holds every rack at or below the sustainable ceiling —
+    # nothing may ever latch
+    assert all(t.throttled_units.max() == 0 for t in b.per_rack)
+
+
+@pytest.mark.parametrize("dvfs", [False, True])
+def test_fleet_hedging_lockstep(dvfs):
+    """An overload burst then silence: the governor scales down, free
+    units appear while the backlog is old, and hedging must fire the
+    same number of times — with bitwise-equal energy — on both
+    engines."""
+    def racks():
+        gov = SchedutilGovernor() if dvfs else None
+        tbl = sd865_opp_table() if dvfs else None
+        return [RackConfig(
+            tiny_spec(n=6, group=3), 2.0,
+            policy=ScalePolicy(headroom=1.0, cooldown_s=0.0,
+                               hedge_after_s=1.5, freq_governor=gov),
+            opp_table=tbl) for _ in range(3)]
+
+    trace = [108.0] * 3 + [0.0] * 60
+    a = _fleet_run("scalar", racks(), trace, dt_s=1.0)
+    b = _fleet_run("vector", racks(), trace, dt_s=1.0)
+    assert_fleet_equal(a, b)
+    hedged = sum(t.hedged for t in b.per_rack)
+    assert hedged > 0, "scenario must exercise the hedging path"
+
+
+def test_fleet_thermal_collapse_with_hedging_bitwise():
+    """The hardest composite: a power-aware router overdrives its
+    favourite racks, schedutil is forced to the top OPP, trip latches
+    collapse throughput, and hedging fires on the backlog — throttling
+    and hedging active in the same ticks. Caught a real one-ulp
+    divergence once: float ``np.add.reduceat`` group sums are not
+    left-to-right, unlike the scalar accumulation loop (the engines now
+    use weighted ``bincount``)."""
+    from repro.fleet import PowerAwareRouter, scale_to_users
+
+    def racks():
+        return homogeneous_fleet(
+            soc_cluster(), 6, 30.0,
+            policy=ScalePolicy(freq_governor=SchedutilGovernor(),
+                               hedge_after_s=300.0),
+            opp_table=sd865_opp_table(), thermal=ThermalParams())
+
+    trace = scale_to_users(
+        diurnal_trace(peak_rps=1.0, hours=3, dt_s=60.0),
+        users=2.4e5, rps_per_user=0.02)
+    a = Fleet(racks(), router=PowerAwareRouter(), dt_s=60.0,
+              backend="scalar").play_trace(trace)
+    b = Fleet(racks(), router=PowerAwareRouter(), dt_s=60.0,
+              backend="vector").play_trace(trace)
+    assert_fleet_equal(a, b)
+    assert sum(t.throttled_units.sum() for t in b.per_rack) > 0, \
+        "scenario must exercise the trip latch"
+    assert sum(t.hedged for t in b.per_rack) > 0, \
+        "scenario must exercise hedging under throttling"
+
+
+def test_fleet_generic_governor_fallback_bitwise():
+    """A governor outside the built-in set takes the per-rack
+    FreqContext fallback path and still matches the scalar engine."""
+    class EveryOther(SchedutilGovernor):
+        """Subclass: deliberately NOT recognized by the stacked pass."""
+        def select(self, ctx):
+            return ctx.table.lowest if int(ctx.demand_rate) % 2 \
+                else ctx.table.highest
+
+    def racks():
+        return homogeneous_fleet(
+            soc_cluster(), 2, 30.0,
+            policy=ScalePolicy(freq_governor=EveryOther()),
+            opp_table=sd865_opp_table())
+
+    trace = diurnal_trace(peak_rps=2000.0, hours=1, dt_s=60.0, seed=9)
+    a = _fleet_run("scalar", racks(), trace)
+    b = _fleet_run("vector", racks(), trace)
+    assert_fleet_equal(a, b)

@@ -343,9 +343,9 @@ def smoke_config(cfg: ModelConfig) -> ModelConfig:
         # Keep at least one of each kind present in the original.
         pattern = tuple(kinds[i % len(kinds)] for i in range(n_layers))
         if MAMBA in kinds and MAMBA not in pattern:
-            pattern = (MAMBA,) + pattern[1:]
+            pattern = (MAMBA, *pattern[1:])
         if ATTN in kinds and ATTN not in pattern:
-            pattern = pattern[:-1] + (ATTN,)
+            pattern = (*pattern[:-1], ATTN)
     return cfg.replace(
         num_layers=n_layers, d_model=d_model, num_heads=n_heads if cfg.num_heads else 0,
         num_kv_heads=n_kv, d_ff=128 if cfg.d_ff else 0, vocab_size=512,

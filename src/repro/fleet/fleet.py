@@ -115,7 +115,7 @@ class _ScalarFleetEngine:
         racks: Sequence[RackConfig],
         dt_s: float,
         idle_units_off: bool,
-    ):
+    ) -> None:
         self.dt_s = dt_s
         self.now = 0.0
         self.rts: List[ClusterRuntime] = []
@@ -141,7 +141,8 @@ class _ScalarFleetEngine:
     def active_units(self) -> np.ndarray:
         return np.array([rt.active_units for rt in self.rts], np.int64)
 
-    def tick(self, assign_rps, dt) -> Tuple[np.ndarray, np.ndarray]:
+    def tick(self, assign_rps: np.ndarray, dt: float
+             ) -> Tuple[np.ndarray, np.ndarray]:
         t = self.now
         for r, rt in enumerate(self.rts):
             work = float(assign_rps[r]) * dt
@@ -178,7 +179,7 @@ class _StackedThermal:
     unchanged — so every rack integrates exactly as its scalar twin.
     """
 
-    def __init__(self, racks: Sequence[RackConfig], t_idx: Sequence[int]):
+    def __init__(self, racks: Sequence[RackConfig], t_idx: Sequence[int]) -> None:
         self.t_idx = np.asarray(t_idx, np.int64)  # fleet rack indices
         nt = len(t_idx)
         specs = [racks[r].spec for r in t_idx]
@@ -289,7 +290,8 @@ class _StackedThermal:
         )
         fan_w = self.fan_pmax * frac
         max_temp = np.maximum.reduceat(self.t_die, self.unit_starts)
-        n_thr = np.add.reduceat(self.latched.astype(np.int64), self.unit_starts)
+        n_thr = np.add.reduceat(  # reprolint: ok[RPL001] int64 counts: integer addition is exact in any order
+            self.latched.astype(np.int64), self.unit_starts)
         return fan_w, max_temp, n_thr
 
 
@@ -328,7 +330,7 @@ class _VectorFleetEngine:
         racks: Sequence[RackConfig],
         dt_s: float,
         idle_units_off: bool,
-    ):
+    ) -> None:
         for rc in racks:
             if rc.thermal is not None and rc.opp_table is None:
                 raise AssertionError(
@@ -513,7 +515,8 @@ class _VectorFleetEngine:
             self.opp = np.where(self._has_ceiling, clamped, self.opp)
 
     # ------------------------------------------------------------------
-    def tick(self, assign_rps, dt) -> Tuple[np.ndarray, np.ndarray]:
+    def tick(self, assign_rps: np.ndarray, dt: float
+             ) -> Tuple[np.ndarray, np.ndarray]:
         t = self.now
         work = assign_rps * dt
         for r in np.nonzero(work > 0)[0]:
@@ -555,7 +558,7 @@ class _VectorFleetEngine:
             ti = self.t_idx
             am = th.local_idx < new_active[ti][th.rack_u]
             lam = (am & th.latched).astype(np.int64)
-            c_low_t = np.add.reduceat(lam, th.unit_starts)
+            c_low_t = np.add.reduceat(lam, th.unit_starts)  # reprolint: ok[RPL001] lam is int64 0/1 flags: integer addition is exact in any order
             c_low_f = c_low_t.astype(float)
             k_t = k_f[ti]
             p0 = self.perf_tab[ti, 0]
@@ -725,7 +728,8 @@ class Fleet:
         dt_s: float = 60.0,
         backend: str = "vector",
         idle_units_off: bool = True,
-    ):
+        sanitize: Optional[bool] = None,
+    ) -> None:
         assert racks, "need at least one rack"
         self.racks = list(racks)
         self.router = router or JoinShortestQueueRouter()
@@ -762,6 +766,10 @@ class Fleet:
         self._queued_rows: List[np.ndarray] = []
         self._wall_s = 0.0
         self._drained = True
+        from repro.runtime.sanitize import (attach_fleet_sanitizer,
+                                            resolve_sanitize)
+        if resolve_sanitize(sanitize):
+            attach_fleet_sanitizer(self)
 
     @property
     def n_racks(self) -> int:
@@ -770,7 +778,7 @@ class Fleet:
     @property
     def capacity_rps(self) -> float:
         """Aggregate peak service rate of the fleet."""
-        return float(self._capacity.sum())
+        return float(self._capacity.sum())  # reprolint: ok[RPL001] roll-up-only fleet metric; never enters the bitwise-compared telemetry
 
     def view(self) -> FleetView:
         return FleetView(
@@ -812,11 +820,11 @@ class Fleet:
                 self._assigned.append(zero)
                 queued, conc = self.engine.tick(zero, dt)
                 self._queued_rows.append(queued)
-                if int(queued.sum()) == 0 and int(conc.sum()) == 0:
+                if int(queued.sum()) == 0 and int(conc.sum()) == 0:  # reprolint: ok[RPL001] zero-test only: sum()==0 iff all elements are 0, order-free
                     break
         if queued is not None:
             self._drained = (
-                int(queued.sum()) == 0 and int(conc.sum()) == 0
+                int(queued.sum()) == 0 and int(conc.sum()) == 0  # reprolint: ok[RPL001] zero-test only: sum()==0 iff all elements are 0, order-free
             )
         self._wall_s += time.perf_counter() - t0
         return self._build_telemetry()

@@ -6,7 +6,7 @@ import argparse
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, ClassVar, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -232,8 +232,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
         class _C:  # minimal CollectiveStats-alike
             wire_bytes = coll_wire
-            counts = {k: coll_scan.counts.get(k, 0) for k in kinds}
-            result_bytes = {}
+            counts: ClassVar[Dict[str, int]] = {
+                k: coll_scan.counts.get(k, 0) for k in kinds}
+            result_bytes: ClassVar[Dict[str, int]] = {}
 
             @property
             def total_wire_bytes(self):

@@ -148,7 +148,7 @@ def stack_specs(cfg: ModelConfig) -> List[Params]:
     for j in range(p):
         spec = layer_specs(cfg, j)
         out.append(jax.tree.map(
-            lambda t: (None,) + tuple(t), spec,
+            lambda t: (None, *t), spec,
             is_leaf=lambda t: isinstance(t, tuple)))
     return out
 
@@ -161,7 +161,7 @@ def stack_caches(cfg: ModelConfig, batch: int, max_len: int, dtype
     for j in range(p):
         c = init_layer_cache(cfg, j, batch, max_len, dtype)
         out.append(jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (nb,) + x.shape), c))
+            lambda x: jnp.broadcast_to(x, (nb, *x.shape)), c))
     return out
 
 
@@ -171,7 +171,7 @@ def stack_cache_specs(cfg: ModelConfig) -> List[Optional[Params]]:
     for j in range(p):
         spec = layer_cache_specs(cfg, j)
         out.append(jax.tree.map(
-            lambda t: (None,) + tuple(t), spec,
+            lambda t: (None, *t), spec,
             is_leaf=lambda t: isinstance(t, tuple)))
     return out
 

@@ -62,7 +62,7 @@ class FixedFreqGovernor:
     """Pin every unit to one OPP (``None`` = the top of the table — the
     cpufreq ``performance`` governor)."""
 
-    def __init__(self, index: Optional[int] = None):
+    def __init__(self, index: Optional[int] = None) -> None:
         self.index = index
 
     def select(self, ctx: FreqContext) -> int:
@@ -88,7 +88,7 @@ class SchedutilGovernor:
     take the cheapest feasible pair. Ties break toward the lower OPP
     (less thermal pressure for the same energy)."""
 
-    def __init__(self, headroom: Optional[float] = None):
+    def __init__(self, headroom: Optional[float] = None) -> None:
         # None: inherit the activation policy's headroom from the context
         self.headroom = headroom
         # per-(table, unit) constants, memoized by identity — the runtime
@@ -130,7 +130,7 @@ class ThermalAwareGovernor:
     thermal model reports, so units never hit the trip latch (flat
     sustained throughput instead of throttle-induced sag)."""
 
-    def __init__(self, inner: Optional[FreqGovernor] = None):
+    def __init__(self, inner: Optional[FreqGovernor] = None) -> None:
         self.inner = inner or FixedFreqGovernor()
 
     def select(self, ctx: FreqContext) -> int:

@@ -26,7 +26,7 @@ strictly additive by default.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Iterator, Optional, Sequence, Tuple
 
 from repro.core.cluster import UnitSpec
 
@@ -69,7 +69,7 @@ class OPPTable:
     def __getitem__(self, i: int) -> OperatingPoint:
         return self.points[i]
 
-    def __iter__(self):
+    def __iter__(self) -> Iterator[OperatingPoint]:
         return iter(self.points)
 
     @property

@@ -61,7 +61,7 @@ class ThermalModel:
     """Per-unit die and per-group PCB temperatures over a cluster."""
 
     def __init__(self, spec: ClusterSpec,
-                 params: Optional[ThermalParams] = None):
+                 params: Optional[ThermalParams] = None) -> None:
         self.spec = spec
         self.params = params or ThermalParams()
         p = self.params
@@ -167,7 +167,7 @@ class VectorThermalModel(ThermalModel):
     """
 
     def __init__(self, spec: ClusterSpec,
-                 params: Optional[ThermalParams] = None):
+                 params: Optional[ThermalParams] = None) -> None:
         super().__init__(spec, params)
         self.t_die = np.asarray(self.t_die, float)
         self.t_pcb = np.asarray(self.t_pcb, float)

@@ -35,6 +35,10 @@ from repro.runtime.pool import (UnitPool, UnitState, VectorUnitPool,
                                 make_unit_pool)
 from repro.runtime.result import (Request, Response, StepStats, Telemetry,
                                   latency_percentiles)
+from repro.runtime.sanitize import (FleetSanitizer, InvariantViolation,
+                                    PoolSanitizer, attach_fleet_sanitizer,
+                                    attach_pool_sanitizer, check_pool,
+                                    sanitizer_enabled)
 from repro.runtime.workload import (DLServingWorkload, LMServingWorkload,
                                     QueueWorkload, TranscodingWorkload,
                                     Workload)
@@ -47,4 +51,7 @@ __all__ = [
     "latency_percentiles",
     "Workload", "QueueWorkload", "DLServingWorkload", "LMServingWorkload",
     "TranscodingWorkload",
+    "InvariantViolation", "PoolSanitizer", "FleetSanitizer",
+    "attach_pool_sanitizer", "attach_fleet_sanitizer", "check_pool",
+    "sanitizer_enabled",
 ]

@@ -55,7 +55,7 @@ class ClusterRuntime(MultiTenantRuntime):
                  model_wake_latency: bool = False, group_units: int = 1,
                  opp_table: Optional[OPPTable] = None,
                  thermal: Union[ThermalParams, ThermalModel, None] = None,
-                 backend: str = "scalar"):
+                 backend: str = "scalar") -> None:
         # model_wake_latency matters only for sub-tick resolution
         # (wake_latency_s > dt_s); see UnitGovernor.apply_target.
         if unit_rate is None:

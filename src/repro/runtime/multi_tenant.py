@@ -142,7 +142,7 @@ class MultiTenantRuntime:
                  model_wake_latency: bool = False,
                  opp_table: Optional[OPPTable] = None,
                  thermal: Union[ThermalParams, ThermalModel, None] = None,
-                 backend: str = "scalar"):
+                 backend: str = "scalar") -> None:
         assert tenants, "need at least one tenant"
         names = [t.name for t in tenants]
         assert len(set(names)) == len(names), f"duplicate tenant names: {names}"

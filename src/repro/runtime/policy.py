@@ -66,7 +66,7 @@ class UnitGovernor:
                  window_s: float = 10.0, idle_units_off: bool = True,
                  model_wake_latency: bool = False, group_units: int = 1,
                  pool: Optional[UnitPool] = None, tenant: str = "default",
-                 backend: str = "scalar"):
+                 backend: str = "scalar") -> None:
         assert unit_rate > 0, "unit_rate must be positive"
         self.spec = spec
         self.unit_rate = unit_rate

@@ -41,7 +41,7 @@ power/active histories, temperature and throttle histograms — is
 from __future__ import annotations
 
 from enum import Enum
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -111,7 +111,7 @@ class UnitPool:
 
     def __init__(self, spec: ClusterSpec, idle_units_off: bool = True,
                  opp_table: Optional[OPPTable] = None,
-                 thermal: Union[ThermalParams, ThermalModel, None] = None):
+                 thermal: Union[ThermalParams, ThermalModel, None] = None) -> None:
         if isinstance(thermal, ThermalParams):
             thermal = ThermalModel(spec, thermal)
         self._init_common(spec, idle_units_off, opp_table, thermal)
@@ -345,7 +345,8 @@ class UnitPool:
             counts[self.effective_opp(u)] += 1
         return counts
 
-    def _scatter_unit_power(self, buf, mine: Sequence[int],
+    def _scatter_unit_power(self, buf: Union[List[float], np.ndarray],
+                            mine: Sequence[int],
                             pw_per_opp: Sequence[float]) -> None:
         for u in mine:
             buf[u] = pw_per_opp[self.effective_opp(u)]
@@ -356,7 +357,7 @@ class UnitPool:
         return [u for u in range(self.spec.n_units)
                 if self.state[u] is not UnitState.ACTIVE]
 
-    def _new_power_buf(self, fill: float):
+    def _new_power_buf(self, fill: float) -> Union[List[float], np.ndarray]:
         return [fill] * self.spec.n_units
 
     # -- accounting --------------------------------------------------------
@@ -478,7 +479,7 @@ class VectorUnitPool(UnitPool):
 
     def __init__(self, spec: ClusterSpec, idle_units_off: bool = True,
                  opp_table: Optional[OPPTable] = None,
-                 thermal: Union[ThermalParams, ThermalModel, None] = None):
+                 thermal: Union[ThermalParams, ThermalModel, None] = None) -> None:
         if isinstance(thermal, ThermalParams):
             thermal = VectorThermalModel(spec, thermal)
         elif isinstance(thermal, ThermalModel) \
@@ -524,18 +525,18 @@ class VectorUnitPool(UnitPool):
     # Tuples, not lists: code written against the scalar backend's mutable
     # attributes (pool.state[u] = ...) must fail fast here rather than
     # silently mutating a materialized temporary.
-    @property
+    @property  # type: ignore[override]  # read-only view of the base's list
     def state(self) -> Tuple[UnitState, ...]:
         """Read-only scalar-compatible view (tests/debugging); mutate
         through wake/release/advance/force_active instead."""
         return tuple(_STATE_ENUM[c] for c in self._state)
 
-    @property
+    @property  # type: ignore[override]  # read-only view of the base's list
     def owner(self) -> Tuple[Optional[str], ...]:
         return tuple(self._tenant_names[o] if o >= 0 else None
                      for o in self._owner)
 
-    @property
+    @property  # type: ignore[override]  # read-only view of the base's list
     def _req_opp(self) -> Tuple[int, ...]:
         return tuple(int(r) for r in self._req)
 
@@ -696,7 +697,7 @@ class VectorUnitPool(UnitPool):
             _, act_g = self._group_counts_of(tid)
             key = act_g[self._group_idx[aidx]] * (self.spec.n_units + 1) \
                 + (self.spec.n_units - aidx)
-            order = np.argsort(key)
+            order = np.argsort(key)  # reprolint: ok[RPL005] integer composite key, one per unit (see comment above): keys are unique, so sort stability is irrelevant
             take = aidx[order[:k - released]]
             self._state[take] = _OFF
             self._owner[take] = -1
@@ -773,7 +774,7 @@ class VectorUnitPool(UnitPool):
         model (tests may set latches by hand)."""
         return self.thermal is None or not self.thermal.throttled.any()
 
-    def _active_units_of(self, tenant: str) -> np.ndarray:
+    def _active_units_of(self, tenant: str) -> np.ndarray:  # type: ignore[override]
         tid = self._tenant_ids.get(tenant)
         if tid is None:
             return np.empty(0, np.int64)
@@ -798,7 +799,7 @@ class VectorUnitPool(UnitPool):
         return _perf_from_opp_counts(
             self.opp_table, self._opp_counts(self._active_units_of(tenant)))
 
-    def _opp_counts(self, mine) -> List[int]:
+    def _opp_counts(self, mine: np.ndarray) -> List[int]:  # type: ignore[override]
         counts = [0] * len(self.opp_table)
         if len(mine) == 0:
             return counts
@@ -808,7 +809,9 @@ class VectorUnitPool(UnitPool):
         eff = self._eff_opp_arr()[mine]
         return np.bincount(eff, minlength=len(self.opp_table)).tolist()
 
-    def _scatter_unit_power(self, buf, mine, pw_per_opp) -> None:
+    def _scatter_unit_power(self, buf: np.ndarray,  # type: ignore[override]
+                            mine: np.ndarray,
+                            pw_per_opp: Sequence[float]) -> None:
         if len(mine) == 0:
             return
         if self._latch_free():
@@ -830,12 +833,22 @@ class VectorUnitPool(UnitPool):
 
 
 def make_unit_pool(spec: ClusterSpec, backend: str = "scalar",
-                   **kwargs) -> UnitPool:
+                   sanitize: Optional[bool] = None,
+                   **kwargs: Any) -> UnitPool:
     """Construct a pool backend: ``"scalar"`` (reference, per-unit
-    loops) or ``"vector"`` (numpy arrays, bitwise-identical telemetry)."""
+    loops) or ``"vector"`` (numpy arrays, bitwise-identical telemetry).
+
+    ``sanitize=True`` (or ``REPRO_SANITIZE=1`` with ``sanitize=None``)
+    arms the pool with :mod:`repro.runtime.sanitize` invariant checks
+    on every mutating call."""
     if backend == "scalar":
-        return UnitPool(spec, **kwargs)
-    if backend == "vector":
-        return VectorUnitPool(spec, **kwargs)
-    raise ValueError(
-        f"unknown pool backend {backend!r}; use 'scalar' or 'vector'")
+        pool: UnitPool = UnitPool(spec, **kwargs)
+    elif backend == "vector":
+        pool = VectorUnitPool(spec, **kwargs)
+    else:
+        raise ValueError(
+            f"unknown pool backend {backend!r}; use 'scalar' or 'vector'")
+    from repro.runtime.sanitize import attach_pool_sanitizer, resolve_sanitize
+    if resolve_sanitize(sanitize):
+        attach_pool_sanitizer(pool)
+    return pool

@@ -71,7 +71,7 @@ class QueueWorkload:
     """
 
     def __init__(self, unit_rate: float, name: str = "queue",
-                 kind: str = "fluid"):
+                 kind: str = "fluid") -> None:
         assert unit_rate > 0, "unit_rate must be positive"
         self.unit_rate = unit_rate
         self.name = name
@@ -189,7 +189,7 @@ class DLServingWorkload(QueueWorkload):
 
     def __init__(self, unit_rate: float, model: str = "custom",
                  precision: str = "fp32", platform: str = "custom",
-                 unit_power_w: Optional[float] = None):
+                 unit_power_w: Optional[float] = None) -> None:
         super().__init__(unit_rate, name=f"dlserving/{model}",
                          kind="dl-serving")
         self.model = model
@@ -224,7 +224,7 @@ class TranscodingWorkload(QueueWorkload):
     """
 
     def __init__(self, video: Any = None, hw_codec: bool = False,
-                 streams_per_unit: Optional[float] = None):
+                 streams_per_unit: Optional[float] = None) -> None:
         if streams_per_unit is None:
             assert video is not None, "need a Video or streams_per_unit"
             streams_per_unit = (video.soc_hw_streams if hw_codec
@@ -262,7 +262,7 @@ class LMServingWorkload:
     """
 
     def __init__(self, engine: Any, slots: int, slots_per_unit: int = 1,
-                 max_new_tokens: int = 16):
+                 max_new_tokens: int = 16) -> None:
         from repro.serving.batcher import ContinuousBatcher
         self.engine = engine
         self.batcher = ContinuousBatcher(engine, slots=slots)

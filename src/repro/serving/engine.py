@@ -96,7 +96,7 @@ class ServingEngine:
         logits, caches = self.prefill_fn(self.params, batch)
         out = []
         pos = s
-        for i in range(max_new_tokens):
+        for _ in range(max_new_tokens):
             if greedy:
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             else:

@@ -121,14 +121,14 @@ def opt_state_specs(param_specs: Params, cfg: TrainConfig) -> OptState:
     def leaf_m(spec):
         t = tuple(spec)
         if cfg.opt_state_dtype == "int8":
-            return QTensor(q=t, scale=t[:-1] + (None,))
+            return QTensor(q=t, scale=(*t[:-1], None))
         return t
 
     def leaf_v(spec):
         t = tuple(spec)
         if cfg.opt_state_dtype == "int8":
-            return QTensorLog(q=t, log_min=t[:-1] + (None,),
-                              log_scale=t[:-1] + (None,))
+            return QTensorLog(q=t, log_min=(*t[:-1], None),
+                              log_scale=(*t[:-1], None))
         return t
 
     is_t = lambda t: isinstance(t, tuple)

@@ -1,0 +1,3 @@
+# Known-bad / known-good fixture corpus for tools/reprolint.
+# These modules are linted as *text* by tests/test_reprolint.py — they
+# are never imported or executed, and several are deliberately wrong.

@@ -1,0 +1,30 @@
+# reprolint: parity-critical
+"""Known-bad: unordered float reductions RPL001 must flag.
+
+``pr5_group_power`` reconstructs the exact shape of the PR 5 one-ulp
+parity bug: per-unit power flows grouped into racks with a float
+``np.add.reduceat``, whose segment-tree reduction order differs from
+the scalar engine's left-to-right loop.
+"""
+import numpy as np
+
+
+def pr5_group_power(flows: np.ndarray, group_starts: np.ndarray) -> np.ndarray:
+    # the PR 5 bug: float segment sum via reduceat (order unspecified)
+    return np.add.reduceat(flows, group_starts)
+
+
+def total_power(per_unit_w: np.ndarray) -> float:
+    return float(np.sum(per_unit_w))
+
+
+def mean_latency(lat_s: np.ndarray) -> float:
+    return float(lat_s.mean())
+
+
+def energy_dot(power_w: np.ndarray, dt_s: np.ndarray) -> float:
+    return float(np.dot(power_w, dt_s))
+
+
+def method_sum(served_cost: np.ndarray) -> float:
+    return float(served_cost.sum())

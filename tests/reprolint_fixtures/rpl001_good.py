@@ -1,0 +1,36 @@
+# reprolint: parity-critical
+"""Known-good: the order-pinned reduction idioms RPL001 allows.
+
+``pr5_group_power_fixed`` is the shape of the actual PR 5 fix — a
+weighted ``np.bincount`` group sum, which accumulates strictly in input
+order, matching the scalar engine's per-unit loop bit for bit.
+"""
+import math
+
+import numpy as np
+
+
+def pr5_group_power_fixed(flows: np.ndarray, group_idx: np.ndarray,
+                          n_groups: int) -> np.ndarray:
+    # the PR 5 fix: weighted bincount adds in input order
+    return np.bincount(group_idx, weights=flows, minlength=n_groups)
+
+
+def total_power(per_unit_w: np.ndarray) -> float:
+    # builtin sum() is strictly left-to-right
+    return sum(float(w) for w in per_unit_w)
+
+
+def total_power_fsum(per_unit_w: np.ndarray) -> float:
+    return math.fsum(float(w) for w in per_unit_w)
+
+
+def total_power_loop(per_unit_w: np.ndarray) -> float:
+    acc = 0.0
+    for w in per_unit_w:
+        acc += float(w)
+    return acc
+
+
+def waived_rollup(power_w: np.ndarray) -> float:
+    return float(power_w.sum())  # reprolint: ok[RPL001] roll-up-only fixture metric, not on the parity surface

@@ -1,0 +1,15 @@
+# reprolint: parity-critical
+"""Known-bad: pool count caches mutated outside their owning class."""
+
+
+def steal_unit(pool, tid: int) -> None:
+    # foreign writer corrupts the exact integer caches
+    pool._n_alloc += 1
+    pool._n_active_of[tid] = pool._n_active_of.get(tid, 0) + 1
+    pool._free_g[0] -= 1
+
+
+class Autoscaler:
+    def scale_down(self, pool) -> None:
+        pool._n_waking_total = 0
+        pool._active_idx.pop(3)

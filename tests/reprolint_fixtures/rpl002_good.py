@@ -1,0 +1,24 @@
+# reprolint: parity-critical
+"""Known-good: caches mutated only inside the owning pool class, and
+foreign code going through the pool's public methods."""
+import numpy as np
+
+
+class VectorUnitPool:
+    def __init__(self, n_units: int, n_groups: int) -> None:
+        self._n_alloc = 0
+        self._n_waking_total = 0
+        self._n_active_of = {}
+        self._free_g = np.zeros(n_groups, dtype=np.int64)
+
+    def wake(self, tid: int, k: int) -> None:
+        # the owner may maintain its own caches
+        self._n_alloc += k
+        self._n_waking_total += k
+        self._n_active_of[tid] = self._n_active_of.get(tid, 0)
+        self._free_g[0] -= k
+
+
+def scale_up(pool, tid: int, k: int) -> None:
+    # foreign code drives the pool through its methods
+    pool.wake(tid, k)

@@ -1,0 +1,15 @@
+# reprolint: parity-critical
+"""Known-bad: responses delivered outside the drain() channel."""
+
+
+def tick(rt, fake_response) -> None:
+    # second delivery path double-counts completions
+    rt.telemetry.responses.append(fake_response)
+
+
+def merge(rt, extra_responses) -> None:
+    rt.telemetry.responses.extend(extra_responses)
+
+
+def rebind(rt, stale) -> None:
+    rt.telemetry.responses = stale

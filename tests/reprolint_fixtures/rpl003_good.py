@@ -1,0 +1,18 @@
+# reprolint: parity-critical
+"""Known-good: responses flow only through Workload.drain()."""
+
+
+def tick(rt) -> None:
+    rt.telemetry.responses.extend(rt.workload.drain())
+
+
+def reset(rt) -> None:
+    # resetting to empty is allowed
+    rt.telemetry.responses = []
+
+
+def local_buffer(workload) -> list:
+    # a *local* name `responses` is not the telemetry channel
+    responses = []
+    responses.append("not-a-telemetry-write")
+    return responses

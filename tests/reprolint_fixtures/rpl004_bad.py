@@ -1,0 +1,22 @@
+"""Known-bad: unseeded randomness (RPL004 applies everywhere, not just
+in parity-critical modules)."""
+import random
+
+import numpy as np
+
+
+def jitter() -> float:
+    return random.random()
+
+
+def pick(items):
+    random.shuffle(items)
+    return items[0]
+
+
+def legacy_draws(n: int) -> np.ndarray:
+    return np.random.rand(n)
+
+
+def unseeded_ctor():
+    return np.random.default_rng()

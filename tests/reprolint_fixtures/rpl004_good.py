@@ -1,0 +1,21 @@
+"""Known-good: seeded generators threaded explicitly."""
+import random
+
+import numpy as np
+
+
+def jitter(rng: np.random.Generator) -> float:
+    return float(rng.random())
+
+
+def make_rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def make_stdlib_rng(seed: int) -> random.Random:
+    return random.Random(seed)
+
+
+def pick(items, rng: random.Random):
+    rng.shuffle(items)
+    return items[0]

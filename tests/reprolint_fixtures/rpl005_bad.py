@@ -1,0 +1,22 @@
+# reprolint: selection
+"""Known-bad: float-keyed selection without a pinned tie-break."""
+import numpy as np
+
+
+def pick_cheapest_rack(power_w: np.ndarray) -> int:
+    # position-only tie-break: a one-ulp key change can flip the winner
+    return int(np.argmin(power_w))
+
+
+def rank_racks(j_per_req: np.ndarray) -> np.ndarray:
+    # unstable sort over float keys
+    return np.argsort(j_per_req)
+
+
+def select_opp(power_w: float, best_power: float) -> bool:
+    # exact float equality in a selection predicate
+    return power_w == best_power
+
+
+def is_tied(a: float, b: float) -> bool:
+    return a / b == 1.0

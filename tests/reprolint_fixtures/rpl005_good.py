@@ -1,0 +1,18 @@
+# reprolint: selection
+"""Known-good: selections with pinned tie-breaks."""
+import numpy as np
+
+
+def pick_cheapest_rack(power_w: np.ndarray) -> int:
+    # composite integer key pins the tie-break to the lowest index
+    order = np.argsort(power_w, kind="stable")
+    return int(order[0])
+
+
+def rank_racks(j_per_req: np.ndarray) -> np.ndarray:
+    return np.argsort(j_per_req, kind="stable")
+
+
+def better_opp(power_w: float, best_power: float) -> bool:
+    # epsilon margin: a one-ulp difference cannot flip the choice
+    return power_w < best_power - 1e-12

@@ -46,7 +46,7 @@ def test_health_tracker_detects_failures_and_stragglers():
     clock = lambda: t[0]
     h = HealthTracker(range(4), timeout_s=20.0, straggler_factor=2.0,
                       clock=clock)
-    for step in range(8):
+    for _step in range(8):
         t[0] += 1.0
         for u in range(3):
             h.heartbeat(u, step_time=1.0 if u != 2 else 5.0)

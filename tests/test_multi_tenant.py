@@ -308,7 +308,7 @@ def test_contention_respects_weights_and_floors():
         Tenant("light", mk("light"), weight=1.0,
                policy=ScalePolicy(min_units=2, cooldown_s=0.0)),
     ], dt_s=1.0)
-    for t in range(30):
+    for _t in range(30):
         rt.submit("heavy", cost=40.0, count=40.0)
         rt.submit("light", cost=40.0, count=40.0)
         stats = rt.tick_all()

@@ -50,7 +50,7 @@ def test_int8_state_tracks_fp32_trajectory():
     s8 = init_opt_state(params8, cfg8)
     assert isinstance(s8.m["w"], QTensor)
     assert isinstance(s8.v["w"], QTensorLog)
-    for step in range(20):
+    for _step in range(20):
         g = {"w": jnp.asarray(rng.standard_normal((32, 64)) * 0.05,
                               jnp.float32)}
         params32, s32, _ = adamw_update(g, s32, params32, cfg32)

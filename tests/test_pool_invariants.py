@@ -1,0 +1,73 @@
+"""Property test: randomized UnitPool op sequences with the sanitizer
+armed — the vector backend's count caches must match the bincount
+ground truth after every operation, and the two backends must agree on
+every count query throughout.
+
+Requires hypothesis (installed in CI via requirements-dev.txt); skipped
+where unavailable.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.cluster import soc_cluster  # noqa: E402
+from repro.power.opp import sd865_opp_table  # noqa: E402
+from repro.runtime import make_unit_pool  # noqa: E402
+from repro.runtime.sanitize import check_pool  # noqa: E402
+
+TENANTS = ("a", "b", "c")
+
+# one pool operation: (op name, tenant, k/opp argument)
+_op = st.tuples(
+    st.sampled_from(("wake", "release", "advance", "force_active",
+                     "charge", "set_opp")),
+    st.sampled_from(TENANTS),
+    st.integers(min_value=0, max_value=12),
+)
+
+
+def _apply(pool, t, op, tenant, k):
+    if op == "wake":
+        pool.wake(tenant, k, ready_t=t + 1.0)
+    elif op == "release":
+        pool.release(tenant, k)
+    elif op == "advance":
+        pool.advance(t, 1.0)
+    elif op == "force_active":
+        pool.force_active(tenant, k)
+    elif op == "charge":
+        pool.charge(t, 1.0, {m: (k % 11) / 10.0 for m in TENANTS})
+    elif op == "set_opp":
+        pool.set_opp(tenant, k)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(_op, min_size=1, max_size=40),
+       dvfs=st.booleans())
+def test_random_op_sequences_keep_caches_exact(ops, dvfs):
+    kwargs = dict(opp_table=sd865_opp_table()) if dvfs else {}
+    # sanitize=True re-validates the whole pool after every mutating
+    # call — any cache drifting from its bincount ground truth raises
+    # InvariantViolation right at the op that broke it
+    scalar = make_unit_pool(soc_cluster(), backend="scalar",
+                            sanitize=True, **kwargs)
+    vector = make_unit_pool(soc_cluster(), backend="vector",
+                            sanitize=True, **kwargs)
+    for i, (op, tenant, k) in enumerate(ops):
+        t = float(i)
+        _apply(scalar, t, op, tenant, k)
+        _apply(vector, t, op, tenant, k)
+        # twin engines must agree on every count query
+        for m in TENANTS:
+            assert scalar.active(m) == vector.active(m), (i, op, m)
+            assert scalar.waking(m) == vector.waking(m), (i, op, m)
+            assert scalar.owned(m) == vector.owned(m), (i, op, m)
+            assert scalar.units_of(m) == vector.units_of(m), (i, op, m)
+        assert scalar.n_allocated() == vector.n_allocated()
+        assert scalar.n_active() == vector.n_active()
+        assert scalar.free_units() == vector.free_units()
+    # and a final standalone deep check of both pools
+    check_pool(scalar)
+    check_pool(vector)
+    assert scalar.energy_j == vector.energy_j

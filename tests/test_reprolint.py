@@ -1,0 +1,147 @@
+"""reprolint: every RPL rule fires on its known-bad fixture, stays
+quiet on the known-good twin, and the real tree lints clean."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOOLS = os.path.join(REPO, "tools")
+SRC = os.path.join(REPO, "src")
+FIXTURES = os.path.join(REPO, "tests", "reprolint_fixtures")
+
+sys.path.insert(0, TOOLS)
+
+from reprolint import RULES, lint_paths, lint_source  # noqa: E402
+from reprolint.engine import parse_waivers  # noqa: E402
+
+RULE_CODES = ("RPL001", "RPL002", "RPL003", "RPL004", "RPL005")
+
+
+def lint_fixture(name: str):
+    return lint_paths([os.path.join(FIXTURES, name)])
+
+
+# ---------------------------------------------------------------------------
+# fixture corpus: bad fires, good passes
+
+
+@pytest.mark.parametrize("rule", RULE_CODES)
+def test_rule_fires_on_bad_fixture(rule):
+    findings = lint_fixture(f"{rule.lower()}_bad.py")
+    assert findings, f"{rule} found nothing in its known-bad fixture"
+    assert {f.rule for f in findings} == {rule}
+
+
+@pytest.mark.parametrize("rule", RULE_CODES)
+def test_rule_passes_good_fixture(rule):
+    findings = lint_fixture(f"{rule.lower()}_good.py")
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_pr5_reduceat_bug_reconstruction_flagged():
+    """The PR 5 one-ulp parity bug — a float ``np.add.reduceat`` group
+    sum — must be flagged by RPL001, and its bincount fix must pass."""
+    bad = lint_fixture("rpl001_bad.py")
+    reduceat = [f for f in bad if "reduceat" in f.message]
+    assert reduceat, "float add.reduceat not flagged"
+    assert all(f.rule == "RPL001" for f in reduceat)
+    good = lint_fixture("rpl001_good.py")
+    assert good == [], [f.format() for f in good]
+
+
+# ---------------------------------------------------------------------------
+# waiver semantics
+
+
+PARITY_SNIPPET = """\
+# reprolint: parity-critical
+import numpy as np
+
+def total(x):
+    return float(np.sum(x)){waiver}
+"""
+
+
+def test_waiver_with_rationale_suppresses():
+    src = PARITY_SNIPPET.format(
+        waiver="  # reprolint: ok[RPL001] int64 input: exact")
+    assert lint_source(src) == []
+
+
+def test_waiver_without_rationale_is_rpl000():
+    src = PARITY_SNIPPET.format(waiver="  # reprolint: ok[RPL001]")
+    rules = sorted(f.rule for f in lint_source(src))
+    # the bare waiver does NOT suppress, and is itself reported
+    assert rules == ["RPL000", "RPL001"]
+
+
+def test_waiver_wrong_rule_does_not_suppress():
+    src = PARITY_SNIPPET.format(
+        waiver="  # reprolint: ok[RPL005] wrong rule entirely")
+    assert [f.rule for f in lint_source(src)] == ["RPL001"]
+
+
+def test_waiver_on_multiline_call():
+    src = (
+        "# reprolint: parity-critical\n"
+        "import numpy as np\n"
+        "def f(a, b):\n"
+        "    return np.dot(\n"
+        "        a, b)  # reprolint: ok[RPL001] test: waiver on last line\n"
+    )
+    assert lint_source(src) == []
+
+
+def test_parse_waivers_multiple_rules():
+    ws = parse_waivers(
+        "x = 1  # reprolint: ok[RPL001, RPL005] both are fine here\n")
+    assert len(ws) == 1
+    assert ws[0].rules == ("RPL001", "RPL005")
+    assert ws[0].rationale
+
+
+def test_scoping_rules_silent_outside_scope():
+    # no parity marker, not a parity-critical path: RPL001 stays quiet,
+    # RPL004 (global) still fires
+    src = ("import numpy as np\n"
+           "import random\n"
+           "def f(x):\n"
+           "    return np.sum(x) + random.random()\n")
+    assert [f.rule for f in lint_source(src)] == ["RPL004"]
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+
+
+def test_src_tree_lints_clean():
+    findings = lint_paths([SRC])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_cli_module_runs_clean_on_src():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = TOOLS + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "reprolint", SRC],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=120)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "clean" in r.stdout
+
+
+def test_cli_exit_code_on_findings():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = TOOLS + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "reprolint",
+         os.path.join(FIXTURES, "rpl001_bad.py")],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=120)
+    assert r.returncode == 1
+    assert "RPL001" in r.stdout
+
+
+def test_rule_catalogue_documents_every_code():
+    for code in ("RPL000", *RULE_CODES):
+        assert code in RULES and RULES[code]

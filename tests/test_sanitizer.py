@@ -1,0 +1,215 @@
+"""Runtime invariant sanitizer: clean runs pass untouched, injected
+corruption is caught at the mutating call, and the overhead on a
+small-config run stays within the tier-1 budget."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import soc_cluster
+from repro.fleet.fleet import Fleet, homogeneous_fleet
+from repro.power.opp import sd865_opp_table
+from repro.power.thermal import ThermalParams
+from repro.runtime import make_unit_pool
+from repro.runtime.sanitize import (InvariantViolation, attach_fleet_sanitizer,
+                                    attach_pool_sanitizer, check_pool,
+                                    resolve_sanitize, sanitizer_enabled)
+from repro.runtime.pool import _ACTIVE, _WAKING
+
+BACKENDS = ("scalar", "vector")
+TRACE = [50.0, 150.0, 90.0, 0.0, 220.0, 10.0]
+
+
+def small_pool(backend, thermal=False):
+    kwargs = {}
+    if thermal:
+        kwargs = dict(opp_table=sd865_opp_table(),
+                      thermal=ThermalParams())
+    return make_unit_pool(soc_cluster(), backend=backend, sanitize=True,
+                          **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# clean runs pass
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_clean_pool_ops_pass(backend):
+    pool = small_pool(backend)
+    assert pool.wake("a", 5, ready_t=1.0) == 5
+    assert pool.advance(2.0, 1.0) == 5
+    pool.charge(0.0, 1.0, {"a": 0.7})
+    assert pool.release("a", 2) == 2
+    pool.force_active("a", 6)
+    pool.force_active("a", 1)
+    assert pool.active("a") == 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_clean_dvfs_thermal_run_passes(backend):
+    pool = small_pool(backend, thermal=True)
+    pool.set_opp("a", 99)  # clamped into range
+    pool.force_active("a", 8)
+    for k in range(20):
+        pool.charge(float(k), 1.0, {"a": 1.0})
+    assert pool.energy_j > 0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_clean_fleet_run_passes_and_keeps_parity(backend):
+    racks = homogeneous_fleet(soc_cluster(), 3, unit_rate=10.0)
+    plain = Fleet(racks, dt_s=1.0, backend=backend,
+                  sanitize=False).play_trace(TRACE)
+    armed = Fleet(racks, dt_s=1.0, backend=backend,
+                  sanitize=True).play_trace(TRACE)
+    assert armed.energy_j == plain.energy_j
+    assert armed.served == plain.served
+
+
+def test_env_var_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitizer_enabled()
+    assert resolve_sanitize(None) is False
+    assert resolve_sanitize(True) is True
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitizer_enabled()
+    assert resolve_sanitize(None) is True
+    assert resolve_sanitize(False) is False
+    pool = make_unit_pool(soc_cluster(), backend="vector")
+    assert hasattr(pool, "_sanitizer")
+
+
+# ---------------------------------------------------------------------------
+# injected corruption is caught
+
+
+def test_count_cache_corruption_caught():
+    pool = small_pool("vector")
+    pool.wake("a", 4, ready_t=0.0)
+    pool.advance(1.0, 1.0)
+    pool._n_alloc += 1  # deliberate corruption of the exact cache
+    with pytest.raises(InvariantViolation, match="_n_alloc"):
+        pool.wake("b", 1, ready_t=2.0)
+
+
+def test_per_tenant_cache_corruption_caught():
+    pool = small_pool("vector")
+    pool.force_active("a", 3)
+    tid = pool._tenant_ids["a"]
+    pool._n_active_of[tid] -= 1
+    with pytest.raises(InvariantViolation, match="_n_active_of"):
+        pool.charge(0.0, 1.0, {"a": 0.5})
+
+
+def test_group_cache_corruption_caught():
+    pool = small_pool("vector")
+    pool.force_active("a", 3)
+    pool._free_g[0] += 2
+    with pytest.raises(InvariantViolation, match="_free_g"):
+        pool.release("a", 1)
+
+
+def test_stale_active_idx_cache_caught():
+    pool = small_pool("vector")
+    pool.force_active("a", 3)
+    tid = pool._tenant_ids["a"]
+    pool._active_units_of("a")  # populate the cache
+    pool._active_idx[tid] = pool._active_idx[tid][:-1]  # stale copy
+    with pytest.raises(InvariantViolation, match="_active_idx"):
+        pool.charge(0.0, 1.0, {"a": 0.5})
+
+
+def test_illegal_transition_active_to_waking_caught():
+    from repro.runtime.sanitize import _owner_ids, _state_codes
+    pool = small_pool("vector")
+    pool.force_active("a", 2)
+    prev_state, prev_owner = _state_codes(pool), _owner_ids(pool)
+    u = int(np.nonzero(pool._state == _ACTIVE)[0][0])
+    pool._state[u] = _WAKING  # a transition no legal op can make
+    with pytest.raises(InvariantViolation, match="illegal state transition"):
+        check_pool(pool, prev_state, prev_owner)
+
+
+def test_owner_change_without_off_caught():
+    from repro.runtime.sanitize import _owner_ids, _state_codes
+    pool = small_pool("vector")
+    pool.force_active("a", 2)
+    pool.force_active("b", 2)
+    prev_state, prev_owner = _state_codes(pool), _owner_ids(pool)
+    ua = int(np.nonzero(pool._owner == pool._tenant_ids["a"])[0][0])
+    pool._owner[ua] = pool._tenant_ids["b"]  # steal while active
+    with pytest.raises(InvariantViolation, match="owner changed"):
+        check_pool(pool, prev_state, prev_owner)
+
+
+def test_scalar_state_owner_inconsistency_caught():
+    from repro.runtime.pool import UnitState
+    pool = small_pool("scalar")
+    pool.force_active("a", 2)
+    pool.state[5] = UnitState.ACTIVE  # active but ownerless
+    with pytest.raises(InvariantViolation, match="off iff"):
+        pool.charge(0.0, 1.0, {"a": 0.5})
+
+
+def test_thermal_runaway_caught():
+    pool = small_pool("vector", thermal=True)
+    pool.force_active("a", 4)
+    pool.charge(0.0, 1.0, {"a": 1.0})
+    pool.thermal.t_die[0] = 1e6  # runaway temperature
+    with pytest.raises(InvariantViolation, match="t_die"):
+        pool.charge(1.0, 1.0, {"a": 1.0})
+
+
+def test_energy_regression_caught():
+    pool = small_pool("scalar")
+    pool.force_active("a", 2)
+    pool.charge(0.0, 1.0, {"a": 0.5})
+    pool.energy_j = -1e9  # large enough that one tick cannot recover it
+    with pytest.raises(InvariantViolation, match="energy"):
+        pool.charge(1.0, 1.0, {"a": 0.5})
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fleet_conservation_violation_caught(backend):
+    racks = homogeneous_fleet(soc_cluster(), 2, unit_rate=10.0)
+    fl = Fleet(racks, dt_s=1.0, backend=backend, sanitize=True)
+    fl.play_trace(TRACE[:3])
+    # leak request mass: the sanitizer's injected ledger no longer
+    # matches served + queued
+    fl._sanitizer.injected[0] += 7.0
+    with pytest.raises(InvariantViolation, match="conservation"):
+        fl.engine.tick(np.zeros(2), 1.0)
+
+
+def test_attach_is_idempotent():
+    pool = small_pool("vector")
+    s1 = pool._sanitizer
+    assert attach_pool_sanitizer(pool) is s1
+    racks = homogeneous_fleet(soc_cluster(), 2, unit_rate=10.0)
+    fl = Fleet(racks, dt_s=1.0, backend="vector", sanitize=True)
+    assert attach_fleet_sanitizer(fl) is fl._sanitizer
+
+
+# ---------------------------------------------------------------------------
+# overhead
+
+
+def test_sanitizer_overhead_bounded():
+    """On the small tier-1 configs the sanitizer must cost < 2x; assert
+    a looser 3x here so a noisy CI box cannot flake the suite."""
+    racks = homogeneous_fleet(soc_cluster(), 4, unit_rate=10.0,
+                              opp_table=sd865_opp_table(),
+                              thermal=ThermalParams())
+    trace = [60.0 + 40.0 * np.sin(i / 5.0) for i in range(120)]
+
+    def run(sanitize):
+        t0 = time.perf_counter()
+        Fleet(racks, dt_s=1.0, backend="vector",
+              sanitize=sanitize).play_trace(trace)
+        return time.perf_counter() - t0
+
+    run(False)  # warm-up
+    plain = min(run(False) for _ in range(3))
+    armed = min(run(True) for _ in range(3))
+    assert armed < 3.0 * max(plain, 1e-3), \
+        f"sanitizer overhead {armed / plain:.2f}x exceeds budget"

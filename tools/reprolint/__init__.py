@@ -1,0 +1,15 @@
+"""reprolint: static analysis for the twin-engine parity contract.
+
+Public API::
+
+    from reprolint import lint_paths, lint_source, Finding, LintConfig
+
+CLI::
+
+    PYTHONPATH=tools python -m reprolint src/
+"""
+from reprolint.config import LintConfig
+from reprolint.engine import lint_paths, lint_source
+from reprolint.rules import RULES, Finding
+
+__all__ = ["Finding", "LintConfig", "RULES", "lint_paths", "lint_source"]

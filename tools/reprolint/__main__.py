@@ -1,0 +1,54 @@
+"""CLI entry point: ``PYTHONPATH=tools python -m reprolint src/``.
+
+Exit status: 0 clean, 1 findings, 2 usage/internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from reprolint.engine import lint_paths
+from reprolint.rules import RULES
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="AST lint for the twin-engine parity contract "
+                    "(RPL001-RPL005; waive per line with "
+                    "`# reprolint: ok[RULE] rationale`)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule codes to report "
+                         "(default: all)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code in sorted(RULES):
+            print(f"{code}  {RULES[code]}")
+        return 0
+
+    findings = lint_paths(args.paths or ["src"])
+    if args.select:
+        keep = {c.strip().upper() for c in args.select.split(",")}
+        findings = [f for f in findings if f.rule in keep]
+
+    if args.format == "json":
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        n = len(findings)
+        print(f"reprolint: {n} finding{'s' if n != 1 else ''}"
+              if n else "reprolint: clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,120 @@
+"""Repo-specific lint configuration: which files carry which contracts.
+
+The twin-engine parity contract (scalar reference vs stacked-array
+vector engine, bitwise-identical telemetry) only binds a handful of
+modules — the ones whose floating-point arithmetic lands in telemetry
+that ``tests/test_vector_parity.py`` compares bit for bit. Those
+modules are *parity-critical*: every float reduction in them must be
+order-pinned (weighted ``np.bincount``, explicit ascending loops,
+left-to-right builtin ``sum``), because numpy's pairwise ``np.sum`` /
+``np.add.reduceat`` reductions are not guaranteed left-to-right and
+have produced real one-ulp parity breaks (PR 5).
+
+Scopes are fnmatch patterns against the POSIX-style relative path. A
+file can also opt in from its own text with a marker comment anywhere
+in the file::
+
+    # reprolint: parity-critical
+    # reprolint: selection
+
+which is how the fixture corpus exercises the rules regardless of
+where the repo checkout lives.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from fnmatch import fnmatch
+from typing import List
+
+
+#: Modules whose float arithmetic is compared bitwise across the twin
+#: engines (RPL001/RPL002/RPL003 scope).
+PARITY_CRITICAL = [
+    "*repro/fleet/fleet.py",
+    "*repro/fleet/telemetry.py",
+    "*repro/fleet/router.py",
+    "*repro/runtime/pool.py",
+    "*repro/power/thermal.py",
+]
+
+#: Modules that *select* between alternatives scored by floats —
+#: governor OPP choices, router rack rankings, pool placement order
+#: (RPL005 scope). A one-ulp difference in a float key must not be able
+#: to flip the winner, so selections need pinned integer/composite keys,
+#: stable sorts, or epsilon-margin comparisons.
+SELECTION = [
+    "*repro/power/governor.py",
+    "*repro/fleet/router.py",
+    "*repro/fleet/fleet.py",
+    "*repro/runtime/pool.py",
+]
+
+#: Integer count caches of the pool backends: fields that shadow
+#: recomputable ground truth and therefore may only be mutated by the
+#: owning class's methods (RPL002).
+COUNT_CACHE_FIELDS = frozenset({
+    "_n_alloc",
+    "_n_waking_total",
+    "_n_active_of",
+    "_n_waking_of",
+    "_free_g",
+    "_mine_g",
+    "_act_g",
+    "_active_idx",
+    "_free_count",
+})
+
+#: Classes allowed to mutate the count caches (their methods own them).
+CACHE_OWNERS = frozenset({"UnitPool", "VectorUnitPool"})
+
+#: ``np.random`` attributes that are legitimate without an inline seed
+#: (they construct seedable generators rather than draw numbers).
+SEEDABLE_RANDOM_CTORS = frozenset({
+    "default_rng", "Generator", "SeedSequence", "PCG64", "Philox",
+})
+
+#: numpy call names whose float reduction order is not guaranteed
+#: left-to-right (pairwise summation, reduceat segment trees, BLAS
+#: dispatch) — RPL001 targets.
+UNORDERED_NP_REDUCTIONS = frozenset({
+    "sum", "nansum", "cumsum", "nancumsum", "dot", "vdot", "inner",
+    "matmul", "einsum", "mean", "nanmean", "std", "var", "prod",
+    "nanprod", "trace",
+})
+
+#: ndarray method names flagged by RPL001 (over-approximate: static
+#: analysis cannot prove the receiver is an ndarray; waive with a
+#: rationale when the receiver is integer-typed or roll-up-only).
+UNORDERED_METHOD_REDUCTIONS = frozenset({
+    "sum", "dot", "mean", "std", "var", "prod", "cumsum", "trace",
+})
+
+#: ufuncs whose ``reduce``/``reduceat`` is order-sensitive on floats.
+ORDER_SENSITIVE_UFUNCS = frozenset({"add", "subtract", "multiply", "divide"})
+
+DEFAULT_EXCLUDE_DIRS = frozenset({
+    ".git", "__pycache__", ".venv", "venv", "node_modules",
+    ".mypy_cache", ".ruff_cache", ".pytest_cache", "build", "dist",
+})
+
+PARITY_MARKER = "# reprolint: parity-critical"
+SELECTION_MARKER = "# reprolint: selection"
+
+
+@dataclass
+class LintConfig:
+    """Scope + pattern knobs; defaults encode this repo's contract."""
+
+    parity_critical: List[str] = field(
+        default_factory=lambda: list(PARITY_CRITICAL))
+    selection: List[str] = field(default_factory=lambda: list(SELECTION))
+
+    def is_parity_critical(self, relpath: str, source: str) -> bool:
+        p = relpath.replace("\\", "/")
+        return (any(fnmatch(p, pat) for pat in self.parity_critical)
+                or PARITY_MARKER in source)
+
+    def is_selection(self, relpath: str, source: str) -> bool:
+        p = relpath.replace("\\", "/")
+        return (any(fnmatch(p, pat) for pat in self.selection)
+                or SELECTION_MARKER in source)

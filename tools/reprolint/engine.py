@@ -1,0 +1,160 @@
+"""File walking, waiver parsing, and finding suppression.
+
+Waivers are ruff-style per-line comments::
+
+    x = counts.sum()  # reprolint: ok[RPL001] int64 counts: reduction exact
+    y = a.dot(b)      # reprolint: ok[RPL001, RPL005] shared by both engines
+
+A waiver suppresses the named rules for every statement whose source
+span covers the comment's line (so a waiver on the closing line of a
+multi-line call works). The rationale text after the bracket is
+mandatory: the waiver is the documentation, and a bare ``ok[RPL001]``
+is reported as RPL000 instead of suppressing anything.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import re
+import tokenize
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from reprolint.config import DEFAULT_EXCLUDE_DIRS, LintConfig
+from reprolint.rules import Finding, run_rules
+
+_WAIVER_RE = re.compile(
+    r"#\s*reprolint:\s*ok\[([A-Za-z0-9_,\s]+)\]\s*(.*)$")
+
+
+@dataclass(frozen=True)
+class Waiver:
+    line: int
+    rules: Tuple[str, ...]
+    rationale: str
+
+
+def parse_waivers(source: str) -> List[Waiver]:
+    waivers: List[Waiver] = []
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _WAIVER_RE.search(tok.string)
+            if not m:
+                continue
+            rules = tuple(r.strip().upper() for r in m.group(1).split(",")
+                          if r.strip())
+            waivers.append(Waiver(line=tok.start[0], rules=rules,
+                                  rationale=m.group(2).strip()))
+    except tokenize.TokenError:
+        pass
+    return waivers
+
+
+def _node_spans(tree: ast.AST) -> List[Tuple[int, int]]:
+    """(lineno, end_lineno) for every statement/expression node."""
+    spans = []
+    for node in ast.walk(tree):
+        lineno = getattr(node, "lineno", None)
+        if lineno is not None:
+            spans.append((lineno, getattr(node, "end_lineno", lineno)))
+    return spans
+
+
+def _waived_lines(finding: Finding, tree: ast.AST,
+                  line_index: Dict[int, List[Tuple[int, int]]]
+                  ) -> Set[int]:
+    """Lines on which a waiver comment suppresses this finding: every
+    line of every node span that starts on the finding's line."""
+    lines: Set[int] = set()
+    for start, end in line_index.get(finding.line, []):
+        lines.update(range(start, end + 1))
+    lines.add(finding.line)
+    return lines
+
+
+def apply_waivers(findings: List[Finding], waivers: List[Waiver],
+                  tree: ast.AST, path: str) -> List[Finding]:
+    """Drop waived findings; emit RPL000 for rationale-less waivers."""
+    line_index: Dict[int, List[Tuple[int, int]]] = {}
+    for start, end in _node_spans(tree):
+        line_index.setdefault(start, []).append((start, end))
+
+    out: List[Finding] = []
+    used: Set[int] = set()
+    for f in findings:
+        span = _waived_lines(f, tree, line_index)
+        waived = False
+        for i, w in enumerate(waivers):
+            if f.rule in w.rules and w.line in span:
+                used.add(i)
+                if w.rationale:
+                    waived = True
+                # rationale-less waivers do NOT suppress; RPL000 below
+        if not waived:
+            out.append(f)
+
+    for w in waivers:
+        if not w.rationale:
+            out.append(Finding(
+                rule="RPL000", path=path, line=w.line, col=0,
+                message="waiver without rationale: write *why* the "
+                        "flagged construct is safe after the bracket, "
+                        "e.g. `# reprolint: ok[RPL001] int64: exact`"))
+    out.sort(key=lambda f: (f.line, f.col, f.rule))
+    return out
+
+
+def lint_source(source: str, path: str = "<string>",
+                relpath: Optional[str] = None,
+                config: Optional[LintConfig] = None) -> List[Finding]:
+    """Lint one source string; returns unwaived findings."""
+    cfg = config or LintConfig()
+    rel = (relpath if relpath is not None else path).replace(os.sep, "/")
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="RPL999", path=path, line=e.lineno or 1,
+                        col=(e.offset or 1) - 1,
+                        message=f"syntax error: {e.msg}")]
+    findings = run_rules(
+        tree, path,
+        parity=cfg.is_parity_critical(rel, source),
+        selection=cfg.is_selection(rel, source))
+    return apply_waivers(findings, parse_waivers(source), tree, path)
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in DEFAULT_EXCLUDE_DIRS)
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def lint_paths(paths: Iterable[str],
+               config: Optional[LintConfig] = None) -> List[Finding]:
+    cfg = config or LintConfig()
+    findings: List[Finding] = []
+    for fp in iter_python_files(paths):
+        try:
+            with open(fp, encoding="utf-8") as fh:
+                source = fh.read()
+        except (OSError, UnicodeDecodeError) as e:
+            findings.append(Finding(
+                rule="RPL999", path=fp, line=1, col=0,
+                message=f"cannot read file: {e}"))
+            continue
+        rel = os.path.relpath(fp).replace(os.sep, "/")
+        findings.extend(lint_source(source, path=fp, relpath=rel,
+                                    config=cfg))
+    return findings

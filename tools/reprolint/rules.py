@@ -1,0 +1,406 @@
+"""The RPL rule set: AST checks for the twin-engine parity contract.
+
+=======  ====================================================================
+RPL001   Unordered float reduction in a parity-critical module
+         (``np.sum`` / ``.sum()`` / ``np.add.reduceat`` / ``np.dot`` /
+         ``np.mean`` ...). numpy reduces floats pairwise or via segment
+         trees, not left-to-right, so the scalar and vector engines can
+         diverge by an ulp. Allowed idioms: weighted ``np.bincount``,
+         explicit ascending-order loops, builtin ``sum`` (strictly
+         left-to-right), ``math.fsum``.
+RPL002   Mutation of a pool count cache (``_n_alloc``-style field)
+         outside the owning pool class. The caches shadow recomputable
+         bincount ground truth; foreign writers silently corrupt the
+         O(1) hot-path queries.
+RPL003   Append/extend to a ``responses`` attribute whose payload does
+         not come from ``Workload.drain()``. ``drain()`` is the single
+         exactly-once delivery channel into ``Telemetry.responses``; a
+         second path double-counts completions.
+RPL004   Unseeded randomness: stdlib ``random`` module calls or legacy
+         ``np.random.*`` draws. Simulations must thread a seeded
+         ``np.random.default_rng`` / ``random.Random`` so runs replay.
+RPL005   Unpinned selection tie-break in a governor/router/placement
+         module: ``argsort`` without ``kind="stable"``, ``argmin`` /
+         ``argmax`` over (potentially) float keys, or ``==`` against a
+         float expression. A one-ulp key difference between backends
+         must not flip which rack/OPP/unit wins; pin a composite
+         integer key, use a stable sort, or compare with an epsilon
+         margin.
+=======  ====================================================================
+
+Every rule is waivable per line with a rationale comment::
+
+    x = arr.sum()  # reprolint: ok[RPL001] integer dtype: reduction exact
+
+A waiver without rationale text is itself reported (RPL000).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import List, Optional
+
+from reprolint.config import (CACHE_OWNERS, COUNT_CACHE_FIELDS, LintConfig,
+                              ORDER_SENSITIVE_UFUNCS, SEEDABLE_RANDOM_CTORS,
+                              UNORDERED_METHOD_REDUCTIONS,
+                              UNORDERED_NP_REDUCTIONS)
+
+RULES = {
+    "RPL000": "waiver comment missing a rationale",
+    "RPL001": "unordered float reduction in a parity-critical module",
+    "RPL002": "pool count cache mutated outside its owning class",
+    "RPL003": "responses delivered outside the drain() channel",
+    "RPL004": "unseeded random draw",
+    "RPL005": "selection tie-break without a pinned key",
+}
+
+_NP_NAMES = {"np", "numpy"}
+_MUTATING_METHODS = {"pop", "clear", "update", "setdefault", "popitem"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: " \
+               f"{self.rule} {self.message}"
+
+
+def _attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """``np.add.reduceat`` -> ["np", "add", "reduceat"]; None when the
+    chain bottoms out in anything but a bare name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        parts.reverse()
+        return parts
+    return None
+
+
+def _contains_attr(node: ast.AST, attr: str) -> bool:
+    return any(isinstance(n, ast.Attribute) and n.attr == attr
+               for n in ast.walk(node))
+
+
+def _contains_call_named(node: ast.AST, name: str) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            f = n.func
+            if (isinstance(f, ast.Attribute) and f.attr == name) or \
+                    (isinstance(f, ast.Name) and f.id == name):
+                return True
+    return False
+
+
+def _is_float_annotation(ann: Optional[ast.AST]) -> bool:
+    return (isinstance(ann, ast.Name) and ann.id == "float") or \
+        (isinstance(ann, ast.Constant) and ann.value == "float")
+
+
+def _is_float_like(node: ast.AST, float_names: frozenset = frozenset()
+                   ) -> bool:
+    """Heuristic: does this expression *syntactically* produce a float
+    (true division anywhere inside, a float literal, a ``float(...)``
+    call, or a name annotated ``: float`` in the enclosing function)?"""
+    for n in ast.walk(node):
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Div):
+            return True
+        if isinstance(n, ast.Constant) and isinstance(n.value, float):
+            return True
+        if isinstance(n, ast.Name) and n.id in float_names:
+            return True
+        if isinstance(n, ast.Call):
+            f = n.func
+            if isinstance(f, ast.Name) and f.id == "float":
+                return True
+    return False
+
+
+class _RuleVisitor(ast.NodeVisitor):
+    def __init__(self, path: str, parity: bool, selection: bool):
+        self.path = path
+        self.parity = parity
+        self.selection = selection
+        self.findings: List[Finding] = []
+        self._class_stack: List[str] = []
+        self._float_names_stack: List[frozenset] = [frozenset()]
+
+    # -- bookkeeping -------------------------------------------------------
+    def _report(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=self.path, line=node.lineno,
+            col=getattr(node, "col_offset", 0), message=message))
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def _visit_func(self, node) -> None:
+        a = node.args
+        params = [*a.posonlyargs, *a.args, *a.kwonlyargs]
+        floats = {p.arg for p in params
+                  if _is_float_annotation(p.annotation)}
+        floats.update(
+            n.target.id for n in ast.walk(node)
+            if isinstance(n, ast.AnnAssign)
+            and isinstance(n.target, ast.Name)
+            and _is_float_annotation(n.annotation))
+        self._float_names_stack.append(frozenset(floats))
+        self.generic_visit(node)
+        self._float_names_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _in_cache_owner(self) -> bool:
+        return any(c in CACHE_OWNERS for c in self._class_stack)
+
+    # -- RPL001 / RPL003 / RPL004 / RPL005: calls --------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        if self.parity:
+            self._check_unordered_reduction(node, chain)
+            self._check_responses_append(node)
+            self._check_cache_mutator_call(node)
+        self._check_unseeded_random(node, chain)
+        if self.selection:
+            self._check_selection_calls(node, chain)
+        self.generic_visit(node)
+
+    def _check_unordered_reduction(self, node: ast.Call,
+                                   chain: Optional[List[str]]) -> None:
+        if chain:
+            # np.sum(x) / numpy.dot(a, b)
+            if len(chain) == 2 and chain[0] in _NP_NAMES \
+                    and chain[1] in UNORDERED_NP_REDUCTIONS:
+                self._report(
+                    "RPL001", node,
+                    f"np.{chain[1]} reduces floats in unspecified order; "
+                    "use a weighted np.bincount or an explicit "
+                    "ascending-order accumulation in parity-critical code")
+                return
+            # np.add.reduceat(...) / np.add.reduce(...)
+            if len(chain) == 3 and chain[0] in _NP_NAMES \
+                    and chain[1] in ORDER_SENSITIVE_UFUNCS \
+                    and chain[2] in ("reduce", "reduceat"):
+                self._report(
+                    "RPL001", node,
+                    f"np.{chain[1]}.{chain[2]} float segment reduction is "
+                    "not left-to-right (the PR 5 one-ulp parity bug); use "
+                    "a weighted np.bincount group sum")
+                return
+        # method form: x.sum(), x.mean(axis=0) ... on any receiver
+        f = node.func
+        if isinstance(f, ast.Attribute) \
+                and f.attr in UNORDERED_METHOD_REDUCTIONS \
+                and not (isinstance(f.value, ast.Name)
+                         and f.value.id in _NP_NAMES):
+            self._report(
+                "RPL001", node,
+                f".{f.attr}() reduction order is unspecified for float "
+                "arrays; pin the order or waive with the receiver's "
+                "dtype/role rationale")
+
+    def _check_responses_append(self, node: ast.Call) -> None:
+        f = node.func
+        if not (isinstance(f, ast.Attribute)
+                and f.attr in ("append", "extend", "insert")):
+            return
+        if not _contains_attr(f.value, "responses"):
+            return
+        if any(_contains_call_named(arg, "drain") for arg in node.args):
+            return
+        self._report(
+            "RPL003", node,
+            "responses must be delivered exactly once, via "
+            "Workload.drain(); appending anything else double-counts "
+            "completions in Telemetry.responses")
+
+    def _check_unseeded_random(self, node: ast.Call,
+                               chain: Optional[List[str]]) -> None:
+        if not chain:
+            return
+        # stdlib: random.random(), random.randint(...), random.shuffle(...)
+        if len(chain) == 2 and chain[0] == "random" \
+                and chain[1] not in ("Random", "SystemRandom", "seed",
+                                     "getstate", "setstate"):
+            self._report(
+                "RPL004", node,
+                f"random.{chain[1]} draws from the unseeded module-level "
+                "generator; thread a seeded random.Random / "
+                "np.random.default_rng instead")
+            return
+        # numpy legacy: np.random.rand(...), np.random.randint(...)
+        if len(chain) == 3 and chain[0] in _NP_NAMES \
+                and chain[1] == "random":
+            if chain[2] in SEEDABLE_RANDOM_CTORS:
+                # default_rng() with no/None seed is still unseeded
+                if chain[2] == "default_rng" and (
+                        not node.args
+                        or (isinstance(node.args[0], ast.Constant)
+                            and node.args[0].value is None)):
+                    self._report(
+                        "RPL004", node,
+                        "np.random.default_rng() without a seed is "
+                        "OS-entropy seeded; pass an explicit seed so "
+                        "simulations replay")
+                return
+            self._report(
+                "RPL004", node,
+                f"np.random.{chain[2]} uses the legacy global "
+                "RandomState; use a seeded np.random.default_rng "
+                "generator")
+
+    def _check_selection_calls(self, node: ast.Call,
+                               chain: Optional[List[str]]) -> None:
+        f = node.func
+        name = None
+        if chain and len(chain) == 2 and chain[0] in _NP_NAMES:
+            name = chain[1]
+        elif isinstance(f, ast.Attribute):
+            name = f.attr
+        if name == "argsort":
+            kind = next((kw.value for kw in node.keywords
+                         if kw.arg == "kind"), None)
+            if not (isinstance(kind, ast.Constant)
+                    and kind.value in ("stable", "mergesort")):
+                self._report(
+                    "RPL005", node,
+                    "argsort without kind=\"stable\": equal float keys "
+                    "land in unspecified order, so a one-ulp difference "
+                    "between backends can reorder the selection; use a "
+                    "stable sort or prove the keys unique")
+        elif name in ("argmin", "argmax"):
+            self._report(
+                "RPL005", node,
+                f"{name} breaks float ties by array position only; pin a "
+                "composite (value, tiebreak-index) integer key or an "
+                "epsilon-margin comparison so a one-ulp key difference "
+                "cannot flip the winner")
+
+    def _check_cache_mutator_call(self, node: ast.Call) -> None:
+        """``pool._active_idx.pop(...)`` — mutation through a method."""
+        f = node.func
+        if not (isinstance(f, ast.Attribute)
+                and f.attr in _MUTATING_METHODS):
+            return
+        recv = f.value
+        if isinstance(recv, ast.Subscript):
+            recv = recv.value
+        if not (isinstance(recv, ast.Attribute)
+                and recv.attr in COUNT_CACHE_FIELDS):
+            return
+        if isinstance(recv.value, ast.Name) and recv.value.id == "self" \
+                and self._in_cache_owner():
+            return
+        self._report(
+            "RPL002", node,
+            f"{recv.attr}.{f.attr}() mutates a pool count cache outside "
+            "its owning class; go through "
+            "wake/release/advance/force_active instead")
+
+    # -- RPL002: cache mutation sites --------------------------------------
+    def _cache_store_target(self, target: ast.AST) -> Optional[str]:
+        """The cache field name a store targets, if any: matches
+        ``X._n_alloc``, ``X._n_active_of[tid]``, ``X._free_g[...]``."""
+        node = target
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        if isinstance(node, ast.Attribute) \
+                and node.attr in COUNT_CACHE_FIELDS:
+            return node.attr
+        return None
+
+    def _check_cache_store(self, target: ast.AST, node: ast.AST) -> None:
+        field = self._cache_store_target(target)
+        if field is None:
+            return
+        base = target
+        if isinstance(base, ast.Subscript):
+            base = base.value
+        assert isinstance(base, ast.Attribute)
+        is_self = isinstance(base.value, ast.Name) \
+            and base.value.id == "self"
+        if is_self and self._in_cache_owner():
+            return
+        self._report(
+            "RPL002", node,
+            f"{field} is an exact integer cache owned by the pool "
+            "backend; mutate through wake/release/advance/force_active "
+            "so the cache and the bincount ground truth stay in lockstep")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self.parity:
+            for t in node.targets:
+                self._check_cache_store(t, node)
+            self._check_responses_assign(node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if self.parity:
+            self._check_cache_store(node.target, node)
+            if self._cache_store_target(node.target) is None \
+                    and isinstance(node.target, ast.Attribute) \
+                    and node.target.attr == "responses" \
+                    and not _contains_call_named(node.value, "drain"):
+                self._report(
+                    "RPL003", node,
+                    "responses must be delivered exactly once, via "
+                    "Workload.drain()")
+        self.generic_visit(node)
+
+    def _check_responses_assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            base = t.value if isinstance(t, ast.Subscript) else t
+            if isinstance(base, ast.Attribute) and base.attr == "responses":
+                # rebinding .responses wholesale is allowed only from the
+                # drain channel or to a fresh empty list (reset)
+                v = node.value
+                empty = isinstance(v, (ast.List, ast.ListComp)) or (
+                    isinstance(v, ast.Call)
+                    and isinstance(v.func, ast.Name)
+                    and v.func.id == "list" and not v.args)
+                if not empty and not _contains_call_named(v, "drain"):
+                    self._report(
+                        "RPL003", node,
+                        "responses may only be (re)bound from "
+                        "Workload.drain() or reset to empty")
+
+    # -- RPL005: float equality in selection code --------------------------
+    def visit_Compare(self, node: ast.Compare) -> None:
+        if self.selection and any(isinstance(op, (ast.Eq, ast.NotEq))
+                                  for op in node.ops):
+            operands = [node.left, *node.comparators]
+            floats = self._float_names_stack[-1]
+            if any(_is_float_like(o, floats) for o in operands):
+                self._report(
+                    "RPL005", node,
+                    "float == in selection code: one-ulp backend "
+                    "differences make exact float ties unstable; compare "
+                    "with an epsilon margin or an integer key")
+        self.generic_visit(node)
+
+
+def run_rules(tree: ast.AST, path: str, *, parity: bool,
+              selection: bool) -> List[Finding]:
+    v = _RuleVisitor(path, parity, selection)
+    v.visit(tree)
+    return v.findings
+
+
+def lint_tree(tree: ast.AST, path: str, relpath: str, source: str,
+              config: Optional[LintConfig] = None) -> List[Finding]:
+    cfg = config or LintConfig()
+    return run_rules(
+        tree, path,
+        parity=cfg.is_parity_critical(relpath, source),
+        selection=cfg.is_selection(relpath, source))

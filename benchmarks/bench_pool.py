@@ -15,7 +15,14 @@ the build on a >2x slowdown of the vectorized paths):
     measurement with the full frequency axis on every rack (schedutil
     governor over the SD865 OPP table plus the stacked RC thermal
     network), i.e. the paper-relevant energy-proportionality
-    configuration running on the array path.
+    configuration running on the array path;
+  * ``fleet_jax/vector_sweep_scenarios_per_s`` — scenarios/s of the
+    jax engine's batched :func:`repro.fleet.sweep` (32 fig15-style
+    configs x 50 racks, warm compile cache), the vmap/pmap path the
+    fig16 speedup criterion rides on. Skipped (not emitted) when jax
+    is unavailable — CI installs jax in the perf-gate job, so a
+    missing metric there means the sweep path broke, and the gate
+    reports it as MISSING.
 """
 from __future__ import annotations
 
@@ -25,7 +32,8 @@ import numpy as np
 
 from benchmarks.common import emit, emit_metric, header
 from repro.core.cluster import soc_cluster
-from repro.fleet import Fleet, JoinShortestQueueRouter, homogeneous_fleet
+from repro.fleet import (Fleet, JoinShortestQueueRouter, diurnal_trace,
+                         homogeneous_fleet)
 from repro.power import SchedutilGovernor, ThermalParams, sd865_opp_table
 from repro.runtime import ClusterRuntime, QueueWorkload, ScalePolicy
 
@@ -84,6 +92,38 @@ def _fleet_rack_ticks_per_s(backend: str, n_racks: int, ticks: int,
     return best
 
 
+def _jax_sweep_scenarios_per_s(n_cfg: int = 32, n_racks: int = 50,
+                               reps: int = 2) -> float:
+    """Best-of-``reps`` scenarios/s of the batched jax ``sweep`` over a
+    24 h diurnal trace (binary-gating racks, the fig16 sweep shape).
+    The first call pays XLA compilation; it warms the compile cache and
+    is excluded from timing, so the metric tracks the steady-state
+    batched-dispatch rate CI actually depends on."""
+    from repro.fleet import SweepConfig, sweep
+
+    racks = homogeneous_fleet(soc_cluster(), n_racks, unit_rate=30.0,
+                              policy=ScalePolicy(cooldown_s=300.0))
+    capacity = sum(rc.spec.n_units * rc.unit_rate for rc in racks)
+    trace = 0.5 * capacity * diurnal_trace(peak_rps=1.0, hours=24,
+                                           dt_s=300.0, seed=11)
+    routers = ("round-robin", "join-shortest-queue", "power-aware")
+    configs = [
+        SweepConfig(router=routers[i % 3],
+                    headroom_scale=0.9 + 0.05 * (i % 8),
+                    trace_scale=0.8 + 0.05 * (i % 6),
+                    name=f"cfg{i}")
+        for i in range(n_cfg)
+    ]
+    sweep(racks, configs, trace, dt_s=300.0)  # compile warm-up
+    best = 0.0
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        rows = sweep(racks, configs, trace, dt_s=300.0)
+        assert len(rows) == n_cfg
+        best = max(best, n_cfg / (time.perf_counter() - t0))
+    return best
+
+
 def run() -> None:
     header("pool: steady-state tick throughput (scalar vs vector)")
     scalar = _rack_ticks_per_s("scalar")
@@ -105,6 +145,12 @@ def run() -> None:
     emit_metric("fleet_dvfs/vector_rack_ticks_per_s", d_vector)
     emit("fleet_dvfs/rack_speedup", 0.0,
          f"vector_over_scalar={d_vector/d_scalar:.2f}x")
+    try:
+        j_sweep = _jax_sweep_scenarios_per_s()
+    except ImportError:
+        emit("fleet_jax/sweep", 0.0, "skipped (jax unavailable)")
+    else:
+        emit_metric("fleet_jax/vector_sweep_scenarios_per_s", j_sweep)
 
 
 if __name__ == "__main__":

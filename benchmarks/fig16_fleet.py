@@ -27,23 +27,33 @@ conclusions can flip versus single-rack ones. This benchmark drives a
      axis beats binary gating alone on energy at comparable p95, and a
      small DVFS fleet matches the scalar engine bitwise (energy, power,
      temperature/throttle/fan series).
-  5. **Throughput** — steady-state rack-ticks/s of the vector engine
+  5. **JAX backend** — the jax engine replays the fleets of steps
+     1/2/4 and must match the vector oracle within the documented
+     tolerance (``JAX_RTOL``; the scalar/vector pair stays bitwise),
+     then ``repro.fleet.sweep`` batches 64 fig15-style policy configs
+     x 100 racks through one vmapped program, cross-checks a sample
+     against dedicated vector runs, and must beat looping the vector
+     engine by >= ``MIN_SWEEP_SPEEDUP`` (5x) wall-clock — the
+     payoff the jax backend exists for. Skipped cleanly when jax is
+     not installed; selectable fleet-wide via ``run.py --backend``.
+  6. **Throughput** — steady-state rack-ticks/s of the vector engine
      must be >= 10x the scalar engine's, both on the binary-gating
      mixed fleet and with the frequency governor + thermal stack
      enabled — the configuration the PR 4 engine rejected outright
      (also registered for the CI perf gate).
 
 Asserts are enforced inline, like fig14/fig15. Under ``run.py --fast``
-(the CI tier-1 smoke) the machine-timing assertions of steps 1 and 5
-are skipped — on shared runners a noisy neighbor could fail the
+(the CI tier-1 smoke) the machine-timing assertions of steps 1, 5
+and 6 are skipped — on shared runners a noisy neighbor could fail the
 *functional* job on wall-clock alone; the dedicated CI perf-gate job
 (``benchmarks/perf_gate.py``, 2x headroom) owns performance-regression
 detection there. A default (non-fast) run checks everything.
 """
 from __future__ import annotations
 
+import itertools
 import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -61,6 +71,11 @@ CPU_UNIT_RATE = 9.0       # per 8-core Xeon container (Table 3 scale)
 DT_S = 60.0
 RPS_PER_USER = 0.02       # one request per 50 s per user at daily peak
 MIN_SPEEDUP = 10.0
+# jax engine contract: tolerance parity (XLA reorders/fuses float ops),
+# not bitwise — observed worst-case relative error across the fig16
+# scenario set is ~3e-12 (latency percentiles); 1e-9 leaves headroom
+JAX_RTOL = 1e-9
+MIN_SWEEP_SPEEDUP = 5.0
 
 
 def _policy() -> ScalePolicy:
@@ -121,9 +136,123 @@ def _engine_rack_ticks_per_s(backend: str, ticks: int, reps: int = 3,
     return best
 
 
-def run(perf: bool = True) -> None:
-    header("fig16: fleet-scale serving — 120 racks, 24 h diurnal, "
-           "vectorized engine")
+def _maxrel(a: np.ndarray, b: np.ndarray) -> float:
+    a = np.asarray(a, float)
+    b = np.asarray(b, float)
+    if a.shape != b.shape:
+        return float("inf")
+    if a.size == 0:
+        return 0.0
+    return float(np.max(np.abs(a - b) / np.maximum(np.abs(a), 1e-9)))
+
+
+def _jax_section(perf: bool, short: np.ndarray, crowd: np.ndarray,
+                 dvfs_short: np.ndarray, d_v: FleetTelemetry) -> None:
+    """jax engine: tolerance parity over the fig16 scenario set, then
+    the batched ``sweep()`` against a looped vector engine."""
+    try:
+        import jax  # noqa: F401
+    except Exception:
+        emit("fig16/jax_parity", 0.0, "skipped (jax unavailable)")
+        return
+    from repro.fleet import SweepConfig, sweep
+
+    pairs = []
+    for router_cls in (JoinShortestQueueRouter, PowerAwareRouter):
+        pairs.append((
+            f"mixed_{router_cls().name}",
+            _sweep(router_cls(), short, backend="vector", n_soc=8, n_cpu=2),
+            _sweep(router_cls(), short, backend="jax", n_soc=8, n_cpu=2)))
+    pairs.append((
+        "flash_rr",
+        _sweep(RoundRobinRouter(), crowd, backend="vector", n_soc=8,
+               n_cpu=2),
+        _sweep(RoundRobinRouter(), crowd, backend="jax", n_soc=8, n_cpu=2)))
+    pairs.append((
+        "dvfs_jsq", d_v,
+        _dvfs_fleet(6, "jax", JoinShortestQueueRouter())
+        .play_trace(dvfs_short)))
+    worst = 0.0
+    for label, tv, tj in pairs:
+        assert tv.ticks == tj.ticks and tv.drained == tj.drained, \
+            f"fig16 jax parity: {label} tick/drain mismatch"
+        for series in ("energy_j", "power_w", "active_units", "queued",
+                       "p50_latency_s", "p95_latency_s", "p99_latency_s"):
+            r = _maxrel(getattr(tv, series), getattr(tj, series))
+            worst = max(worst, r)
+            assert r <= JAX_RTOL, (
+                f"fig16 jax parity: {label}/{series} relative error "
+                f"{r:.2e} > {JAX_RTOL:g}")
+    emit("fig16/jax_parity", 0.0,
+         f"scenarios={len(pairs)};max_relerr={worst:.2e};rtol={JAX_RTOL:g}")
+
+    if not perf:
+        emit("fig16/jax_sweep_speedup", 0.0, "skipped (--fast)")
+        return
+    # batched policy sweep: 64 fig15-style configs x 100 racks x 24 h in
+    # one XLA program vs looping the numpy vector engine config by
+    # config. The loop cost is measured over 8 configs and extrapolated
+    # linearly (it is embarrassingly per-config); the jax time is a
+    # warmed steady-state call — compile amortizes across sweeps.
+    n_cfg, n_racks, n_vec = 64, 100, 8
+    policy = _policy()
+    sw_racks = homogeneous_fleet(soc_cluster(), n_racks, SOC_UNIT_RATE,
+                                 policy=policy)
+    sw_capacity = sum(rc.spec.n_units * SOC_UNIT_RATE for rc in sw_racks)
+    sw_trace = 0.5 * sw_capacity * diurnal_trace(
+        peak_rps=1.0, hours=24, dt_s=300.0, seed=16)
+    cfgs = [
+        SweepConfig(router=rt, headroom_scale=hr, trace_scale=ts,
+                    name=f"c{i}")
+        for i, (rt, hr, ts) in enumerate(itertools.islice(
+            itertools.product(("round-robin", "join-shortest-queue",
+                               "power-aware"),
+                              (0.85, 1.0, 1.15, 1.3),
+                              (0.7, 0.85, 1.0, 1.15, 1.3, 1.45)), n_cfg))
+    ]
+    sweep(sw_racks, cfgs, sw_trace, dt_s=300.0)  # compile + warm
+    t0 = time.perf_counter()
+    rows = sweep(sw_racks, cfgs, sw_trace, dt_s=300.0)
+    t_jax = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for cfg, row in zip(cfgs[:n_vec], rows[:n_vec]):
+        v_policy = ScalePolicy(
+            cooldown_s=policy.cooldown_s, min_units=policy.min_units,
+            headroom=policy.headroom * cfg.headroom_scale)
+        fleet = Fleet(
+            homogeneous_fleet(soc_cluster(), n_racks, SOC_UNIT_RATE,
+                              policy=v_policy),
+            router={"round-robin": RoundRobinRouter,
+                    "join-shortest-queue": JoinShortestQueueRouter,
+                    "power-aware": PowerAwareRouter}[cfg.router](),
+            dt_s=300.0, backend="vector")
+        tel = fleet.play_trace(cfg.trace_scale * sw_trace)
+        # the batched rows must agree with the per-config vector run
+        assert tel.drained and row["drained"], cfg.name
+        for key in ("served", "energy_kwh", "p95_latency_s"):
+            r = _maxrel(np.asarray(tel.summary()[key]),
+                        np.asarray(row[key]))
+            assert r <= JAX_RTOL, (
+                f"fig16 jax sweep: {cfg.name}/{key} relative error "
+                f"{r:.2e} > {JAX_RTOL:g}")
+    t_vec = (time.perf_counter() - t0) / n_vec * n_cfg
+    speedup = t_vec / t_jax
+    emit_metric("fig16/jax_sweep_scenarios_per_s", n_cfg / t_jax)
+    emit_metric("fig16/vector_loop_scenarios_per_s", n_cfg / t_vec)
+    emit("fig16/jax_sweep_speedup", 0.0,
+         f"configs={n_cfg};racks={n_racks};jax_s={t_jax:.2f};"
+         f"vector_est_s={t_vec:.1f};speedup={speedup:.1f}x")
+    assert speedup >= MIN_SWEEP_SPEEDUP, (
+        f"batched jax sweep must be >= {MIN_SWEEP_SPEEDUP:.0f}x a looped "
+        f"vector engine (measured {speedup:.1f}x)")
+
+
+def run(perf: bool = True, backend: Optional[str] = None) -> None:
+    """``backend`` overrides the engine of the sweep sections (1, 2, 4);
+    the parity sections always pin their own engine pairs."""
+    bk = backend or "vector"
+    header(f"fig16: fleet-scale serving — 120 racks, 24 h diurnal, "
+           f"{bk} engine")
     probe = _mixed_fleet(100, 20, "vector", RoundRobinRouter())
     capacity = probe.capacity_rps
     users = 0.5 * capacity / RPS_PER_USER
@@ -134,7 +263,7 @@ def run(perf: bool = True) -> None:
     # --- 1. headline 24 h sweep: JSQ vs power-aware routing ---------------
     results = {}
     for router in (JoinShortestQueueRouter(), PowerAwareRouter()):
-        tel = _sweep(router, trace)
+        tel = _sweep(router, trace, backend=bk)
         results[tel.router] = tel
         s = tel.summary()
         emit(f"fig16/{tel.router}", 0.0,
@@ -166,8 +295,9 @@ def run(perf: bool = True) -> None:
         .capacity_rps
     crowd = flash_crowd_trace(base_rps=0.08 * small_cap, spike_mult=8.0,
                               hours=2.0, dt_s=DT_S, seed=16)
-    rr = _sweep(RoundRobinRouter(), crowd, n_soc=10, n_cpu=10)
-    jsq_c = _sweep(JoinShortestQueueRouter(), crowd, n_soc=10, n_cpu=10)
+    rr = _sweep(RoundRobinRouter(), crowd, backend=bk, n_soc=10, n_cpu=10)
+    jsq_c = _sweep(JoinShortestQueueRouter(), crowd, backend=bk,
+                   n_soc=10, n_cpu=10)
     emit("fig16/flash_crowd", 0.0,
          f"rr_p95_s={rr.p95_latency_s:.1f};"
          f"jsq_p95_s={jsq_c.p95_latency_s:.1f};"
@@ -196,12 +326,12 @@ def run(perf: bool = True) -> None:
     # PR 3's schedutil governor is what moves the sd865 proportionality
     # index (0.907 -> 0.941); the stacked engine now runs it — plus the
     # RC thermal network — on the array path. 100 racks x 24 h.
-    gating_fleet = _dvfs_fleet(100, "vector", JoinShortestQueueRouter(),
+    gating_fleet = _dvfs_fleet(100, bk, JoinShortestQueueRouter(),
                                dvfs=False)
     dvfs_trace = 0.5 * gating_fleet.capacity_rps * diurnal_trace(
         peak_rps=1.0, hours=24, dt_s=DT_S, seed=16)
     gating = gating_fleet.play_trace(dvfs_trace)
-    sched = _dvfs_fleet(100, "vector", JoinShortestQueueRouter()) \
+    sched = _dvfs_fleet(100, bk, JoinShortestQueueRouter()) \
         .play_trace(dvfs_trace)
     saving = 1 - sched.energy_j / gating.energy_j
     emit("fig16/dvfs_fleet", 0.0,
@@ -235,7 +365,10 @@ def run(perf: bool = True) -> None:
     assert dvfs_bitwise, \
         "vector fleet engine must match scalar bitwise under DVFS+thermal"
 
-    # --- 5. vectorized engine throughput ----------------------------------
+    # --- 5. jax backend: tolerance parity + batched config sweep ----------
+    _jax_section(perf, short, crowd, dvfs_short, d_v)
+
+    # --- 6. vectorized engine throughput ----------------------------------
     if not perf:
         emit("fig16/speedup", 0.0, "skipped (--fast)")
         return

@@ -34,8 +34,9 @@ from typing import List, Optional, Tuple
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
                                 "BENCH_baseline.json")
 
-# (metric, baseline, current, verdict) — current None when missing
-_Row = Tuple[str, float, Optional[float], str]
+# (metric, baseline, current, verdict) — baseline/current None when the
+# metric is missing from that record
+_Row = Tuple[str, Optional[float], Optional[float], str]
 
 
 def _write_summary(rows: List[_Row], max_regression: float,
@@ -55,10 +56,11 @@ def _write_summary(rows: List[_Row], max_regression: float,
     ]
     for name, base, cur, verdict in rows:
         mark = {"ok": "✅", "REGRESSED": "❌", "MISSING": "⚠️"}[verdict]
+        base_s = f"{base:,.1f}" if base is not None else "—"
         cur_s = f"{cur:,.1f}" if cur is not None else "—"
-        ratio_s = f"{cur / base:.2f}x" if cur is not None and base > 0 \
-            else "—"
-        lines.append(f"| `{name}` | {base:,.1f} | {cur_s} | {ratio_s} | "
+        ratio_s = f"{cur / base:.2f}x" \
+            if cur is not None and base is not None and base > 0 else "—"
+        lines.append(f"| `{name}` | {base_s} | {cur_s} | {ratio_s} | "
                      f"{mark} {verdict} |")
     with open(path, "a") as fh:
         fh.write("\n".join(lines) + "\n")
@@ -91,11 +93,18 @@ def main() -> None:
         base = baseline.get("metrics", {}).get(name)
         cur = current.get("metrics", {}).get(name)
         if base is None:
-            failures.append(f"{name}: missing from baseline")
+            failures.append(
+                f"{name}: gated but missing from baseline "
+                f"{args.baseline} (stale gate list? regenerate the "
+                "baseline and restore the gate/note fields)")
+            cur_s = "---" if cur is None else f"{cur:.1f}"
+            print(f"{name:44s} {'---':>12s} {cur_s:>12s} {'---':>7s}  "
+                  "MISSING")
+            rows.append((name, None, cur, "MISSING"))
             continue
         if cur is None:
             failures.append(f"{name}: missing from current run "
-                            "(did the pool suite run?)")
+                            "(did the suite that emits it run?)")
             print(f"{name:44s} {base:12.1f} {'---':>12s} {'---':>7s}  "
                   "MISSING")
             rows.append((name, base, None, "MISSING"))

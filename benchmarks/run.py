@@ -17,6 +17,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (e.g. fig6,table4)")
+    ap.add_argument("--backend", default=None,
+                    help="fleet engine for the fleet-driving suites "
+                         "(scalar|vector|jax; default: each suite's own)")
     ap.add_argument("--fast", action="store_true",
                     help="skip host-executed model measurements")
     ap.add_argument("--list", action="store_true",
@@ -45,7 +48,8 @@ def main() -> None:
             executable=not args.fast)),
         "fig14": fig14_mixed_tenancy.run,
         "fig15": fig15_dvfs_pareto.run,
-        "fig16": (lambda: fig16_fleet.run(perf=not args.fast)),
+        "fig16": (lambda: fig16_fleet.run(perf=not args.fast,
+                                          backend=args.backend)),
         "table4": table4_tco.run,
         "table5": table5_tpc.run,
         "kernels": bench_kernels.run,
@@ -62,6 +66,10 @@ def main() -> None:
     if unknown:
         sys.exit(f"unknown suite(s): {', '.join(unknown)}\n"
                  f"valid suites: {', '.join(suites)}")
+    backends = ("scalar", "vector", "jax")
+    if args.backend is not None and args.backend not in backends:
+        sys.exit(f"unknown backend: {args.backend}\n"
+                 f"valid backends: {', '.join(backends)}")
     record = common.start_json_recording() if args.json else None
     print("name,us_per_call,derived")
     failures = []

@@ -1,0 +1,49 @@
+"""JAX environment knobs for the fleet engine and batched sweeps.
+
+Two process-level switches the ``backend="jax"`` fleet engine depends
+on (the idiom mirrors the elisa/numpyro helpers catalogued in
+SNIPPETS.md 1-2):
+
+* :func:`jax_enable_x64` — flip the global float64 flag. The jax fleet
+  engine is tolerance-parity against the float64 numpy vector engine,
+  so running it in jax's default float32 silently quadruples the error;
+  the engine also wraps its own entry points in the scoped
+  ``jax.experimental.enable_x64`` context, so this global helper is for
+  scripts/CI that want the whole process in x64 (equivalently set
+  ``JAX_ENABLE_X64=1`` before the first jax import).
+* :func:`set_host_device_count` — make XLA expose ``n`` virtual CPU
+  devices (``--xla_force_host_platform_device_count``) so a batched
+  ``sweep()`` can shard its config axis with ``pmap``. Must run before
+  jax initializes its backends; calling it later changes nothing for
+  the current process (equivalently export
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+"""
+from __future__ import annotations
+
+import os
+import re
+
+__all__ = ["jax_enable_x64", "set_host_device_count"]
+
+
+def jax_enable_x64(enable: bool = True) -> None:
+    """Globally enable (or disable) 64-bit jax arithmetic."""
+    import jax
+
+    jax.config.update("jax_enable_x64", enable)
+
+
+def set_host_device_count(n: int) -> None:
+    """Force XLA to expose ``n`` host (CPU) devices.
+
+    Rewrites ``XLA_FLAGS``, replacing any existing
+    ``--xla_force_host_platform_device_count`` flag. Only effective
+    before the process's first jax backend initialization.
+    """
+    xla_flags = os.getenv("XLA_FLAGS", "")
+    rest = re.sub(
+        r"--xla_force_host_platform_device_count=\S+", "", xla_flags
+    ).split()
+    os.environ["XLA_FLAGS"] = " ".join(
+        [f"--xla_force_host_platform_device_count={int(n)}", *rest]
+    )

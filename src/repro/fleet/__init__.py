@@ -7,9 +7,12 @@ claims can be evaluated at the scale public edge platforms run at
 
   * :class:`~repro.fleet.fleet.Fleet` — N racks (mixed
     :class:`~repro.core.cluster.ClusterSpec`\\ s allowed), one offered
-    load, tick-by-tick routing + per-rack elastic unit governors; two
-    engines behind ``backend="scalar" | "vector"`` with
-    bitwise-identical telemetry;
+    load, tick-by-tick routing + per-rack elastic unit governors; three
+    engines behind ``backend="scalar" | "vector" | "jax"`` — the first
+    two bitwise-identical, the jitted jax engine tolerance-matched;
+  * :mod:`~repro.fleet.jax_engine` — ``jax.lax.scan`` engine plus the
+    batched :func:`~repro.fleet.jax_engine.sweep` entry point that
+    ``vmap``\\ s whole fig15-style config grids into one XLA program;
   * :mod:`~repro.fleet.router` — round-robin, join-shortest-queue
     (water-fill), and power-aware (efficiency-packed) request routers;
   * :mod:`~repro.fleet.traces` — diurnal, flash-crowd, and replayed
@@ -30,6 +33,8 @@ Typical use::
     tel = fleet.play_trace(trace)
     print(tel.summary())
 """
+from typing import Any
+
 from repro.fleet.fleet import Fleet, RackConfig, homogeneous_fleet
 from repro.fleet.router import (
     ROUTERS,
@@ -48,10 +53,22 @@ from repro.fleet.traces import (
     scale_to_users,
 )
 
+def __getattr__(name: str) -> Any:
+    # lazy: the jax sweep surface pulls in jax, which the scalar/vector
+    # backends (and tier-1) must not depend on
+    if name in ("SweepConfig", "sweep"):
+        from repro.fleet import jax_engine
+
+        return getattr(jax_engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "Fleet",
     "RackConfig",
     "homogeneous_fleet",
+    "SweepConfig",
+    "sweep",
     "Router",
     "FleetView",
     "RoundRobinRouter",

@@ -42,18 +42,23 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.cluster import ClusterSpec
+from repro.fleet.engine_state import (
+    GOV_FIXED,
+    GOV_RACE,
+    GOV_SCHED,
+    ThermalLayout,
+    build_fleet_arrays,
+)
 from repro.fleet.router import FleetView, JoinShortestQueueRouter, Router
 from repro.fleet.telemetry import FleetTelemetry
-from repro.power.governor import (FixedFreqGovernor, FreqContext,
-                                  RaceToIdleGovernor, SchedutilGovernor,
-                                  ThermalAwareGovernor)
+from repro.power.governor import FreqContext
 from repro.power.opp import OPPTable
-from repro.power.thermal import ThermalModel, ThermalParams
+from repro.power.thermal import ThermalParams
 from repro.runtime import (
     ClusterRuntime,
     QueueWorkload,
@@ -179,71 +184,40 @@ class _StackedThermal:
     unchanged — so every rack integrates exactly as its scalar twin.
     """
 
-    def __init__(self, racks: Sequence[RackConfig], t_idx: Sequence[int]) -> None:
-        self.t_idx = np.asarray(t_idx, np.int64)  # fleet rack indices
-        nt = len(t_idx)
-        specs = [racks[r].spec for r in t_idx]
-        prms = [racks[r].thermal for r in t_idx]
-        # per-rack parameter arrays
-        self.r_die = np.array([p.r_die_c_per_w for p in prms])
-        self.c_die = np.array([p.c_die_j_per_c for p in prms])
-        self.r_pcb0 = np.array([p.r_pcb_c_per_w for p in prms])
-        self.c_pcb = np.array([p.c_pcb_j_per_c for p in prms])
-        self.t_amb = np.array([p.t_ambient_c for p in prms])
-        self.fan_low = np.array([p.fan_t_low_c for p in prms])
-        self.fan_span = np.array(
-            [max(p.fan_t_high_c - p.fan_t_low_c, 1e-9) for p in prms]
-        )
-        self.fan_rmin = np.array([p.fan_r_scale_min for p in prms])
-        self.fan_pmax = np.array([p.fan_p_max_w for p in prms])
-        self.trip = np.array([p.t_trip_c for p in prms])
-        self.release = np.array([p.t_release_c for p in prms])
-        # flat unit/group layout (racks concatenated in t_idx order)
-        unit_starts: List[int] = []
-        group_starts: List[int] = []  # group segment starts, flat pcb
-        rack_u: List[int] = []
-        rack_g: List[int] = []
-        local_idx: List[int] = []
-        group_of_u: List[int] = []
-        self.last_unit = np.zeros(nt, np.int64)
-        u0 = g0 = 0
-        for j, spec in enumerate(specs):
-            unit_starts.append(u0)
-            group_starts.append(g0)
-            groups = spec.groups()
-            for _ in groups:
-                rack_g.append(j)
-            for u in range(spec.n_units):
-                rack_u.append(j)
-                local_idx.append(u)
-                group_of_u.append(g0 + u // spec.group_size)
-            self.last_unit[j] = u0 + spec.n_units - 1
-            u0 += spec.n_units
-            g0 += len(groups)
-        self.n_flat_units = u0
-        self.unit_starts = np.asarray(unit_starts, np.int64)
-        self.group_starts = np.asarray(group_starts, np.int64)
-        self.rack_u = np.asarray(rack_u, np.int64)
-        self.rack_g = np.asarray(rack_g, np.int64)
-        self.local_idx = np.asarray(local_idx, np.int64)
-        self.group_of_u = np.asarray(group_of_u, np.int64)
-        self.t_die = self.t_amb[self.rack_u].copy()
-        self.t_pcb = self.t_amb[self.rack_g].copy()
-        self.latched = np.zeros(u0, bool)
-        # per-unit broadcasts of the per-rack constants
-        self.r_die_u = self.r_die[self.rack_u]
-        self.c_die_u = self.c_die[self.rack_u]
-        self.c_pcb_g = self.c_pcb[self.rack_g]
-        self.t_amb_g = self.t_amb[self.rack_g]
-        # thermal ceilings for governors: constant per rack, computed
-        # with the same scalar helper the pool caches
-        self.max_sustainable: List[int] = []
-        for r in t_idx:
-            tm = ThermalModel(racks[r].spec, racks[r].thermal)
-            self.max_sustainable.append(
-                tm.max_sustainable_index(racks[r].spec.unit, racks[r].opp_table)
-            )
-        self._pw = np.empty(u0, float)
+    def __init__(self, layout: ThermalLayout) -> None:
+        # static layout + RC parameters are shared with the jax engine
+        # (built once in engine_state.build_thermal_layout)
+        self.layout = layout
+        self.t_idx = layout.t_idx  # fleet rack indices
+        self.r_die = layout.r_die
+        self.c_die = layout.c_die
+        self.r_pcb0 = layout.r_pcb0
+        self.c_pcb = layout.c_pcb
+        self.t_amb = layout.t_amb
+        self.fan_low = layout.fan_low
+        self.fan_span = layout.fan_span
+        self.fan_rmin = layout.fan_rmin
+        self.fan_pmax = layout.fan_pmax
+        self.trip = layout.trip
+        self.release = layout.release
+        self.last_unit = layout.last_unit
+        self.n_flat_units = layout.n_flat_units
+        self.unit_starts = layout.unit_starts
+        self.group_starts = layout.group_starts
+        self.rack_u = layout.rack_u
+        self.rack_g = layout.rack_g
+        self.local_idx = layout.local_idx
+        self.group_of_u = layout.group_of_u
+        self.r_die_u = layout.r_die_u
+        self.c_die_u = layout.c_die_u
+        self.c_pcb_g = layout.c_pcb_g
+        self.t_amb_g = layout.t_amb_g
+        self.max_sustainable = layout.max_sustainable
+        # mutable state: per-die / per-group temperatures + trip latches
+        self.t_die = layout.t_amb[layout.rack_u].copy()
+        self.t_pcb = layout.t_amb[layout.rack_g].copy()
+        self.latched = np.zeros(layout.n_flat_units, bool)
+        self._pw = np.empty(layout.n_flat_units, float)
 
     def any_latched(self) -> bool:
         return bool(self.latched.any())
@@ -295,11 +269,6 @@ class _StackedThermal:
         return fan_w, max_temp, n_thr
 
 
-# governor kinds the stacked selection pass understands; anything else
-# falls back to a per-rack select() call with a real FreqContext
-_GOV_NONE, _GOV_FIXED, _GOV_RACE, _GOV_SCHED, _GOV_GENERIC = range(5)
-
-
 class _VectorFleetEngine:
     """Stacked engine: rack state as arrays, one numpy pass per tick.
 
@@ -331,113 +300,59 @@ class _VectorFleetEngine:
         dt_s: float,
         idle_units_off: bool,
     ) -> None:
-        for rc in racks:
-            if rc.thermal is not None and rc.opp_table is None:
-                raise AssertionError(
-                    "thermal throttling needs an opp_table to throttle within"
-                )
+        # every static per-rack array — activation policy, stacked OPP
+        # tables, governor classification, thermal layout — comes from
+        # the shared builder (also consumed by the jax engine)
+        arr = build_fleet_arrays(racks, idle_units_off)
+        self.arrays = arr
         self.dt_s = dt_s
         self.now = 0.0
-        pols = [rc.policy or ScalePolicy() for rc in racks]
-        units = [rc.spec.unit for rc in racks]
-        self.n_units = np.array([rc.spec.n_units for rc in racks], np.int64)
-        self.unit_rate = np.array([rc.unit_rate for rc in racks], float)
-        self.headroom = np.array([p.headroom for p in pols], float)
-        self.min_units = np.array([p.min_units for p in pols], np.int64)
-        self.minq = np.maximum(1, np.minimum(self.min_units, self.n_units))
-        self.cooldown = np.array([p.cooldown_s for p in pols], float)
-        self.p_shared = np.array([rc.spec.p_shared for rc in racks], float)
-        self.p_idle = np.array([u.p_idle for u in units], float)
-        self.p_peak = np.array([u.p_peak for u in units], float)
-        self.gamma = np.array([u.gamma for u in units], float)
-        self.span = self.p_peak - self.p_idle
-        self.p_base = np.array(
-            [u.p_off if idle_units_off else u.p_idle for u in units],
-            float,
-        )
+        self.n_units = arr.n_units
+        self.unit_rate = arr.unit_rate
+        self.headroom = arr.headroom
+        self.min_units = arr.min_units
+        self.minq = arr.minq
+        self.cooldown = arr.cooldown
+        self.p_shared = arr.p_shared
+        self.p_idle = arr.p_idle
+        self.p_peak = arr.p_peak
+        self.gamma = arr.gamma
+        self.span = arr.span
+        self.p_base = arr.p_base
         self.wls = [
-            QueueWorkload(rc.unit_rate, name=rc.name or f"rack{i}")
+            QueueWorkload(rc.unit_rate, name=arr.names[i])
             for i, rc in enumerate(racks)
         ]
-        n = len(racks)
+        n = arr.n_racks
         self._rr = np.arange(n)
-        # --- frequency axis: stacked OPP tables + governor classification
-        self.has_table = np.array([rc.opp_table is not None for rc in racks], bool)
-        self.K = np.array(
-            [len(rc.opp_table) if rc.opp_table is not None else 1 for rc in racks],
-            np.int64,
-        )
-        self.Kmax = int(self.K.max())
-        # (racks, opps) perf and span*power_scale tables; rows of racks
-        # without a table carry the nominal point, columns past a short
-        # table replicate its top point (masked out of every search)
-        self.perf_tab = np.ones((n, self.Kmax), float)
-        self.spk_tab = np.repeat(self.span[:, None], self.Kmax, axis=1)
-        self.opp = np.zeros(n, np.int64)
-        for r, rc in enumerate(racks):
-            tb = rc.opp_table
-            if tb is None:
-                continue
-            for c in range(self.Kmax):
-                p = tb[min(c, len(tb) - 1)]
-                self.perf_tab[r, c] = p.perf_scale
-                self.spk_tab[r, c] = self.span[r] * p.power_scale
-            self.opp[r] = tb.nominal
-        self.nominal = self.opp.copy()
-        self.highest = self.K - 1
-        # thermal stacking (before classification: ceilings come from it)
-        t_idx = [r for r, rc in enumerate(racks) if rc.thermal is not None]
+        self.has_table = arr.has_table
+        self.K = arr.K
+        self.Kmax = arr.Kmax
+        self.perf_tab = arr.perf_tab
+        self.spk_tab = arr.spk_tab
+        self.opp = arr.opp0.copy()
+        self.nominal = arr.nominal
+        self.highest = arr.highest
         self.therm: Optional[_StackedThermal] = (
-            _StackedThermal(racks, t_idx) if t_idx else None
+            _StackedThermal(arr.thermal) if arr.thermal is not None else None
         )
-        self.t_idx = np.asarray(t_idx, np.int64)
-        max_sust: List[Optional[int]] = [None] * n
-        if self.therm is not None:
-            for j, r in enumerate(t_idx):
-                max_sust[r] = self.therm.max_sustainable[j]
-        # classify each rack's governor for the stacked selection pass
-        self._gov_kind = np.full(n, _GOV_NONE, np.int64)
-        self._fixed_opp = np.zeros(n, np.int64)
-        self._sched_headroom = np.zeros(n, float)
-        self._ceiling = self.highest.copy()  # thermal-aware clamp
-        self._has_ceiling = np.zeros(n, bool)
-        self._generic: List[Tuple[int, object]] = []
-        self._tables = [rc.opp_table for rc in racks]
-        self._unit_specs = units
-        self._max_sust = max_sust
-        for r, (rc, pol) in enumerate(zip(racks, pols)):
-            gov = pol.freq_governor
-            tb = rc.opp_table
-            if tb is None or gov is None:
-                continue  # frequency axis off / pinned at nominal
-            inner = gov
-            if type(gov) is ThermalAwareGovernor:
-                inner = gov.inner
-                if max_sust[r] is not None:
-                    self._ceiling[r] = max_sust[r]
-                    self._has_ceiling[r] = True
-            if type(inner) is FixedFreqGovernor:
-                self._gov_kind[r] = _GOV_FIXED
-                self._fixed_opp[r] = (
-                    tb.highest if inner.index is None else tb.clamp(inner.index)
-                )
-            elif type(inner) is RaceToIdleGovernor:
-                self._gov_kind[r] = _GOV_RACE
-            elif type(inner) is SchedutilGovernor:
-                self._gov_kind[r] = _GOV_SCHED
-                self._sched_headroom[r] = (
-                    inner.headroom if inner.headroom is not None else pol.headroom
-                )
-            else:
-                self._gov_kind[r] = _GOV_GENERIC
-                self._generic.append((r, gov))
-        self._fixed_idx = np.nonzero(self._gov_kind == _GOV_FIXED)[0]
-        self._race_idx = np.nonzero(self._gov_kind == _GOV_RACE)[0]
-        self._sched_idx = np.nonzero(self._gov_kind == _GOV_SCHED)[0]
+        self.t_idx = arr.t_idx
+        self._gov_kind = arr.gov_kind
+        self._fixed_opp = arr.fixed_opp
+        self._sched_headroom = arr.sched_headroom
+        self._ceiling = arr.ceiling
+        self._has_ceiling = arr.has_ceiling
+        self._generic = arr.generic
+        self._tables = arr.tables
+        self._unit_specs = arr.unit_specs
+        self._max_sust = arr.max_sust
+        self._fixed_idx = np.nonzero(arr.gov_kind == GOV_FIXED)[0]
+        self._race_idx = np.nonzero(arr.gov_kind == GOV_RACE)[0]
+        self._sched_idx = np.nonzero(arr.gov_kind == GOV_SCHED)[0]
         # hedging config (None = off), per rack
-        self._hedge_deadline = [p.hedge_after_s for p in pols]
+        self._hedge_deadline = arr.hedge_deadline
         self.backlog = np.zeros(n, bool)
-        self.active = self.minq.copy()
+        self.active = arr.minq.copy()
         self.last_down = np.full(n, -1e9)
         self.scale_events = np.zeros(n, np.int64)
         self.hedged_cnt = np.zeros(n, np.int64)
@@ -735,14 +650,22 @@ class Fleet:
         self.router = router or JoinShortestQueueRouter()
         self.dt_s = dt_s
         self.backend = backend
+        self.engine: Any
         if backend == "scalar":
             self.engine = _ScalarFleetEngine(self.racks, dt_s, idle_units_off)
         elif backend == "vector":
             self.engine = _VectorFleetEngine(self.racks, dt_s, idle_units_off)
+        elif backend == "jax":
+            # deferred import: jax is optional for the other backends
+            from repro.fleet.jax_engine import _JaxFleetEngine
+
+            self.engine = _JaxFleetEngine(
+                self.racks, dt_s, idle_units_off, self.router
+            )
         else:
             raise ValueError(
                 f"unknown fleet backend {backend!r}; "
-                "use 'scalar' or 'vector'"
+                "use 'scalar', 'vector', or 'jax'"
             )
         self._capacity = np.array(
             [rc.spec.n_units * rc.unit_rate for rc in self.racks], float
@@ -806,6 +729,26 @@ class Fleet:
         dt = self.dt_s
         trace = np.asarray(trace_rps, float)
         t0 = time.perf_counter()
+        if hasattr(self.engine, "play"):
+            # jax engine: routing happens in-scan, the whole trace plus
+            # drain runs as one jitted program
+            assigned, queued_rows, n_drain, jdrained = self.engine.play(
+                trace, drain=drain
+            )
+            for i, rps in enumerate(trace):
+                self._offered.append(float(rps))
+                self._assigned.append(np.asarray(assigned[i], float))
+            for j in range(n_drain):
+                self._offered.append(0.0)
+                self._assigned.append(
+                    np.asarray(assigned[len(trace) + j], float)
+                )
+            for row in queued_rows:
+                self._queued_rows.append(np.asarray(row, np.int64))
+            if jdrained is not None:
+                self._drained = bool(jdrained)
+            self._wall_s += time.perf_counter() - t0
+            return self._build_telemetry()
         zero = np.zeros(self.n_racks)
         queued = conc = None
         for rps in trace:

@@ -1,0 +1,1313 @@
+"""JAX fleet engine: one jitted ``lax.scan`` per trace, ``vmap`` sweeps.
+
+Third fleet backend (``Fleet(backend="jax")``). The whole per-tick
+pipeline of the vector engine — branchless masked routing, the
+``fixed`` / ``race-to-idle`` / ``schedutil`` / thermal-aware-clamp
+governor passes, activation targets with cooldown, straggler hedging,
+the fluid FIFO drain, ``UnitPool.charge`` power accounting, and the
+stacked RC thermal Euler substeps — is a pure
+``(state, traffic_t) -> (state, telemetry_t)`` function driven by
+``jax.lax.scan`` and jitted once. On top, :func:`sweep` ``vmap``\\ s the
+program over a stacked config axis (router choice, governor scalars,
+rack-mix scalars) and shards the batch across host devices with
+``pmap`` when ``--xla_force_host_platform_device_count`` exposes more
+than one (see ``repro.config.set_host_device_count``).
+
+Parity contract — **tolerance, not bitwise**. The scalar engine is the
+oracle and the numpy vector engine matches it bitwise; this engine
+reproduces the same arithmetic but XLA may fuse (FMA), reassociate
+pairwise reductions, and schedule segment ops differently, so its
+telemetry is compared against the vector engine under documented
+rtol/atol bounds (``tests/test_jax_parity.py``). Float64 is mandatory:
+every entry point runs inside ``jax.experimental.enable_x64`` — in
+default float32 the drain recurrence loses request mass far beyond
+those bounds.
+
+Two tricks make the scan exact where it matters:
+
+* the fluid FIFO collapses to a three-term recurrence per rack —
+  pending cost ``B``, cumulative submitted cost ``A``, cumulative
+  effective served ``S`` (``S`` snaps to ``A`` whenever a queue
+  empties, mirroring the per-request 1e-12 forgiveness of
+  ``QueueWorkload``) — and request-level completions/latencies are
+  reconstructed on the host from the emitted per-tick ``(work, S,
+  cap, perf)`` rows, with the same boundary semantics as the queue's
+  pop rule;
+* traces run in fixed-size blocks of :data:`_BLOCK` ticks with a
+  per-tick ``live`` mask (dead ticks pass the carry through), so one
+  compiled program serves every trace length and the post-trace drain:
+  when the first fully-idle drain tick is found mid-block the block is
+  re-run with the mask cut at that tick, landing the carry exactly on
+  the inclusive stop tick — ``play_trace`` can then continue the same
+  simulation, like the other engines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import (
+    TYPE_CHECKING,
+    Any,
+    Dict,
+    List,
+    NamedTuple,
+    Optional,
+    Sequence,
+    Tuple,
+)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.fleet.engine_state import (
+    GOV_FIXED,
+    GOV_RACE,
+    GOV_SCHED,
+    FleetArrays,
+    build_fleet_arrays,
+)
+from repro.runtime import Telemetry, latency_percentiles
+from repro.runtime.result import Response
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.fleet.fleet import RackConfig
+
+__all__ = ["ROUTER_KINDS", "SweepConfig", "sweep"]
+
+#: branchless router selector values (params["router_kind"])
+ROUTER_KINDS = {"round-robin": 0, "join-shortest-queue": 1, "power-aware": 2}
+
+#: the fluid queue's per-request forgiveness (QueueWorkload pop rule)
+_EPS = 1e-12
+
+#: relative forgiveness for cumulative-axis comparisons: the carried S
+#: (effective served) and the submission prefix sum A are two different
+#: float summation orders of the same history, so after an overload
+#: episode they drift apart by ~eps(|A|) — far above the absolute _EPS
+#: once A reaches ~1e6 cost units. Completion tests along the cumulative
+#: axis therefore forgive 1e-12 relative on top of the absolute floor
+#: (still orders of magnitude below any real per-request cost).
+_REL = 1e-12
+
+
+def _cum_tol(x: Any) -> Any:
+    """Forgiveness for comparisons between cumulative served/submitted
+    totals (absolute floor + relative term, see ``_REL``)."""
+    return _EPS + _REL * abs(x)
+
+#: scan block size: one compiled program serves any trace length
+_BLOCK = 128
+
+
+class _Dims(NamedTuple):
+    """Static (hashable) shape info baked into the compiled program."""
+
+    kmax: int
+    has_thermal: bool
+    nt: int
+    n_groups: int
+    max_sub: int
+    hedge_on: bool
+
+
+# ---------------------------------------------------------------------------
+# pure per-tick pipeline (everything below runs under jit)
+
+
+def _route(params: Dict[str, Any], queued: Any, total: Any, dt: Any) -> Any:
+    """All three routers, computed branchlessly and selected by
+    ``params["router_kind"]`` — which is what lets a vmapped sweep give
+    every config its own router. Mirrors ``repro.fleet.router``."""
+    cap = params["capacity_rps"]
+    n = cap.shape[0]
+    rk = params["router_kind"]
+    # round-robin: uniform spread
+    rr = jnp.full(n, total / n)
+    # join-shortest-queue: water-fill on expected queueing delay
+    capm = jnp.maximum(cap, 1e-12)
+    work = total * dt
+    delay = queued / capm
+    order = jnp.argsort(delay, stable=True)
+    d = jnp.take(delay, order)
+    c = jnp.take(capm, order)
+    q = jnp.take(queued, order)
+    levels = (work + jnp.cumsum(q)) / jnp.cumsum(c)  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum; jax engine is tolerance-compared, not bitwise
+    feasible = jnp.where(levels >= d, jnp.arange(n), -1)
+    idx = jnp.max(feasible)
+    level = jnp.where(idx < 0, levels[0], levels[jnp.maximum(idx, 0)])
+    jsq = jnp.maximum(0.0, cap * level - queued) / dt
+    # power-aware: pack the cheapest (J/request) racks first
+    porder = params["pa_order"]
+    capo = jnp.take(cap, porder)
+    setpoint = capo * params["pa_util_target"]
+
+    def greedy(tot: Any, budget: Any) -> Any:
+        before = jnp.concatenate(
+            [jnp.zeros(1), jnp.cumsum(budget)[:-1]]  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum mirrors PowerAwareRouter._greedy
+        )
+        return jnp.clip(tot - before, 0.0, budget)
+
+    take = greedy(total, setpoint)
+    rem = total - jnp.sum(take)  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
+    take = take + jnp.where(rem > 1e-12, greedy(rem, capo - take), 0.0)
+    rem2 = total - jnp.sum(take)  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
+    spread = rem2 * capo / jnp.sum(capo)  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
+    take = take + jnp.where(rem2 > 1e-12, spread, 0.0)
+    pa = jnp.zeros(n).at[porder].set(take)
+    assign = jnp.where(rk == 0, rr, jnp.where(rk == 1, jsq, pa))
+    # every router hands out nothing when there is no offered load
+    return jnp.where(total > 0.0, assign, jnp.zeros(n))
+
+
+def _select_opps(
+    params: Dict[str, Any], dims: _Dims, opp: Any, backlog: Any, rate: Any
+) -> Any:
+    """Branchless twin of ``_VectorFleetEngine._select_opps`` (which
+    itself mirrors the scalar governors)."""
+    gk = params["gov_kind"]
+    opp = jnp.where(gk == GOV_FIXED, params["fixed_opp"], opp)
+    busy = (rate > 0.0) | backlog
+    opp = jnp.where(
+        gk == GOV_RACE,
+        jnp.where(busy, params["highest"], params["nominal"]),
+        opp,
+    )
+    # schedutil: lowest-energy OPP x unit-count search over the OPP axis
+    need = rate * params["sched_headroom"]
+    pos = need > 0.0
+    best = params["highest"]
+    bestp = jnp.full(rate.shape[0], jnp.inf)
+    for c in range(dims.kmax):
+        eff = params["unit_rate"] * params["perf_tab"][:, c]
+        ncnt = jnp.maximum(params["min_units"], jnp.ceil(need / eff)).astype(
+            jnp.int64
+        )
+        util = jnp.minimum(1.0, rate / (jnp.maximum(ncnt, 1) * eff))
+        power = (
+            ncnt * (params["p_idle"] + params["spk_tab"][:, c] * util ** params["gamma"])
+            + (params["n_units"] - ncnt) * params["p_base"]
+        )
+        upd = (
+            (c < params["K"])
+            & (ncnt <= params["n_units"])
+            & pos
+            & (power < bestp - 1e-12)
+        )
+        best = jnp.where(upd, c, best)
+        bestp = jnp.where(upd, power, bestp)
+    opp = jnp.where(gk == GOV_SCHED, jnp.where(pos, best, 0), opp)
+    # thermal-aware ceiling clamps whatever the inner governor picked
+    return jnp.where(
+        params["has_ceiling"], jnp.minimum(opp, params["ceiling"]), opp
+    )
+
+
+def _thermal_step(
+    params: Dict[str, Any],
+    dims: _Dims,
+    t_die: Any,
+    t_pcb: Any,
+    latched: Any,
+    pw: Any,
+    dt: Any,
+) -> Tuple[Any, Any, Any, Any, Any, Any]:
+    """Stacked RC Euler step (twin of ``_StackedThermal.step``). The
+    per-rack sub-step counts are data-dependent, so a ``fori_loop``
+    runs to the static worst case (``ThermalLayout.max_substeps``) with
+    per-rack live masks — masked racks add exact zeros."""
+    rack_u = params["th_rack_u"]
+    rack_g = params["th_rack_g"]
+    group_of_u = params["th_group_of_u"]
+    hottest = jax.ops.segment_max(t_pcb, rack_g, num_segments=dims.nt)
+    raw_frac = (hottest - params["th_fan_low"]) / params["th_fan_span"]
+    frac = jnp.clip(raw_frac, 0.0, 1.0)
+    r_pcb = params["th_r_pcb0"] * (1.0 - (1.0 - params["th_fan_rmin"]) * frac)
+    tau = jnp.minimum(
+        params["th_r_die"] * params["th_c_die"], r_pcb * params["th_c_pcb"]
+    )
+    denom = jnp.maximum(0.25 * tau, 1e-6)
+    n_sub = jnp.maximum(1, (dt / denom).astype(jnp.int64) + 1)
+    hh = dt / n_sub
+    h_u = jnp.take(hh, rack_u)
+    h_g = jnp.take(hh, rack_g)
+    r_pcb_g = jnp.take(r_pcb, rack_g)
+    n_sub_u = jnp.take(n_sub, rack_u)
+    n_sub_g = jnp.take(n_sub, rack_g)
+
+    def body(s: Any, st: Tuple[Any, Any]) -> Tuple[Any, Any]:
+        td, tp = st
+        f = (td - jnp.take(tp, group_of_u)) / params["th_r_die_u"]
+        flows = jax.ops.segment_sum(f, group_of_u, num_segments=dims.n_groups)
+        d_die = h_u * (pw - f) / params["th_c_die_u"]
+        out = (tp - params["th_t_amb_g"]) / r_pcb_g
+        d_pcb = h_g * (flows - out) / params["th_c_pcb_g"]
+        td = td + jnp.where(s < n_sub_u, d_die, 0.0)
+        tp = tp + jnp.where(s < n_sub_g, d_pcb, 0.0)
+        return (td, tp)
+
+    t_die, t_pcb = jax.lax.fori_loop(0, dims.max_sub, body, (t_die, t_pcb))
+    trip_u = jnp.take(params["th_trip"], rack_u)
+    rel_u = jnp.take(params["th_release"], rack_u)
+    new_latched = jnp.where(latched, ~(t_die <= rel_u), t_die >= trip_u)
+    fan_w = params["th_fan_pmax"] * frac
+    max_temp = jax.ops.segment_max(t_die, rack_u, num_segments=dims.nt)
+    n_thr = jax.ops.segment_sum(
+        new_latched.astype(jnp.int64), rack_u, num_segments=dims.nt
+    )
+    return t_die, t_pcb, new_latched, fan_w, max_temp, n_thr
+
+
+def _step(
+    params: Dict[str, Any], dims: _Dims, carry: Dict[str, Any], x: Dict[str, Any]
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """One fleet tick. ``x["live"]`` masks the whole tick (dead ticks
+    pass the carry through unchanged); ``x["is_trace"]`` marks trace
+    ticks (only those append to the hedge submission ring)."""
+    dt = params["dt"]
+    live = x["live"]
+    t = carry["t"]
+    B = carry["B"]
+    A = carry["A"]
+    S = carry["S"]
+    total = x["rps"] * params["trace_scale"]
+    assign = _route(params, B, total, dt)
+    work = assign * dt
+    rate = work / dt
+    # frequency governors pick this tick's OPP (window_s == dt_s)
+    opp = _select_opps(params, dims, carry["opp"], carry["backlog"], rate)
+    perf_req = jnp.take_along_axis(params["perf_tab"], opp[:, None], axis=1)[:, 0]
+    perf_sz = jnp.where(params["has_table"], perf_req, 1.0)
+    # UnitGovernor.target_units / apply_target with group == 1
+    need = rate * params["headroom"] / (
+        params["unit_rate"] * jnp.maximum(perf_sz, 1e-9)
+    )
+    raw = jnp.minimum(
+        params["n_units"], jnp.maximum(params["min_units"], jnp.ceil(need))
+    )
+    tgt = jnp.maximum(1, raw.astype(jnp.int64))
+    active = carry["active"]
+    up = tgt > active
+    keep_n = jnp.maximum(params["minq"], tgt)
+    in_cooldown = t - carry["last_down"] > params["cooldown"]
+    down = (tgt < active) & in_cooldown & (keep_n < active)
+    new_active = jnp.where(up, tgt, jnp.where(down, keep_n, active))
+    scale = up.astype(jnp.int64) + down.astype(jnp.int64)
+    scale_events = carry["scale_events"] + scale
+    last_down = jnp.where(down, t, carry["last_down"])
+    k_f = new_active.astype(jnp.float64)
+    # mean perf-scale over active units; trip-latched dies dragged to
+    # the floor OPP (pool.perf_scale / _perf_from_opp_counts)
+    perf_used = jnp.where(params["has_table"], (k_f * perf_req) / k_f, 1.0)
+    if dims.has_thermal:
+        ti = params["t_idx"]
+        rack_u = params["th_rack_u"]
+        latched = carry["latched"]
+        am = params["th_local_idx"] < jnp.take(new_active, ti)[rack_u]
+        lam = (am & latched).astype(jnp.int64)
+        c_low_t = jax.ops.segment_sum(lam, rack_u, num_segments=dims.nt)
+        c_low_f = c_low_t.astype(jnp.float64)
+        k_t = jnp.take(k_f, ti)
+        p0 = jnp.take(params["perf_tab"][:, 0], ti)
+        pr = jnp.take(perf_req, ti)
+        floor_all = (jnp.take(opp, ti) == 0) & (c_low_t > 0)
+        mixed = c_low_f * p0 + (k_t - c_low_f) * pr
+        perf_used = perf_used.at[ti].set(
+            jnp.where(floor_all, k_t * p0, mixed) / k_t
+        )
+    # straggler hedging: the submission ring carries (cumulative cost,
+    # arrival) per trace tick; the head request is the first submission
+    # not yet fully served (searchsorted past S + forgiveness)
+    arrival_t = t + 0.5 * dt
+    A_new = A + work
+    if dims.hedge_on:
+        wmask = x["is_trace"] & live
+        ptr = carry["ptr"]
+        A_buf = carry["A_buf"]
+        arr_buf = carry["arr_buf"]
+        A_buf = A_buf.at[:, ptr].set(jnp.where(wmask, A_new, A_buf[:, ptr]))
+        arr_buf = arr_buf.at[:, ptr].set(
+            jnp.where(wmask, arrival_t, arr_buf[:, ptr])
+        )
+        new_ptr = ptr + wmask.astype(jnp.int64)
+        head = jax.vmap(
+            lambda row, key: jnp.searchsorted(row, key, side="right")
+        )(A_buf, S + _cum_tol(S))
+        hidx = jnp.minimum(head, jnp.maximum(new_ptr - 1, 0))
+        head_arrival = jnp.take_along_axis(arr_buf, hidx[:, None], axis=1)[:, 0]
+        age = jnp.maximum(0.0, t - head_arrival)
+        pending = (B + work) > 0.0
+        h = (
+            pending
+            & (age > params["hedge_deadline"])
+            & (new_active < params["n_units"])
+        ).astype(jnp.int64)
+    else:
+        h = jnp.zeros_like(new_active)
+    hedged = carry["hedged"] + h
+    # fluid FIFO drain (QueueWorkload.step_fast collapsed to B/A/S)
+    cap = (
+        jnp.maximum(new_active + h, 0).astype(jnp.float64)
+        * params["unit_rate"]
+        * dt
+        * jnp.maximum(perf_used, 0.0)
+    )
+    Bw = B + work
+    empty = Bw <= cap + _EPS
+    used = jnp.where(empty, Bw, cap)
+    B_new = jnp.where(empty, 0.0, Bw - cap)
+    S_new = jnp.where(empty, S + Bw, S + cap)
+    cap_safe = jnp.where(cap > 0.0, cap, 1.0)
+    util = jnp.where(cap > 0.0, used / cap_safe, 0.0)
+    backlog = B_new > 0.0
+    served = carry["served"] + used
+    # UnitPool.charge: active units at the rack's OPP (latched dies at
+    # the floor), the borrowed hedge unit at the requested point, the
+    # rest at the gated floor
+    u = jnp.clip(util, 0.0, 1.0)
+    ug = u ** params["gamma"]
+    spk_req = jnp.take_along_axis(params["spk_tab"], opp[:, None], axis=1)[:, 0]
+    w_req = params["p_idle"] + spk_req * ug
+    h_f = h.astype(jnp.float64)
+    powered = new_active + h
+    powered_f = powered.astype(jnp.float64)
+    p_act = k_f * w_req
+    fan_w = jnp.zeros(w_req.shape[0])
+    if dims.has_thermal:
+        w_low = params["p_idle"] + params["spk_tab"][:, 0] * ug
+        w_low_t = jnp.take(w_low, ti)
+        w_req_t = jnp.take(w_req, ti)
+        mixed_w = c_low_f * w_low_t + (k_t - c_low_f) * w_req_t
+        p_act = p_act.at[ti].set(jnp.where(floor_all, k_t * w_low_t, mixed_w))
+        pw = jnp.take(params["p_base"], ti)[rack_u]
+        pw = jnp.where(am, w_req_t[rack_u], pw)
+        pw = jnp.where(am & latched, w_low_t[rack_u], pw)
+        last_u = params["th_last_unit"]
+        pw = pw.at[last_u].set(
+            jnp.where(jnp.take(h, ti) > 0, w_req_t, pw[last_u])
+        )
+        t_die, t_pcb, new_latched, fan_t, temp_t, thr_t = _thermal_step(
+            params, dims, carry["t_die"], carry["t_pcb"], latched, pw, dt
+        )
+        fan_w = fan_w.at[ti].set(fan_t)
+    p_units = jnp.where(
+        params["has_table"], p_act + h_f * w_req, powered_f * w_req
+    )
+    p_rest = (params["n_units"] - powered).astype(jnp.float64) * params["p_base"]
+    total_w = params["p_shared"] + fan_w + p_units + p_rest
+    energy = carry["energy"] + total_w * dt
+    unit_energy = carry["unit_energy"] + p_units * dt
+    pf_safe = jnp.where(powered_f > 0.0, powered_f, 1.0)
+    util_agg = jnp.where(powered_f > 0.0, powered_f * u / pf_safe, 0.0)
+
+    def keep(new: Any, old: Any) -> Any:
+        return jnp.where(live, new, old)
+
+    new_carry: Dict[str, Any] = {
+        "t": keep(t + dt, t),
+        "B": keep(B_new, B),
+        "A": keep(A_new, A),
+        "S": keep(S_new, S),
+        "opp": keep(opp, carry["opp"]),
+        "backlog": keep(backlog, carry["backlog"]),
+        "active": keep(new_active, active),
+        "last_down": keep(last_down, carry["last_down"]),
+        "scale_events": keep(scale_events, carry["scale_events"]),
+        "hedged": keep(hedged, carry["hedged"]),
+        "energy": keep(energy, carry["energy"]),
+        "unit_energy": keep(unit_energy, carry["unit_energy"]),
+        "served": keep(served, carry["served"]),
+    }
+    if dims.has_thermal:
+        new_carry["t_die"] = keep(t_die, carry["t_die"])
+        new_carry["t_pcb"] = keep(t_pcb, carry["t_pcb"])
+        new_carry["latched"] = keep(new_latched, latched)
+    if dims.hedge_on:
+        new_carry["A_buf"] = keep(A_buf, carry["A_buf"])
+        new_carry["arr_buf"] = keep(arr_buf, carry["arr_buf"])
+        new_carry["ptr"] = keep(new_ptr, carry["ptr"])
+    ys: Dict[str, Any] = {
+        "assign": assign,
+        "rate": rate,
+        "work": work,
+        "empty": empty,
+        "used": used,
+        "S": S_new,
+        "cap": cap,
+        "perf": perf_used,
+        "active": powered,
+        "power": total_w,
+        "util": util_agg,
+        "hedge": h,
+        "scale": scale,
+    }
+    if dims.has_thermal:
+        ys["fan"] = fan_t
+        ys["temp"] = temp_t
+        ys["thr"] = thr_t
+    return new_carry, ys
+
+
+def _scan_steps(
+    params: Dict[str, Any],
+    carry: Dict[str, Any],
+    xs: Dict[str, Any],
+    dims: _Dims,
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    def f(c: Dict[str, Any], x: Dict[str, Any]) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        return _step(params, dims, c, x)
+
+    return jax.lax.scan(f, carry, xs)
+
+
+_RUN = jax.jit(_scan_steps, static_argnames=("dims",))
+
+
+# ---------------------------------------------------------------------------
+# static params / carry builders (shared by the engine and sweep())
+
+
+def _full_load_j_per_req(racks: "Sequence[RackConfig]") -> np.ndarray:
+    """Same ranking key ``Fleet`` publishes to the PowerAwareRouter."""
+    return np.array(
+        [
+            (rc.spec.p_shared + rc.spec.n_units * rc.spec.unit.power(1.0))
+            / (rc.spec.n_units * rc.unit_rate)
+            for rc in racks
+        ],
+        float,
+    )
+
+
+def _base_params(
+    arr: FleetArrays, dt_s: float, jpr: np.ndarray
+) -> Dict[str, Any]:
+    p: Dict[str, Any] = {
+        "dt": float(dt_s),
+        "trace_scale": 1.0,
+        "router_kind": np.int64(ROUTER_KINDS["join-shortest-queue"]),
+        "pa_util_target": 0.85,
+        "pa_order": np.argsort(jpr, kind="stable"),
+        "capacity_rps": arr.n_units.astype(float) * arr.unit_rate,
+        "n_units": arr.n_units,
+        "unit_rate": arr.unit_rate,
+        "headroom": arr.headroom,
+        "min_units": arr.min_units,
+        "minq": arr.minq,
+        "cooldown": arr.cooldown,
+        "p_shared": arr.p_shared,
+        "p_idle": arr.p_idle,
+        "gamma": arr.gamma,
+        "p_base": arr.p_base,
+        "has_table": arr.has_table,
+        "K": arr.K,
+        "perf_tab": arr.perf_tab,
+        "spk_tab": arr.spk_tab,
+        "nominal": arr.nominal,
+        "highest": arr.highest,
+        "gov_kind": arr.gov_kind,
+        "fixed_opp": arr.fixed_opp,
+        "sched_headroom": arr.sched_headroom,
+        "ceiling": arr.ceiling,
+        "has_ceiling": arr.has_ceiling,
+        "hedge_deadline": np.array(
+            [np.inf if dl is None else float(dl) for dl in arr.hedge_deadline]
+        ),
+    }
+    th = arr.thermal
+    if th is not None:
+        p.update(
+            t_idx=th.t_idx,
+            th_rack_u=th.rack_u,
+            th_rack_g=th.rack_g,
+            th_group_of_u=th.group_of_u,
+            th_local_idx=th.local_idx,
+            th_last_unit=th.last_unit,
+            th_r_die=th.r_die,
+            th_c_die=th.c_die,
+            th_r_pcb0=th.r_pcb0,
+            th_c_pcb=th.c_pcb,
+            th_t_amb_g=th.t_amb_g,
+            th_fan_low=th.fan_low,
+            th_fan_span=th.fan_span,
+            th_fan_rmin=th.fan_rmin,
+            th_fan_pmax=th.fan_pmax,
+            th_trip=th.trip,
+            th_release=th.release,
+            th_r_die_u=th.r_die_u,
+            th_c_die_u=th.c_die_u,
+            th_c_pcb_g=th.c_pcb_g,
+        )
+    return p
+
+
+def _make_dims(arr: FleetArrays, dt_s: float, hedge_on: bool) -> _Dims:
+    th = arr.thermal
+    return _Dims(
+        kmax=int(arr.Kmax),
+        has_thermal=th is not None,
+        nt=0 if th is None else int(len(th.t_idx)),
+        n_groups=0 if th is None else th.n_groups,
+        max_sub=0 if th is None else th.max_substeps(dt_s),
+        hedge_on=hedge_on,
+    )
+
+
+def _fresh_carry(arr: FleetArrays, hedge_on: bool, tbuf: int) -> Dict[str, Any]:
+    n = arr.n_racks
+    c: Dict[str, Any] = {
+        "t": np.float64(0.0),
+        "B": np.zeros(n),
+        "A": np.zeros(n),
+        "S": np.zeros(n),
+        "opp": arr.opp0.copy(),
+        "backlog": np.zeros(n, bool),
+        "active": arr.minq.copy(),
+        "last_down": np.full(n, -1e9),
+        "scale_events": np.zeros(n, np.int64),
+        "hedged": np.zeros(n, np.int64),
+        "energy": np.zeros(n),
+        "unit_energy": np.zeros(n),
+        "served": np.zeros(n),
+    }
+    th = arr.thermal
+    if th is not None:
+        c["t_die"] = th.t_amb[th.rack_u].copy()
+        c["t_pcb"] = th.t_amb[th.rack_g].copy()
+        c["latched"] = np.zeros(th.n_flat_units, bool)
+    if hedge_on:
+        c["A_buf"] = np.full((n, tbuf), np.inf)
+        c["arr_buf"] = np.full((n, tbuf), np.inf)
+        c["ptr"] = np.int64(0)
+    return c
+
+
+def _host_rows(ys: Any, n: int) -> Dict[str, np.ndarray]:
+    host = jax.device_get(ys)
+    return {k: np.asarray(v)[:n] for k, v in host.items()}
+
+
+# ---------------------------------------------------------------------------
+# host-side request reconstruction (completions / latencies / queue depth)
+
+
+def _completions(
+    work_col: np.ndarray, s_col: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-rack submission ticks, cumulative-cost tails, and completion
+    ticks. Submission ``k`` (one fluid request per work-carrying tick)
+    completes at the first tick whose cumulative effective served ``S``
+    reaches its cumulative cost tail, minus the cumulative-axis
+    forgiveness (``_cum_tol`` — the pop rule of ``QueueWorkload``,
+    widened to relative because ``a`` and ``s_col`` are different float
+    summation orders of the same history). A completion index of
+    ``len(s_col)`` means "still queued"."""
+    a = np.cumsum(work_col)  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum replays the device carry's sequential adds
+    sub = np.nonzero(work_col > 0.0)[0]
+    a_sub = a[sub]
+    j = np.searchsorted(s_col, a_sub - _cum_tol(a_sub), side="left")
+    return sub, a_sub, j
+
+
+def _queued_for_rack(work_col: np.ndarray, s_col: np.ndarray) -> np.ndarray:
+    """End-of-tick queued request count per tick (len(queue) twin)."""
+    t_all = len(work_col)
+    sub, _, j = _completions(work_col, s_col)
+    diff = np.zeros(t_all + 1, np.int64)
+    np.add.at(diff, sub, 1)
+    np.add.at(diff, np.minimum(j, t_all), -1)
+    return np.cumsum(diff[:-1])  # reprolint: ok[RPL001] jax tolerance-parity: int64 prefix sum, exact in any order
+
+
+def _responses_for_rack(
+    ts: np.ndarray,
+    dt: float,
+    work_col: np.ndarray,
+    s_col: np.ndarray,
+    cap_col: np.ndarray,
+    perf_col: np.ndarray,
+    unit_rate: float,
+) -> List[Response]:
+    """Rebuild the rack's :class:`Response` list from emitted rows,
+    with ``QueueWorkload.step_fast``'s finish-time arithmetic."""
+    sub, a_sub, j = _completions(work_col, s_col)
+    t_all = len(ts)
+    done: List[Tuple[int, int, Response]] = []
+    for k in range(len(sub)):
+        jj = int(j[k])
+        if jj >= t_all:
+            continue  # never completed (undrained overload)
+        arrival = float(ts[sub[k]]) + 0.5 * dt
+        cap_j = float(cap_col[jj])
+        s_prev = float(s_col[jj - 1]) if jj > 0 else 0.0
+        if cap_j > 0.0:
+            frac = min(float(a_sub[k]) - s_prev, cap_j) / cap_j
+        else:
+            frac = 1.0
+        service_s = 1.0 / (unit_rate * max(float(perf_col[jj]), 1e-9))
+        finish = max(float(ts[jj]) + frac * dt, arrival + service_s)
+        done.append(
+            (jj, k, Response(rid=k, arrival_s=arrival, finish_s=finish))
+        )
+    done.sort(key=lambda it: (it[0], it[1]))  # completion order, FIFO in-tick
+    return [resp for _, _, resp in done]
+
+
+class _ThermalState:
+    """Host mirror of the stacked RC state (what the sanitizer reads)."""
+
+    def __init__(self, layout: Any) -> None:
+        self.layout = layout
+        self.t_die = layout.t_amb[layout.rack_u].copy()
+        self.t_pcb = layout.t_amb[layout.rack_g].copy()
+        self.latched = np.zeros(layout.n_flat_units, bool)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+
+
+class _JaxFleetEngine:
+    """Block-scanned jit engine behind ``Fleet(backend="jax")``.
+
+    Holds all mutable simulation state on the host between ``play``
+    calls (so ``play_trace`` composes cumulatively like the other
+    engines) and runs each call as jitted ``lax.scan`` blocks. Routing
+    happens *in-scan* — the fleet's router object is only used to pick
+    the branchless router kind, so only the built-in routers (and
+    built-in governors) are supported; anything else must use
+    ``backend="vector"``.
+    """
+
+    backend = "jax"
+
+    def __init__(
+        self,
+        racks: "Sequence[RackConfig]",
+        dt_s: float,
+        idle_units_off: bool,
+        router: Any,
+    ) -> None:
+        arr = build_fleet_arrays(racks, idle_units_off)
+        if arr.generic:
+            kinds = sorted({type(g).__name__ for _, g in arr.generic})
+            raise ValueError(
+                "backend='jax' compiles the governor passes and only "
+                "supports the built-in governors (fixed / race-to-idle "
+                f"/ schedutil / thermal-aware); got {kinds} — use "
+                "backend='vector' for generic governors"
+            )
+        rname = getattr(router, "name", type(router).__name__)
+        if rname not in ROUTER_KINDS:
+            raise ValueError(
+                "backend='jax' routes in-scan and only knows "
+                f"{sorted(ROUTER_KINDS)}; got router {rname!r} — use "
+                "backend='vector' for custom routers"
+            )
+        self.arrays = arr
+        self.dt_s = float(dt_s)
+        self.now = 0.0
+        self.n_racks = arr.n_racks
+        # sanitizer-facing static surface
+        self.K = arr.K
+        self.has_table = arr.has_table
+        self._params = _base_params(arr, dt_s, _full_load_j_per_req(racks))
+        self._params["router_kind"] = np.int64(ROUTER_KINDS[rname])
+        self._params["pa_util_target"] = float(
+            getattr(router, "util_target", 0.85)
+        )
+        self._hedge_any = arr.any_hedge
+        # mutable per-rack state (mirrors _fresh_carry)
+        n = arr.n_racks
+        self._B = np.zeros(n)
+        self._A = np.zeros(n)
+        self._S = np.zeros(n)
+        self.opp = arr.opp0.copy()
+        self._backlog = np.zeros(n, bool)
+        self.active = arr.minq.copy()
+        self._last_down = np.full(n, -1e9)
+        self.scale_events = np.zeros(n, np.int64)
+        self.hedged_cnt = np.zeros(n, np.int64)
+        self.energy = np.zeros(n)
+        self.unit_energy = np.zeros(n)
+        self.served_acc = np.zeros(n)
+        self.therm: Optional[_ThermalState] = (
+            _ThermalState(arr.thermal) if arr.thermal is not None else None
+        )
+        self._A_buf = np.full((n, 0), np.inf)
+        self._arr_buf = np.full((n, 0), np.inf)
+        self._ptr = 0
+        # cumulative per-tick emitted history (for telemetry rebuilds)
+        self._t_hist: List[float] = []
+        self._hist: Dict[str, List[np.ndarray]] = {}
+
+    # -- sanitizer / Fleet.view surface ---------------------------------
+    def queued_cost(self) -> np.ndarray:
+        return self._B.copy()
+
+    def active_units(self) -> np.ndarray:
+        return self.active.copy()
+
+    # -------------------------------------------------------------------
+    def _carry(self, hedge_on: bool) -> Dict[str, Any]:
+        c: Dict[str, Any] = {
+            "t": np.float64(self.now),
+            "B": self._B,
+            "A": self._A,
+            "S": self._S,
+            "opp": self.opp,
+            "backlog": self._backlog,
+            "active": self.active,
+            "last_down": self._last_down,
+            "scale_events": self.scale_events,
+            "hedged": self.hedged_cnt,
+            "energy": self.energy,
+            "unit_energy": self.unit_energy,
+            "served": self.served_acc,
+        }
+        if self.therm is not None:
+            c["t_die"] = self.therm.t_die
+            c["t_pcb"] = self.therm.t_pcb
+            c["latched"] = self.therm.latched
+        if hedge_on:
+            c["A_buf"] = self._A_buf
+            c["arr_buf"] = self._arr_buf
+            c["ptr"] = np.int64(self._ptr)
+        return c
+
+    def _full(self, key: str) -> np.ndarray:
+        rows = self._hist.get(key)
+        if not rows:
+            return np.zeros((0, self.n_racks))
+        return np.concatenate(rows, axis=0)
+
+    # -------------------------------------------------------------------
+    def play(
+        self, trace_rps: Sequence[float], drain: bool = True
+    ) -> Tuple[np.ndarray, np.ndarray, int, Optional[bool]]:
+        """Run the whole trace (plus post-trace drain) in one shot.
+
+        Returns ``(assigned_rps, queued_rows, n_drain_ticks, drained)``
+        with one row per simulated tick; ``drained`` is ``None`` when
+        the call simulated no ticks at all.
+        """
+        with enable_x64():
+            return self._play(np.asarray(trace_rps, float), drain)
+
+    def _play(
+        self, trace: np.ndarray, drain: bool
+    ) -> Tuple[np.ndarray, np.ndarray, int, Optional[bool]]:
+        dt = self.dt_s
+        t_len = len(trace)
+        n = self.n_racks
+        if self._hedge_any and t_len > 0:
+            pad = np.full((n, t_len), np.inf)
+            self._A_buf = np.concatenate([self._A_buf, pad], axis=1)
+            self._arr_buf = np.concatenate([self._arr_buf, pad.copy()], axis=1)
+        hedge_on = self._hedge_any and self._A_buf.shape[1] > 0
+        dims = _make_dims(self.arrays, dt, hedge_on)
+        params = self._params
+        carry = self._carry(hedge_on)
+        zeros = np.zeros(_BLOCK)
+        falses = np.zeros(_BLOCK, bool)
+        kept: List[Dict[str, np.ndarray]] = []
+        pos = 0
+        while pos < t_len:
+            blk = min(_BLOCK, t_len - pos)
+            rps = np.zeros(_BLOCK)
+            rps[:blk] = trace[pos : pos + blk]
+            live = np.zeros(_BLOCK, bool)
+            live[:blk] = True
+            carry, ys = _RUN(
+                params, carry, {"rps": rps, "live": live, "is_trace": live},
+                dims=dims,
+            )
+            kept.append(_host_rows(ys, blk))
+            pos += blk
+        if kept:
+            all_empty = bool(kept[-1]["empty"][-1].all())
+        else:
+            all_empty = bool(np.all(self._B <= 0.0))
+        drained: Optional[bool]
+        if drain:
+            # keep ticking until the first tick that starts fully idle
+            # (inclusive) — the same stop tick Fleet.play_trace's
+            # queued/concurrency break lands on — bounded by the same
+            # 10x-trace safety cap
+            cap_ticks = 10 * t_len + 100
+            done = 0
+            found = False
+            while done < cap_ticks and not found:
+                blk = min(_BLOCK, cap_ticks - done)
+                live = np.zeros(_BLOCK, bool)
+                live[:blk] = True
+                xs = {"rps": zeros, "live": live, "is_trace": falses}
+                carry0 = carry
+                carry, ys = _RUN(params, carry0, xs, dims=dims)
+                rows = _host_rows(ys, blk)
+                allm = rows["empty"].all(axis=1)
+                start_idle = np.concatenate(([all_empty], allm[:-1]))
+                idle = np.nonzero(start_idle)[0]
+                if len(idle):
+                    stop = int(idle[0])
+                    live2 = np.zeros(_BLOCK, bool)
+                    live2[: stop + 1] = True
+                    carry, _ = _RUN(
+                        params,
+                        carry0,
+                        {"rps": zeros, "live": live2, "is_trace": falses},
+                        dims=dims,
+                    )
+                    kept.append({k: v[: stop + 1] for k, v in rows.items()})
+                    found = True
+                else:
+                    kept.append(rows)
+                    all_empty = bool(allm[-1])
+                    done += blk
+            drained = found
+        elif t_len == 0:
+            drained = None
+        else:
+            last = kept[-1]
+            drained = bool(
+                last["empty"][-1].all() and not (last["used"][-1] > 0.0).any()
+            )
+        # pull the final carry back into host state
+        fin = jax.device_get(carry)
+        self.now = float(fin["t"])
+        self._B = np.asarray(fin["B"])
+        self._A = np.asarray(fin["A"])
+        self._S = np.asarray(fin["S"])
+        self.opp = np.asarray(fin["opp"])
+        self._backlog = np.asarray(fin["backlog"])
+        self.active = np.asarray(fin["active"])
+        self._last_down = np.asarray(fin["last_down"])
+        self.scale_events = np.asarray(fin["scale_events"])
+        self.hedged_cnt = np.asarray(fin["hedged"])
+        self.energy = np.asarray(fin["energy"])
+        self.unit_energy = np.asarray(fin["unit_energy"])
+        self.served_acc = np.asarray(fin["served"])
+        if self.therm is not None:
+            self.therm.t_die = np.asarray(fin["t_die"])
+            self.therm.t_pcb = np.asarray(fin["t_pcb"])
+            self.therm.latched = np.asarray(fin["latched"])
+        if hedge_on:
+            self._A_buf = np.asarray(fin["A_buf"])
+            self._arr_buf = np.asarray(fin["arr_buf"])
+            self._ptr = int(fin["ptr"])
+        # append this call's rows to the cumulative history
+        if kept:
+            rows_all = {k: np.concatenate([r[k] for r in kept]) for k in kept[0]}
+            n_rows = int(rows_all["empty"].shape[0])
+        else:
+            rows_all = {}
+            n_rows = 0
+        t0 = self.now - n_rows * dt
+        if n_rows:
+            self._t_hist.extend((t0 + np.arange(n_rows) * dt).tolist())
+            for k, v in rows_all.items():
+                self._hist.setdefault(k, []).append(v)
+        # queue depths come from the *full* history (cumulative S/A)
+        work_all = self._full("work")
+        s_all = self._full("S")
+        queued_rows = np.zeros((n_rows, n), np.int64)
+        for r in range(n):
+            q = _queued_for_rack(work_all[:, r], s_all[:, r])
+            if n_rows:
+                queued_rows[:, r] = q[-n_rows:]
+        assigned = (
+            rows_all["assign"] if n_rows else np.zeros((0, n))
+        )
+        return assigned, queued_rows, n_rows - t_len, drained
+
+    # -------------------------------------------------------------------
+    def per_rack_telemetry(self) -> List[Telemetry]:
+        ts = np.asarray(self._t_hist, float)
+        work = self._full("work")
+        s_rows = self._full("S")
+        cap = self._full("cap")
+        perf = self._full("perf")
+        rate = self._full("rate")
+        active = self._full("active")
+        power = self._full("power")
+        util = self._full("util")
+        empty = np.zeros(0)
+        th = self.arrays.thermal
+        if th is not None and "temp" in self._hist:
+            fan: Optional[np.ndarray] = np.concatenate(self._hist["fan"])
+            temp: Optional[np.ndarray] = np.concatenate(self._hist["temp"])
+            thr: Optional[np.ndarray] = np.concatenate(self._hist["thr"])
+            col_of = {int(r): j for j, r in enumerate(th.t_idx)}
+        else:
+            fan = temp = thr = None
+            col_of = {}
+        arr = self.arrays
+        out: List[Telemetry] = []
+        for r in range(self.n_racks):
+            responses = _responses_for_rack(
+                ts,
+                self.dt_s,
+                work[:, r],
+                s_rows[:, r],
+                cap[:, r],
+                perf[:, r],
+                float(arr.unit_rate[r]),
+            )
+            p50, p99 = latency_percentiles(responses)
+            j = col_of.get(r)
+            if j is None or temp is None or thr is None or fan is None:
+                temp_r = thr_r = fan_r = empty
+            else:
+                temp_r = temp[:, j].copy()
+                thr_r = thr[:, j].astype(float)
+                fan_r = fan[:, j].copy()
+            out.append(
+                Telemetry(
+                    time_s=ts,
+                    offered_load=rate[:, r].copy(),
+                    active_units=active[:, r].astype(float),
+                    power_w=power[:, r].copy(),
+                    utilization=util[:, r].copy(),
+                    served=float(self.served_acc[r]),
+                    hedged=int(self.hedged_cnt[r]),
+                    scale_events=int(self.scale_events[r]),
+                    p50_latency_s=p50,
+                    p99_latency_s=p99,
+                    energy_j=float(self.energy[r]),
+                    unit_energy_j=float(self.unit_energy[r]),
+                    responses=responses,
+                    workload={
+                        "name": arr.names[r],
+                        "kind": "fluid",
+                        "unit_rate": float(arr.unit_rate[r]),
+                    },
+                    max_temp_c=temp_r,
+                    throttled_units=thr_r,
+                    fan_power_w=fan_r,
+                )
+            )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# batched config sweeps
+
+
+@dataclass
+class SweepConfig:
+    """One point of a batched fig15-style policy sweep.
+
+    Scalars multiply the corresponding per-rack base arrays (so a
+    heterogeneous fleet keeps its shape); ``hedge_after_s`` of ``None``
+    keeps each rack's own policy deadline, ``float("inf")`` disables
+    hedging for the config, any finite value overrides every rack. The
+    power-aware router runs at its default ``util_target`` (0.85).
+    """
+
+    router: str = "join-shortest-queue"
+    headroom_scale: float = 1.0
+    sched_headroom_scale: float = 1.0
+    hedge_after_s: Optional[float] = None
+    unit_rate_scale: float = 1.0
+    trace_scale: float = 1.0
+    name: str = ""
+
+
+def sweep(
+    racks: "Sequence[RackConfig]",
+    configs: Sequence[SweepConfig],
+    trace_rps: Sequence[float],
+    dt_s: float = 60.0,
+    idle_units_off: bool = True,
+    drain_ticks: Optional[int] = None,
+) -> List[Dict[str, Any]]:
+    """Run every config over the trace as **one** batched XLA program.
+
+    The whole scan is ``vmap``-ed over the config axis and dispatched
+    in chunks; with more than one host device (see
+    ``repro.config.set_host_device_count``) each chunk is additionally
+    ``pmap``-sharded across devices. Every config runs the full trace
+    plus ``drain_ticks`` idle ticks (default ``len(trace) + 100``);
+    per-config results are trimmed at each config's own drain point, so
+    summaries match a per-config ``Fleet(backend="jax").play_trace``
+    within jit-determinism (a config that fails to drain inside the
+    window reports ``drained=False``).
+
+    Returns one summary dict per config (same keys across configs).
+    """
+    trace = np.asarray(trace_rps, float)
+    assert len(configs) > 0, "need at least one sweep config"
+    assert len(trace) > 0, "need a non-empty trace"
+    with enable_x64():
+        return _sweep(racks, list(configs), trace, dt_s, idle_units_off,
+                      drain_ticks)
+
+
+def _sweep(
+    racks: "Sequence[RackConfig]",
+    configs: List[SweepConfig],
+    trace: np.ndarray,
+    dt_s: float,
+    idle_units_off: bool,
+    drain_ticks: Optional[int],
+) -> List[Dict[str, Any]]:
+    arr = build_fleet_arrays(racks, idle_units_off)
+    if arr.generic:
+        raise ValueError(
+            "sweep() only supports the built-in governors; use the "
+            "vector engine for generic governors"
+        )
+    for cfg in configs:
+        if cfg.router not in ROUTER_KINDS:
+            raise ValueError(
+                f"unknown sweep router {cfg.router!r}; "
+                f"choose from {sorted(ROUTER_KINDS)}"
+            )
+    n = arr.n_racks
+    t_len = len(trace)
+    n_drain = t_len + 100 if drain_ticks is None else int(drain_ticks)
+    total_ticks = t_len + n_drain
+    n_cfg = len(configs)
+    base = _base_params(arr, dt_s, _full_load_j_per_req(racks))
+    base_dl = np.asarray(base["hedge_deadline"], float)
+    hedge_dls = np.stack(
+        [
+            base_dl
+            if cfg.hedge_after_s is None
+            else np.full(n, float(cfg.hedge_after_s))
+            for cfg in configs
+        ]
+    )
+    hedge_on = bool(np.isfinite(hedge_dls).any())
+    dims = _make_dims(arr, dt_s, hedge_on)
+    params = dict(base)
+    params["router_kind"] = np.array(
+        [ROUTER_KINDS[cfg.router] for cfg in configs], np.int64
+    )
+    params["trace_scale"] = np.array(
+        [float(cfg.trace_scale) for cfg in configs]
+    )
+    params["unit_rate"] = np.stack(
+        [arr.unit_rate * cfg.unit_rate_scale for cfg in configs]
+    )
+    params["capacity_rps"] = np.stack(
+        [
+            arr.n_units.astype(float) * arr.unit_rate * cfg.unit_rate_scale
+            for cfg in configs
+        ]
+    )
+    params["headroom"] = np.stack(
+        [arr.headroom * cfg.headroom_scale for cfg in configs]
+    )
+    params["sched_headroom"] = np.stack(
+        [arr.sched_headroom * cfg.sched_headroom_scale for cfg in configs]
+    )
+    params["hedge_deadline"] = hedge_dls
+    batched = {
+        "router_kind",
+        "trace_scale",
+        "unit_rate",
+        "capacity_rps",
+        "headroom",
+        "sched_headroom",
+        "hedge_deadline",
+    }
+    axes = {k: (0 if k in batched else None) for k in params}
+    carry = _fresh_carry(arr, hedge_on, t_len)
+    rps = np.zeros(total_ticks)
+    rps[:t_len] = trace
+    live = np.ones(total_ticks, bool)
+    is_trace = np.zeros(total_ticks, bool)
+    is_trace[:t_len] = True
+    xs = {"rps": rps, "live": live, "is_trace": is_trace}
+
+    ndev = jax.local_device_count()
+    if ndev > 1:
+        per = max(1, min(4, -(-n_cfg // ndev)))
+        step_sz = ndev * per
+    else:
+        per = 0
+        step_sz = min(8, n_cfg)
+    cache_key = (
+        dims,
+        t_len,
+        total_ticks,
+        ndev,
+        per,
+        step_sz,
+        tuple(sorted(params)),
+        tuple(sorted(carry)),
+    )
+    mapped = _MAPPED.get(cache_key)
+    if mapped is None:
+
+        def run(
+            p: Dict[str, Any], c: Dict[str, Any], x: Dict[str, Any]
+        ) -> Dict[str, Any]:
+            _, ys = _scan_steps(p, c, x, dims)
+            return _device_summary(ys, t_len, p["dt"], p["unit_rate"])
+
+        inner = jax.vmap(run, in_axes=(axes, None, None))
+        if ndev > 1:
+            mapped = jax.pmap(inner, in_axes=(axes, None, None))
+        else:
+            mapped = jax.jit(inner)
+        _MAPPED[cache_key] = mapped
+    rows: List[Dict[str, np.ndarray]] = []
+    i = 0
+    while i < n_cfg:
+        sel = list(range(i, min(i + step_sz, n_cfg)))
+        n_sel = len(sel)
+        sel = sel + [sel[-1]] * (step_sz - n_sel)
+        pc = {
+            k: (np.asarray(params[k])[sel] if k in batched else params[k])
+            for k in params
+        }
+        if ndev > 1:
+            pc = {
+                k: (
+                    v.reshape((ndev, per) + v.shape[1:])
+                    if k in batched
+                    else v
+                )
+                for k, v in pc.items()
+            }
+        host = jax.device_get(mapped(pc, carry, xs))
+        host = {
+            k: np.asarray(v).reshape((step_sz,) + np.asarray(v).shape[2:])[
+                :n_sel
+            ]
+            for k, v in host.items()
+        }
+        rows.append(host)
+        i += n_sel
+    out: List[Dict[str, Any]] = []
+    ci = 0
+    for part in rows:
+        for k in range(len(part["ticks"])):
+            out.append(_format_row(configs[ci], ci, arr, part, k))
+            ci += 1
+    return out
+
+
+#: compiled sweep programs keyed by (dims, shapes, device layout): a
+#: repeated sweep() over the same fleet/trace shape reuses the XLA
+#: executable instead of re-tracing a fresh closure
+_MAPPED: Dict[Tuple[Any, ...], Any] = {}
+
+
+def _pctl(flat: Any, n_ok: Any, q: float) -> Any:
+    """``np.percentile(lat, q)`` (linear interpolation) on a sorted
+    device vector padded with ``+inf`` past ``n_ok`` valid entries."""
+    pos = (q / 100.0) * jnp.maximum(n_ok - 1, 0)
+    lo = jnp.floor(pos).astype(jnp.int64)
+    hi = jnp.ceil(pos).astype(jnp.int64)
+    w = pos - lo.astype(jnp.float64)
+    v = flat[lo] * (1.0 - w) + flat[hi] * w
+    return jnp.where(n_ok > 0, v, 0.0)
+
+
+def _device_summary(
+    ys: Dict[str, Any], t_len: int, dt: Any, unit_rate: Any
+) -> Dict[str, Any]:
+    """Reduce one config's emitted rows to summary scalars **on the
+    device**. Shipping the raw ``(ticks, racks)`` histories to the host
+    and rebuilding Response objects costs ~10x the scan itself, so the
+    sweep's host traffic is a dozen scalars per config: the per-config
+    trim mask, roll-ups, and the latency reconstruction (the
+    ``QueueWorkload`` completion/finish arithmetic of
+    :func:`_responses_for_rack`, vectorized over all submissions) all
+    run inside the compiled program."""
+    total = ys["empty"].shape[0]
+    allm = jnp.all(ys["empty"], axis=1)
+    start_idle = jnp.concatenate([jnp.zeros(1, bool), allm[:-1]])
+    drain_idle = start_idle[t_len:]
+    drained = jnp.any(drain_idle)
+    first = jnp.argmax(drain_idle)
+    n_kept = jnp.where(drained, t_len + first + 1, total)
+    tick = jnp.arange(total)
+    tmask = tick < n_kept
+    col = tmask[:, None]
+    nk = n_kept.astype(jnp.float64)
+    power_t = jnp.sum(jnp.where(col, ys["power"], 0.0), axis=1)  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished device rows
+    energy_j = jnp.sum(power_t) * dt  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished device rows
+    served = jnp.sum(jnp.where(col, ys["used"], 0.0))  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished device rows
+    active_t = jnp.sum(jnp.where(col, ys["active"], 0), axis=1)  # reprolint: ok[RPL001] jax tolerance-parity: integer unit counts, exact in any order
+    hedged = jnp.sum(jnp.where(col, ys["hedge"], 0))  # reprolint: ok[RPL001] jax tolerance-parity: int64 counters, exact in any order
+    scale = jnp.sum(jnp.where(col, ys["scale"], 0))  # reprolint: ok[RPL001] jax tolerance-parity: int64 counters, exact in any order
+    # latency reconstruction: one fluid request per work-carrying tick,
+    # completion at the first tick whose cumulative served covers its
+    # cumulative cost tail (minus the cumulative-axis forgiveness)
+    work = jnp.where(col, ys["work"], 0.0)
+    a = jnp.cumsum(work, axis=0)  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum replays the device carry's sequential adds
+    s_col = ys["S"]
+    j = jax.vmap(
+        lambda scol, keys: jnp.searchsorted(scol, keys, side="left"),
+        in_axes=(1, 1),
+        out_axes=1,
+    )(s_col, a - _cum_tol(a))
+    ok = (work > 0.0) & (j < n_kept)
+    jc = jnp.clip(j, 0, total - 1)
+    cap_j = jnp.take_along_axis(ys["cap"], jc, axis=0)
+    perf_j = jnp.take_along_axis(ys["perf"], jc, axis=0)
+    s_prev = jnp.where(
+        jc > 0,
+        jnp.take_along_axis(s_col, jnp.maximum(jc - 1, 0), axis=0),
+        0.0,
+    )
+    safe_cap = jnp.where(cap_j > 0.0, cap_j, 1.0)
+    frac = jnp.where(
+        cap_j > 0.0, jnp.minimum(a - s_prev, cap_j) / safe_cap, 1.0
+    )
+    arrival = (tick.astype(jnp.float64) * dt + 0.5 * dt)[:, None]
+    service = 1.0 / (unit_rate[None, :] * jnp.maximum(perf_j, 1e-9))
+    finish = jnp.maximum(
+        jc.astype(jnp.float64) * dt + frac * dt, arrival + service
+    )
+    lat = jnp.where(ok, finish - arrival, jnp.inf)
+    flat = jnp.sort(lat.ravel())
+    n_ok = jnp.sum(ok)  # reprolint: ok[RPL001] jax tolerance-parity: bool counter, exact in any order
+    return {
+        "ticks": n_kept,
+        "drained": drained,
+        "served": served,
+        "energy_j": energy_j,
+        "mean_power_w": jnp.sum(power_t) / nk,  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished device rows
+        "peak_power_w": jnp.max(jnp.where(tmask, power_t, -jnp.inf)),
+        "mean_active_units": jnp.sum(active_t).astype(jnp.float64) / nk,  # reprolint: ok[RPL001] jax tolerance-parity: integer unit counts, exact in any order
+        "hedged": hedged,
+        "scale_events": scale,
+        "p50_latency_s": _pctl(flat, n_ok, 50.0),
+        "p95_latency_s": _pctl(flat, n_ok, 95.0),
+        "p99_latency_s": _pctl(flat, n_ok, 99.0),
+    }
+
+
+def _format_row(
+    cfg: SweepConfig,
+    ci: int,
+    arr: FleetArrays,
+    part: Dict[str, np.ndarray],
+    k: int,
+) -> Dict[str, Any]:
+    energy_j = float(part["energy_j"][k])
+    served = float(part["served"][k])
+    return {
+        "name": cfg.name or f"cfg{ci}",
+        "router": cfg.router,
+        "racks": arr.n_racks,
+        "ticks": int(part["ticks"][k]),
+        "served": served,
+        "energy_j": energy_j,
+        "energy_kwh": energy_j / 3.6e6,
+        "tpe": served / max(energy_j, 1e-9),
+        "mean_power_w": float(part["mean_power_w"][k]),
+        "peak_power_w": float(part["peak_power_w"][k]),
+        "mean_active_units": float(part["mean_active_units"][k]),
+        "p50_latency_s": float(part["p50_latency_s"][k]),
+        "p95_latency_s": float(part["p95_latency_s"][k]),
+        "p99_latency_s": float(part["p99_latency_s"][k]),
+        "hedged": int(part["hedged"][k]),
+        "scale_events": int(part["scale_events"][k]),
+        "drained": bool(part["drained"][k]),
+    }

@@ -324,7 +324,11 @@ class FleetSanitizer:
             if hasattr(engine, "rts") else []
         for pool in self._pools:
             check_pool(pool)  # construction must already be consistent
-        engine.tick = self._wrap(engine.tick)
+        if hasattr(engine, "tick"):
+            engine.tick = self._wrap(engine.tick)
+        else:
+            # jax engine: one play() call covers many ticks — wrap that
+            engine.play = self._wrap_play(engine.play)
         fleet._sanitizer = self
 
     # -- engine accessors (scalar vs vector) ----------------------------
@@ -354,6 +358,26 @@ class FleetSanitizer:
 
         checked.__name__ = "tick"
         checked.__wrapped__ = tick  # type: ignore[attr-defined]
+        return checked
+
+    def _wrap_play(self, play: Callable[..., Any]) -> Callable[..., Any]:
+        """Per-call twin of :meth:`_wrap` for engines whose unit of
+        advancement is a whole ``play(trace)`` rather than one tick:
+        the injected-cost ledger grows by the routed assignments the
+        call reports, then the same invariants run once."""
+        def checked(trace_rps: Any, drain: bool = True) -> Any:
+            out = play(trace_rps, drain=drain)
+            assigned = np.asarray(out[0], float)
+            if assigned.size:
+                per_rack = np.zeros(assigned.shape[1])
+                for row in assigned:  # ordered accumulation
+                    per_rack = per_rack + row
+                self.injected = self.injected + per_rack * self.fleet.dt_s
+            self.check()
+            return out
+
+        checked.__name__ = "play"
+        checked.__wrapped__ = play  # type: ignore[attr-defined]
         return checked
 
     def check(self) -> None:

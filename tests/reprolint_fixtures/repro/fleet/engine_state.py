@@ -1,0 +1,19 @@
+"""Known-good glob twin: same path-based scoping as the bad fixture
+(the ``*repro/fleet/engine_state.py`` PARITY_CRITICAL glob, no marker
+comment), but every reduction either follows the order-pinned idiom or
+carries the jax tolerance-parity waiver convention, so the file must
+lint clean."""
+import numpy as np
+
+
+def rack_energy_j(power_w: np.ndarray, dt_s: float) -> float:
+    acc = 0.0
+    for w in power_w:
+        acc += float(w)
+    return acc * dt_s
+
+
+def sweep_energy_j(power_w, dt_s: float) -> float:
+    import jax.numpy as jnp
+
+    return float(jnp.sum(power_w) * dt_s)  # reprolint: ok[RPL001] jax tolerance-parity: covered by the documented energy_j rtol budget

@@ -1,0 +1,12 @@
+"""Known-bad glob fixture: this file carries NO ``# reprolint:``
+marker — it is in RPL001 scope purely because its relative path
+matches the ``*repro/fleet/jax_engine.py`` entry of
+``tools/reprolint/config.py::PARITY_CRITICAL``. The unwaived ``jnp``
+reduction below must be flagged, proving both the glob and the
+jax.numpy alias coverage fire."""
+import jax.numpy as jnp
+
+
+def rack_energy_j(power_w, dt_s: float) -> float:
+    # missing its "jax tolerance-parity" waiver: must be flagged
+    return float(jnp.sum(power_w) * dt_s)

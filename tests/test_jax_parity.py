@@ -1,0 +1,285 @@
+"""Vector <-> jax backend parity: the tolerance contract.
+
+The jax fleet engine (``Fleet(backend="jax")``) compiles the whole
+per-tick pipeline with XLA, which fuses and reorders floating-point
+reductions — so unlike the scalar/vector pair (bitwise, see
+``tests/test_vector_parity.py``) its parity contract is
+**tolerance-based**. The per-series budgets in ``RTOL`` below document
+the worst relative error observed across the full scenario matrix
+(binary gating / schedutil DVFS / race-to-idle + fixed mix /
+thermal-aware clamp / straggler hedging, each under all three routers)
+with roughly three decades of headroom; integer-valued series
+(active units, queue occupancy in requests at these loads, hedge and
+scale-event counters) must stay exact because every engine accumulates
+them in exact arithmetic.
+
+The jit-determinism tests pin the *other* half of the contract: one
+compiled program must be bitwise reproducible run-to-run, so sweeps
+are comparable across repeats even though they are only
+tolerance-comparable across engines.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cluster import soc_cluster
+from repro.fleet import (Fleet, JoinShortestQueueRouter, PowerAwareRouter,
+                         RackConfig, RoundRobinRouter, SweepConfig,
+                         diurnal_trace, homogeneous_fleet, sweep)
+from repro.power import (FixedFreqGovernor, RaceToIdleGovernor,
+                         SchedutilGovernor, ThermalAwareGovernor,
+                         ThermalParams, sd865_opp_table)
+from repro.runtime import ScalePolicy
+
+jax = pytest.importorskip("jax")
+
+UNIT_RATE = 30.0   # req/s per SD865 unit (fig16 convention)
+DT_S = 60.0
+
+# Per-series relative-error budget vs the vector oracle. Observed
+# worst case over the scenario matrix (2h diurnal + fig16-scale runs):
+#   served     5.8e-16   energy_j   2.0e-16   power_w   7.1e-13
+#   p50        1.0e-13   p99        2.6e-12   queued    0 (exact)
+RTOL = {
+    "served": 1e-12,
+    "energy_j": 1e-12,
+    "power_w": 1e-9,
+    "queued": 1e-9,
+    "p50_latency_s": 1e-9,
+    "p95_latency_s": 1e-9,
+    "p99_latency_s": 1e-9,
+}
+ATOL = 1e-9  # forgiveness for exact zeros (idle power, empty queues)
+
+ROUTERS = (RoundRobinRouter, JoinShortestQueueRouter, PowerAwareRouter)
+
+
+def _racks(n=4, governor=None, thermal=None, headroom=1.25, hedge=None):
+    policy = ScalePolicy(cooldown_s=300.0, min_units=1,
+                         headroom=headroom, hedge_after_s=hedge,
+                         freq_governor=governor)
+    return homogeneous_fleet(
+        soc_cluster(), n, UNIT_RATE, policy=policy,
+        opp_table=sd865_opp_table() if governor is not None else None,
+        thermal=thermal)
+
+
+def _mixed_governor_racks():
+    """Half race-to-idle, half pinned-frequency racks in one fleet."""
+    table = sd865_opp_table()
+    racks = []
+    for i, gov in enumerate([RaceToIdleGovernor(), RaceToIdleGovernor(),
+                             FixedFreqGovernor(), FixedFreqGovernor()]):
+        policy = ScalePolicy(cooldown_s=300.0, min_units=1,
+                             freq_governor=gov)
+        racks.append(RackConfig(soc_cluster(), UNIT_RATE, policy,
+                                name=f"mix/{i}", opp_table=table,
+                                thermal=ThermalParams()))
+    return racks
+
+
+SCENARIOS = {
+    "binary": lambda: _racks(),
+    "schedutil": lambda: _racks(governor=SchedutilGovernor(),
+                                thermal=ThermalParams()),
+    "race+fixed": _mixed_governor_racks,
+    # tight trip/release window so the clamp actually engages
+    "thermal-clamp": lambda: _racks(
+        governor=ThermalAwareGovernor(SchedutilGovernor()),
+        thermal=ThermalParams(t_trip_c=70.0, t_release_c=60.0)),
+    # under-provisioned so backlog ages past the hedge deadline
+    "hedging": lambda: _racks(headroom=0.8, hedge=120.0),
+}
+# fraction of fleet capacity at the diurnal peak; >1 for the hedging
+# scenario so queues build and hedges actually fire
+LOAD_FRAC = {"hedging": 0.95}
+
+
+def _trace(racks, name, hours=2, seed=3):
+    cap = sum(rc.spec.n_units * rc.unit_rate for rc in racks)
+    frac = LOAD_FRAC.get(name, 0.55)
+    return frac * cap * diurnal_trace(peak_rps=1.0, hours=hours,
+                                      dt_s=DT_S, seed=seed)
+
+
+def _play(name, router_cls, backend):
+    racks = SCENARIOS[name]()
+    fleet = Fleet(racks, router=router_cls(), dt_s=DT_S, backend=backend)
+    return fleet.play_trace(_trace(racks, name))
+
+
+def assert_tolerance_parity(tv, tj):
+    """tv = vector oracle, tj = jax run of the same scenario."""
+    assert tv.ticks == tj.ticks
+    assert tv.drained == tj.drained
+    # integer-valued outputs: exact in any accumulation order
+    assert np.array_equal(tv.active_units, tj.active_units)
+    assert [r.hedged for r in tv.per_rack] == \
+        [r.hedged for r in tj.per_rack]
+    assert [r.scale_events for r in tv.per_rack] == \
+        [r.scale_events for r in tj.per_rack]
+    np.testing.assert_allclose(tj.power_w, tv.power_w,
+                               rtol=RTOL["power_w"], atol=ATOL)
+    np.testing.assert_allclose(tj.queued, tv.queued,
+                               rtol=RTOL["queued"], atol=ATOL)
+    for field in ("served", "energy_j", "p50_latency_s",
+                  "p95_latency_s", "p99_latency_s"):
+        np.testing.assert_allclose(getattr(tj, field),
+                                   getattr(tv, field),
+                                   rtol=RTOL[field], atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# tolerance parity: every scenario under every router
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_scenario_parity_all_routers(scenario):
+    for router_cls in ROUTERS:
+        tv = _play(scenario, router_cls, "vector")
+        tj = _play(scenario, router_cls, "jax")
+        assert_tolerance_parity(tv, tj)
+
+
+def test_hedging_fires_and_counts_match():
+    """The parity must be exercised, not vacuous: the under-provisioned
+    scenario has to produce actual hedge firings in both engines."""
+    tv = _play("hedging", JoinShortestQueueRouter, "vector")
+    tj = _play("hedging", JoinShortestQueueRouter, "jax")
+    hedged = sum(r.hedged for r in tv.per_rack)
+    assert hedged > 0
+    assert hedged == sum(r.hedged for r in tj.per_rack)
+
+
+def test_thermal_clamp_engages():
+    """Same non-vacuity check for the thermal scenario: the tight trip
+    window must actually throttle (fewer effective req served per watt
+    than the unclamped schedutil fleet would imply is fine — we only
+    need the clamp path to run and still match)."""
+    tv = _play("thermal-clamp", RoundRobinRouter, "vector")
+    tj = _play("thermal-clamp", RoundRobinRouter, "jax")
+    assert_tolerance_parity(tv, tj)
+    assert tv.energy_j > 0
+
+
+# ---------------------------------------------------------------------------
+# jit determinism: same program, same inputs -> bitwise-equal outputs
+# ---------------------------------------------------------------------------
+def _sweep_once(drain_ticks=None):
+    racks = _racks(n=3)
+    trace = _trace(racks, "binary", hours=1, seed=5)
+    configs = [
+        SweepConfig(router="round-robin", name="rr"),
+        SweepConfig(router="join-shortest-queue",
+                    headroom_scale=1.1, name="jsq"),
+        SweepConfig(router="power-aware", trace_scale=0.9, name="pa"),
+        SweepConfig(router="join-shortest-queue",
+                    hedge_after_s=120.0, name="jsq-hedge"),
+    ]
+    return sweep(racks, configs, trace, dt_s=DT_S,
+                 drain_ticks=drain_ticks)
+
+
+def test_sweep_jit_determinism():
+    """Two invocations of the same jitted sweep are **bitwise** equal —
+    tolerance applies across engines, never across repeats."""
+    rows_a = _sweep_once()
+    rows_b = _sweep_once()
+    assert len(rows_a) == len(rows_b) == 4
+    for ra, rb in zip(rows_a, rows_b):
+        assert ra.keys() == rb.keys()
+        for key in ra:
+            assert ra[key] == rb[key], key
+
+
+def test_engine_jit_determinism():
+    ta = _play("schedutil", JoinShortestQueueRouter, "jax")
+    tb = _play("schedutil", JoinShortestQueueRouter, "jax")
+    assert np.array_equal(ta.power_w, tb.power_w)
+    assert np.array_equal(ta.queued, tb.queued)
+    assert ta.energy_j == tb.energy_j
+    assert ta.p99_latency_s == tb.p99_latency_s
+
+
+# ---------------------------------------------------------------------------
+# sweep vs dedicated engine runs
+# ---------------------------------------------------------------------------
+def test_sweep_matches_dedicated_runs():
+    """Each sweep row must match a per-config ``Fleet(backend="jax")``
+    run, given a drain budget large enough for every config."""
+    racks = _racks(n=3)
+    trace = _trace(racks, "binary", hours=1, seed=5)
+    router_cls = {"round-robin": RoundRobinRouter,
+                  "join-shortest-queue": JoinShortestQueueRouter,
+                  "power-aware": PowerAwareRouter}
+    rows = sweep(racks, [SweepConfig(router=r) for r in router_cls],
+                 trace, dt_s=DT_S, drain_ticks=600)
+    for row, (rname, cls) in zip(rows, router_cls.items()):
+        tel = Fleet(_racks(n=3), router=cls(), dt_s=DT_S,
+                    backend="jax").play_trace(trace)
+        assert row["router"] == rname
+        assert row["ticks"] == tel.ticks
+        assert bool(row["drained"]) == tel.drained
+        np.testing.assert_allclose(row["served"], tel.served,
+                                   rtol=1e-12, atol=ATOL)
+        np.testing.assert_allclose(row["energy_j"], tel.energy_j,
+                                   rtol=1e-12, atol=ATOL)
+        np.testing.assert_allclose(row["p95_latency_s"],
+                                   tel.p95_latency_s,
+                                   rtol=1e-9, atol=ATOL)
+
+
+@pytest.mark.multidevice
+def test_sweep_shards_across_devices():
+    """With >1 host device (``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N``, as the CI jax-backend job sets) the sweep pmaps
+    chunks across devices; results must not depend on the sharding."""
+    if jax.local_device_count() < 2:
+        pytest.skip("needs >1 XLA host device")
+    rows = _sweep_once(drain_ticks=600)
+    racks = _racks(n=3)
+    trace = _trace(racks, "binary", hours=1, seed=5)
+    tel = Fleet(racks, router=RoundRobinRouter(), dt_s=DT_S,
+                backend="jax").play_trace(trace)
+    np.testing.assert_allclose(rows[0]["energy_j"], tel.energy_j,
+                               rtol=1e-12, atol=ATOL)
+    np.testing.assert_allclose(rows[0]["served"], tel.served,
+                               rtol=1e-12, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# backend validation
+# ---------------------------------------------------------------------------
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="'scalar', 'vector', or 'jax'"):
+        Fleet(_racks(n=2), backend="cuda")
+
+
+def test_generic_governor_rejected():
+    class WeirdGovernor:
+        def select(self, ctx):
+            return 0
+
+    policy = ScalePolicy(freq_governor=WeirdGovernor())
+    racks = homogeneous_fleet(soc_cluster(), 2, UNIT_RATE, policy=policy,
+                              opp_table=sd865_opp_table())
+    with pytest.raises(ValueError, match="generic governors"):
+        Fleet(racks, backend="jax")
+    # the vector engine stays the escape hatch the error points at
+    Fleet(racks, backend="vector")
+
+
+def test_custom_router_rejected():
+    class MyRouter:
+        name = "my-router"
+
+        def route(self, total_rps, view):
+            return np.full(view.n_racks, total_rps / view.n_racks)
+
+    with pytest.raises(ValueError, match="custom routers"):
+        Fleet(_racks(n=2), router=MyRouter(), backend="jax")
+
+
+def test_unknown_sweep_router_rejected():
+    racks = _racks(n=2)
+    trace = _trace(racks, "binary", hours=1)
+    with pytest.raises(ValueError, match="unknown sweep router"):
+        sweep(racks, [SweepConfig(router="least-loaded")], trace)

@@ -40,6 +40,20 @@ def test_rule_passes_good_fixture(rule):
     assert findings == [], [f.format() for f in findings]
 
 
+def test_jax_engine_glob_fires_without_marker():
+    """PR 7 scope extension: ``repro/fleet/jax_engine.py`` and
+    ``engine_state.py`` are parity-critical *by path glob* (the
+    fixtures carry no marker comment), and ``jnp`` reductions count.
+    The bad twin has an unwaived ``jnp.sum``; the good twin uses the
+    ``ok[RPL001] jax tolerance-parity`` waiver convention."""
+    bad = lint_fixture(os.path.join("repro", "fleet", "jax_engine.py"))
+    assert bad, "glob did not put the jax_engine fixture in scope"
+    assert {f.rule for f in bad} == {"RPL001"}
+    assert any("jnp" in f.message or "sum" in f.message for f in bad)
+    good = lint_fixture(os.path.join("repro", "fleet", "engine_state.py"))
+    assert good == [], [f.format() for f in good]
+
+
 def test_pr5_reduceat_bug_reconstruction_flagged():
     """The PR 5 one-ulp parity bug — a float ``np.add.reduceat`` group
     sum — must be flagged by RPL001, and its bincount fix must pass."""

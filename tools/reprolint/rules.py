@@ -54,7 +54,12 @@ RULES = {
     "RPL005": "selection tie-break without a pinned key",
 }
 
-_NP_NAMES = {"np", "numpy"}
+# jnp included: jax.numpy reductions are *always* unordered under XLA
+# fusion, which is exactly why the jax engine's parity contract is
+# tolerance-based — every hit in repro/fleet/jax_engine.py needs a
+# "# reprolint: ok[RPL001] jax tolerance-parity ..." waiver naming the
+# tolerance that covers it (see CONTRIBUTING.md).
+_NP_NAMES = {"np", "numpy", "jnp"}
 _MUTATING_METHODS = {"pop", "clear", "update", "setdefault", "popitem"}
 
 

@@ -16,6 +16,12 @@ the build on a >2x slowdown of the vectorized paths):
     governor over the SD865 OPP table plus the stacked RC thermal
     network), i.e. the paper-relevant energy-proportionality
     configuration running on the array path;
+  * ``obs/fleet_probe_overhead_ratio`` (plus the probes-on rate
+    ``obs/fleet_probes_on_rack_ticks_per_s``) — probes-enabled over
+    probes-disabled vector fleet tick rate, both arms interleaved per
+    rep so machine drift cancels; the ratio is gated at >= 0.95 via the
+    baseline's per-metric ``gate_limits`` entry, enforcing the
+    observability overhead contract (probes on costs <= 5%);
   * ``fleet_jax/vector_sweep_scenarios_per_s`` — scenarios/s of the
     jax engine's batched :func:`repro.fleet.sweep` (32 fig15-style
     configs x 50 racks, warm compile cache), the vmap/pmap path the
@@ -92,6 +98,44 @@ def _fleet_rack_ticks_per_s(backend: str, n_racks: int, ticks: int,
     return best
 
 
+def _fleet_obs_overhead(n_racks: int = 100, ticks: int = 400,
+                        reps: int = 5, warmup: int = 10
+                        ) -> "tuple[float, float]":
+    """Probes-on rack-ticks/s and on/off tick-rate ratio of the vector
+    fleet engine (same shape as ``fleet/vector_rack_ticks_per_s``).
+    Returns ``(on, ratio)``. Each rep runs the off and on arms
+    back-to-back and the ratio is taken *within* the rep, so slow
+    machine drift cancels pairwise; the gate uses the *median* rep's
+    ratio — a genuine probe-path regression depresses every rep, while
+    a noisy-neighbor window only poisons the reps it overlaps."""
+    from repro.obs import FleetObs, MemorySink, ProbeRegistry
+
+    best_on = 0.0
+    ratios = []
+    for _ in range(reps):
+        rates = {}
+        for probes_on in (False, True):
+            obs = (FleetObs(probes=ProbeRegistry([MemorySink()]))
+                   if probes_on else None)
+            fleet = Fleet(
+                homogeneous_fleet(soc_cluster(), n_racks, unit_rate=30.0),
+                router=JoinShortestQueueRouter(), dt_s=60.0,
+                backend="vector", obs=obs)
+            total = 0.5 * fleet.capacity_rps
+            for _ in range(warmup):
+                assign = fleet.router.route(total, fleet.view())
+                fleet.engine.tick(np.asarray(assign, float), fleet.dt_s)
+            t0 = time.perf_counter()
+            for _ in range(ticks):
+                assign = fleet.router.route(total, fleet.view())
+                fleet.engine.tick(np.asarray(assign, float), fleet.dt_s)
+            rates[probes_on] = n_racks * ticks / (time.perf_counter() - t0)
+        best_on = max(best_on, rates[True])
+        ratios.append(rates[True] / rates[False])
+    ratios.sort()
+    return best_on, ratios[len(ratios) // 2]
+
+
 def _jax_sweep_scenarios_per_s(n_cfg: int = 32, n_racks: int = 50,
                                reps: int = 2) -> float:
     """Best-of-``reps`` scenarios/s of the batched jax ``sweep`` over a
@@ -145,6 +189,9 @@ def run() -> None:
     emit_metric("fleet_dvfs/vector_rack_ticks_per_s", d_vector)
     emit("fleet_dvfs/rack_speedup", 0.0,
          f"vector_over_scalar={d_vector/d_scalar:.2f}x")
+    o_on, o_ratio = _fleet_obs_overhead()
+    emit_metric("obs/fleet_probes_on_rack_ticks_per_s", o_on)
+    emit_metric("obs/fleet_probe_overhead_ratio", o_ratio)
     try:
         j_sweep = _jax_sweep_scenarios_per_s()
     except ImportError:

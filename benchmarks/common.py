@@ -33,11 +33,17 @@ def begin_suite(name: str) -> None:
             name, {"wall_s": None, "rows": [], "metrics": {}})
 
 
-def end_suite(name: str, wall_s: float, ok: bool) -> None:
+def end_suite(name: str, wall_s: float, ok: bool,
+              peak_rss_kb: Optional[int] = None) -> None:
     global _suite
     if _json is not None and name in _json["suites"]:
         _json["suites"][name]["wall_s"] = round(wall_s, 4)
         _json["suites"][name]["ok"] = ok
+        if peak_rss_kb is not None:
+            # ru_maxrss is a process-wide high-water mark (KiB on
+            # Linux), monotone across suites: a suite whose value
+            # equals its predecessor's did not push the peak further.
+            _json["suites"][name]["peak_rss_kb"] = int(peak_rss_kb)
     _suite = None
 
 

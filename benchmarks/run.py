@@ -11,6 +11,21 @@ import platform
 import sys
 import time
 import traceback
+from typing import Optional
+
+try:
+    import resource
+except ImportError:  # pragma: no cover - non-POSIX platforms
+    resource = None  # type: ignore[assignment]
+
+
+def _peak_rss_kb() -> Optional[int]:
+    """Process peak RSS in KiB (Linux ``ru_maxrss`` units); a monotone
+    high-water mark, so per-suite values attribute *growth*, not
+    isolated usage. None where ``resource`` is unavailable."""
+    if resource is None:
+        return None
+    return int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)
 
 
 def main() -> None:
@@ -85,12 +100,14 @@ def main() -> None:
             traceback.print_exc()
             print(f"{name}/FAILED,0.0,{e!r}")
         finally:
-            common.end_suite(name, time.perf_counter() - t0, ok)
+            common.end_suite(name, time.perf_counter() - t0, ok,
+                             peak_rss_kb=_peak_rss_kb())
     if record is not None:
         record["meta"] = {
             "python": platform.python_version(),
             "machine": platform.machine(),
             "suites_run": selected,
+            "peak_rss_kb": _peak_rss_kb(),
         }
         with open(args.json, "w") as fh:
             json.dump(record, fh, indent=2, sort_keys=True)

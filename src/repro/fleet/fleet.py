@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -67,6 +67,9 @@ from repro.runtime import (
     Telemetry,
     latency_percentiles,
 )
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (obs is optional)
+    from repro.obs import FleetObs
 
 __all__ = ["RackConfig", "Fleet", "homogeneous_fleet"]
 
@@ -123,6 +126,8 @@ class _ScalarFleetEngine:
     ) -> None:
         self.dt_s = dt_s
         self.now = 0.0
+        self.obs: Optional["FleetObs"] = None
+        self._any_thermal = any(rc.thermal is not None for rc in racks)
         self.rts: List[ClusterRuntime] = []
         for i, rc in enumerate(racks):
             wl = QueueWorkload(rc.unit_rate, name=rc.name or f"rack{i}")
@@ -159,12 +164,68 @@ class _ScalarFleetEngine:
         n = len(self.rts)
         queued = np.zeros(n, np.int64)
         conc = np.zeros(n, np.int64)
+        obs = self.obs
+        emit = (
+            obs is not None
+            and obs.probes is not None
+            and obs.probes.active
+        )
+        hedges = np.zeros(n, np.int64) if emit else None
         for r, rt in enumerate(self.rts):
             stats = rt.tick(dt)
             queued[r] = stats.queued
             conc[r] = stats.concurrency
+            if hedges is not None:
+                hedges[r] = stats.hedge_units
+        if hedges is not None:
+            self._emit_probes(t, dt, queued, hedges)
         self.now = t + dt
         return queued, conc
+
+    def _emit_probes(
+        self, t: float, dt: float, queued: np.ndarray, hedges: np.ndarray
+    ) -> None:
+        """One probe row from the pools' just-appended tick histories.
+        The ledger surface needs no fleet-level hook here: each pool
+        meters its own charge() ticks (``UnitPool.attach_ledger``)."""
+        assert self.obs is not None and self.obs.probes is not None
+        pools = [rt.pool for rt in self.rts]
+        row = {
+            "power_w": np.array([p.power_hist[-1] for p in pools]),
+            "queued": queued.astype(float),
+            "active_units": np.array(
+                [float(p.active_hist[-1]) for p in pools]
+            ),
+            "waking_units": np.array(
+                [float(p.n_waking_total()) for p in pools]
+            ),
+            "utilization": np.array([p.util_hist[-1] for p in pools]),
+            "opp_index": np.array(
+                [
+                    float(p._tenant_opp_of(rt._TENANT))
+                    if p.opp_table is not None
+                    else 0.0
+                    for p, rt in zip(pools, self.rts)
+                ]
+            ),
+            "hedge_units": hedges.astype(float),
+        }
+        if self._any_thermal:
+            row["max_temp_c"] = np.array(
+                [
+                    p.max_temp_hist[-1] if p.thermal is not None else np.nan
+                    for p in pools
+                ]
+            )
+            row["throttled_units"] = np.array(
+                [
+                    float(p.throttled_hist[-1])
+                    if p.thermal is not None
+                    else 0.0
+                    for p in pools
+                ]
+            )
+        self.obs.probes.emit_tick(t, dt, row)
 
     def per_rack_telemetry(self) -> List[Telemetry]:
         return [rt.cluster_telemetry() for rt in self.rts]
@@ -307,6 +368,10 @@ class _VectorFleetEngine:
         self.arrays = arr
         self.dt_s = dt_s
         self.now = 0.0
+        self.obs: Optional["FleetObs"] = None
+        self._any_table = bool(np.any(arr.has_table))
+        self._any_hedge = any(dl is not None for dl in arr.hedge_deadline)
+        self._obs_zeros: Optional[np.ndarray] = None
         self.n_units = arr.n_units
         self.unit_rate = arr.unit_rate
         self.headroom = arr.headroom
@@ -574,8 +639,110 @@ class _VectorFleetEngine:
         self._active_rows.append(powered)
         self._power_rows.append(total)
         self._util_rows.append(util_agg)
+        if self.obs is not None:
+            self._emit_obs(
+                t,
+                dt,
+                total=total,
+                queued=queued,
+                powered=powered,
+                powered_f=powered_f,
+                h_arr=h_arr,
+                util_agg=util_agg,
+                fan_w=fan_w,
+                p_act=p_act,
+                w_req=w_req,
+                p_rest=p_rest,
+                latched_any=latched_any,
+                c_low_f=c_low_f,
+                w_low=w_low,
+            )
         self.now = t + dt
         return queued, conc
+
+    def _emit_obs(
+        self,
+        t: float,
+        dt: float,
+        *,
+        total: np.ndarray,
+        queued: np.ndarray,
+        powered: np.ndarray,
+        powered_f: np.ndarray,
+        h_arr: np.ndarray,
+        util_agg: np.ndarray,
+        fan_w: np.ndarray,
+        p_act: np.ndarray,
+        w_req: np.ndarray,
+        p_rest: np.ndarray,
+        latched_any: bool,
+        c_low_f: Optional[np.ndarray],
+        w_low: Optional[np.ndarray],
+    ) -> None:
+        """Ledger leaves + probe row for one tick. The ledger arrays
+        replay bitwise: ``active_w + hedge_w`` re-performs the exact
+        binary add this tick's ``p_units`` came from (table racks), or
+        adds ``0.0`` — a bitwise no-op on the non-negative draws —
+        for racks without one (see ``repro.obs.attribution``)."""
+        obs = self.obs
+        assert obs is not None
+        n = len(self.wls)
+        ledger = obs.ledger
+        if ledger is not None:
+            h_f = h_arr.astype(float)
+            active_w = np.where(self.has_table, p_act, powered_f * w_req)
+            hedge_w = np.where(self.has_table, h_f * w_req, 0.0)
+            floor_units = floor_w = None
+            if latched_any:
+                assert c_low_f is not None and w_low is not None
+                ti = self.t_idx
+                floor_units = np.zeros(n)
+                floor_units[ti] = c_low_f
+                floor_w = np.zeros(n)
+                floor_w[ti] = w_low[ti]
+            ledger.record_fleet_tick(
+                t,
+                dt,
+                fan_w=fan_w,
+                active_w=active_w,
+                hedge_w=hedge_w,
+                rest_w=p_rest,
+                hedge_units=h_arr,
+                rest_units=self.n_units - powered,
+                floor_units=floor_units,
+                floor_w=floor_w,
+            )
+        probes = obs.probes
+        if probes is not None and probes.active:
+            # shared all-zeros row: never mutated, so sinks may keep a
+            # reference across ticks without copying
+            zeros = self._obs_zeros
+            if zeros is None:
+                zeros = self._obs_zeros = np.zeros(n)
+            row = {
+                "power_w": total,
+                "queued": queued.astype(float),
+                "active_units": powered.astype(float),
+                "waking_units": zeros,
+                "utilization": util_agg,
+                "opp_index": (
+                    np.where(self.has_table, self.opp, 0).astype(float)
+                    if self._any_table
+                    else zeros
+                ),
+                "hedge_units": (
+                    h_arr.astype(float) if self._any_hedge else zeros
+                ),
+            }
+            if self.therm is not None and self._temp_rows:
+                ti = self.t_idx
+                temp = np.full(n, np.nan)
+                temp[ti] = self._temp_rows[-1]
+                thr = np.zeros(n)
+                thr[ti] = self._thr_rows[-1]
+                row["max_temp_c"] = temp
+                row["throttled_units"] = thr
+            probes.emit_tick(t, dt, row)
 
     def per_rack_telemetry(self) -> List[Telemetry]:
         ts = np.asarray(self._t_hist, float)
@@ -644,6 +811,7 @@ class Fleet:
         backend: str = "vector",
         idle_units_off: bool = True,
         sanitize: Optional[bool] = None,
+        obs: Optional["FleetObs"] = None,
     ) -> None:
         assert racks, "need at least one rack"
         self.racks = list(racks)
@@ -689,10 +857,41 @@ class Fleet:
         self._queued_rows: List[np.ndarray] = []
         self._wall_s = 0.0
         self._drained = True
+        self.obs = obs
+        if obs is not None:
+            self._wire_obs(obs)
         from repro.runtime.sanitize import (attach_fleet_sanitizer,
                                             resolve_sanitize)
         if resolve_sanitize(sanitize):
             attach_fleet_sanitizer(self)
+
+    def _wire_obs(self, obs: "FleetObs") -> None:
+        """Bind the observability config into whichever engine runs.
+
+        The scalar engine's ledger surface is each rack's own
+        ``UnitPool.charge`` (pool-side leaves, per tenant); the vector
+        engine records per-rack arrays per tick; the jax engine stays
+        pure inside ``lax.scan`` and its rows are expanded host-side
+        after each ``play`` (``_obs_expand_jax``)."""
+        if obs.probes is not None:
+            obs.probes.bind(self.rack_names)
+        self.engine.obs = obs
+        ledger = obs.ledger
+        if ledger is None:
+            return
+        if self.backend == "scalar":
+            for name, rt in zip(self.rack_names, self.engine.rts):
+                rt.pool.attach_ledger(ledger, rack=name)
+        elif self.backend == "vector":
+            ledger.register_fleet(self.rack_names, self.engine.p_shared)
+        else:
+            # jax: the scan reorders/fuses float ops, so the replay is
+            # promised within the engines' documented parity tolerance
+            # (the fig16 gate), not bitwise
+            ledger.tolerance = 1e-9
+            ledger.register_fleet(
+                self.rack_names, self.engine.arrays.p_shared
+            )
 
     @property
     def n_racks(self) -> int:
@@ -747,6 +946,9 @@ class Fleet:
                 self._queued_rows.append(np.asarray(row, np.int64))
             if jdrained is not None:
                 self._drained = bool(jdrained)
+            n_rows = len(trace) + n_drain
+            if self.obs is not None and n_rows > 0:
+                self._obs_expand_jax(n_rows)
             self._wall_s += time.perf_counter() - t0
             return self._build_telemetry()
         zero = np.zeros(self.n_racks)
@@ -773,6 +975,105 @@ class Fleet:
         return self._build_telemetry()
 
     # ------------------------------------------------------------------
+    def _obs_expand_jax(self, n_rows: int) -> None:
+        """Expand the jax engine's scanned per-tick rows (the last
+        ``n_rows`` of its cumulative history) into the obs surfaces.
+        The jitted scan stays pure — it only emits the extra arrays
+        (``opp``, ``w_req``, thermal floor counts) when obs is attached
+        — and this host loop mirrors the vector engine's per-tick
+        emission, so ledger causes and probe rows match the other
+        backends (ledger replay within ``ledger.tolerance``)."""
+        obs = self.obs
+        assert obs is not None
+        eng = self.engine
+        arr = eng.arrays
+        dt = eng.dt_s
+        n = eng.n_racks
+        ts = np.asarray(eng._t_hist, float)[-n_rows:]
+        power = eng._full("power")[-n_rows:]
+        active = eng._full("active")[-n_rows:]
+        util = eng._full("util")[-n_rows:]
+        hedge = eng._full("hedge")[-n_rows:]
+        opp_rows = eng._full("opp")[-n_rows:]
+        queued = np.stack(self._queued_rows[-n_rows:])
+        thermal = arr.thermal is not None and "temp" in eng._hist
+        if thermal:
+            t_idx = arr.thermal.t_idx
+            temp_rows = np.concatenate(eng._hist["temp"])[-n_rows:]
+            thr_rows = np.concatenate(eng._hist["thr"])[-n_rows:]
+            fan_rows = np.concatenate(eng._hist["fan"])[-n_rows:]
+            c_low_rows = np.concatenate(eng._hist["c_low"])[-n_rows:]
+            w_low_rows = np.concatenate(eng._hist["w_low"])[-n_rows:]
+        ledger = obs.ledger
+        if ledger is not None:
+            w_req_rows = eng._full("w_req")[-n_rows:]
+            has_table = arr.has_table
+            n_units = arr.n_units
+            p_base = arr.p_base
+            for i in range(n_rows):
+                h_i = hedge[i].astype(np.int64)
+                pw_cnt = active[i].astype(np.int64)
+                k_f = (pw_cnt - h_i).astype(float)
+                w_req = w_req_rows[i]
+                p_act = k_f * w_req
+                fan_w = np.zeros(n)
+                floor_units = floor_w = None
+                if thermal:
+                    c_low = c_low_rows[i]
+                    w_low = w_low_rows[i]
+                    floor_all = (opp_rows[i][t_idx] == 0) & (c_low > 0)
+                    mixed = (
+                        c_low * w_low[t_idx]
+                        + (k_f[t_idx] - c_low) * w_req[t_idx]
+                    )
+                    p_act[t_idx] = np.where(
+                        floor_all, k_f[t_idx] * w_low[t_idx], mixed
+                    )
+                    fan_w[t_idx] = fan_rows[i]
+                    floor_units = np.zeros(n)
+                    floor_units[t_idx] = c_low
+                    floor_w = np.zeros(n)
+                    floor_w[t_idx] = w_low[t_idx]
+                ledger.record_fleet_tick(
+                    float(ts[i]),
+                    dt,
+                    fan_w=fan_w,
+                    active_w=np.where(
+                        has_table, p_act, pw_cnt.astype(float) * w_req
+                    ),
+                    hedge_w=np.where(
+                        has_table, h_i.astype(float) * w_req, 0.0
+                    ),
+                    rest_w=(n_units - pw_cnt).astype(float) * p_base,
+                    hedge_units=h_i,
+                    rest_units=n_units - pw_cnt,
+                    floor_units=floor_units,
+                    floor_w=floor_w,
+                )
+        probes = obs.probes
+        if probes is not None and probes.active:
+            for i in range(n_rows):
+                row = {
+                    "power_w": power[i].copy(),
+                    "queued": queued[i].astype(float),
+                    "active_units": active[i].astype(float),
+                    "waking_units": np.zeros(n),
+                    "utilization": util[i].copy(),
+                    "opp_index": np.where(
+                        arr.has_table, opp_rows[i], 0
+                    ).astype(float),
+                    "hedge_units": hedge[i].astype(float),
+                }
+                if thermal:
+                    temp = np.full(n, np.nan)
+                    temp[t_idx] = temp_rows[i]
+                    thr = np.zeros(n)
+                    thr[t_idx] = thr_rows[i]
+                    row["max_temp_c"] = temp
+                    row["throttled_units"] = thr
+                probes.emit_tick(float(ts[i]), dt, row)
+
+    # ------------------------------------------------------------------
     def _build_telemetry(self) -> FleetTelemetry:
         offered = self._offered
         assigned = self._assigned
@@ -786,7 +1087,7 @@ class Fleet:
             p50, p95, p99 = (float(np.percentile(lats, q)) for q in (50, 95, 99))
         else:
             p50 = p95 = p99 = 0.0
-        return FleetTelemetry(
+        tel = FleetTelemetry(
             time_s=per_rack[0].time_s,
             offered_rps=np.asarray(offered, float),
             assigned_rps=np.stack(assigned).T,
@@ -805,3 +1106,8 @@ class Fleet:
             wall_s=wall,
             drained=self._drained,
         )
+        if self.obs is not None and self.obs.slo is not None:
+            # evaluate() resets rule state first, so rebuilding telemetry
+            # (cumulative across play_trace calls) stays idempotent
+            tel.alerts = self.obs.slo.evaluate(tel)
+        return tel

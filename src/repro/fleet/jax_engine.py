@@ -109,6 +109,10 @@ class _Dims(NamedTuple):
     n_groups: int
     max_sub: int
     hedge_on: bool
+    # emit the extra per-tick rows (opp, w_req, c_low, w_low) the host
+    # needs to expand observability state after the scan; compiled as a
+    # separate program so obs-off pays nothing
+    emit_obs: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -445,6 +449,12 @@ def _step(
         ys["fan"] = fan_t
         ys["temp"] = temp_t
         ys["thr"] = thr_t
+    if dims.emit_obs:
+        ys["opp"] = opp
+        ys["w_req"] = w_req
+        if dims.has_thermal:
+            ys["c_low"] = c_low_f
+            ys["w_low"] = w_low
     return new_carry, ys
 
 
@@ -541,7 +551,9 @@ def _base_params(
     return p
 
 
-def _make_dims(arr: FleetArrays, dt_s: float, hedge_on: bool) -> _Dims:
+def _make_dims(
+    arr: FleetArrays, dt_s: float, hedge_on: bool, emit_obs: bool = False
+) -> _Dims:
     th = arr.thermal
     return _Dims(
         kmax=int(arr.Kmax),
@@ -550,6 +562,7 @@ def _make_dims(arr: FleetArrays, dt_s: float, hedge_on: bool) -> _Dims:
         n_groups=0 if th is None else th.n_groups,
         max_sub=0 if th is None else th.max_substeps(dt_s),
         hedge_on=hedge_on,
+        emit_obs=emit_obs,
     )
 
 
@@ -717,6 +730,8 @@ class _JaxFleetEngine:
             getattr(router, "util_target", 0.85)
         )
         self._hedge_any = arr.any_hedge
+        # set by Fleet._wire_obs; rows are expanded host-side after play
+        self.obs: Optional[Any] = None
         # mutable per-rack state (mirrors _fresh_carry)
         n = arr.n_racks
         self._B = np.zeros(n)
@@ -805,7 +820,9 @@ class _JaxFleetEngine:
             self._A_buf = np.concatenate([self._A_buf, pad], axis=1)
             self._arr_buf = np.concatenate([self._arr_buf, pad.copy()], axis=1)
         hedge_on = self._hedge_any and self._A_buf.shape[1] > 0
-        dims = _make_dims(self.arrays, dt, hedge_on)
+        dims = _make_dims(
+            self.arrays, dt, hedge_on, emit_obs=self.obs is not None
+        )
         params = self._params
         carry = self._carry(hedge_on)
         zeros = np.zeros(_BLOCK)

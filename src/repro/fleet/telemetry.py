@@ -11,7 +11,7 @@ feeds the existing energy/TCO models: :meth:`energy_report` produces a
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Any, Dict, List
 
 import numpy as np
 
@@ -60,6 +60,9 @@ class FleetTelemetry:
     # still queued (sustained overload): served < offered and the
     # latency percentiles cover completed requests only.
     drained: bool = True
+    # SLO alert windows (repro.obs.slo.Alert), filled by Fleet when an
+    # obs config with an slo policy is attached; empty otherwise
+    alerts: List[Any] = field(default_factory=list)
 
     # ----- derived ---------------------------------------------------------
     @property
@@ -72,10 +75,15 @@ class FleetTelemetry:
 
     @property
     def duration_s(self) -> float:
+        """Covered time: span of tick starts plus the final tick's width
+        (taken from the last *actual* delta, so non-uniform tick spacing
+        — e.g. stitched traces — is measured correctly)."""
         if self.ticks < 1:
             return 0.0
-        dt = self.time_s[1] - self.time_s[0] if self.ticks > 1 else 1.0
-        return float(self.time_s[-1] - self.time_s[0] + dt)
+        if self.ticks == 1:
+            return 1.0
+        last_dt = self.time_s[-1] - self.time_s[-2]
+        return float(self.time_s[-1] - self.time_s[0] + last_dt)
 
     @property
     def total_power_w(self) -> np.ndarray:
@@ -147,4 +155,5 @@ class FleetTelemetry:
             "monthly_electricity_usd": self.monthly_electricity_usd(),
             "wall_s": self.wall_s,
             "drained": float(self.drained),
+            "alerts": float(len(self.alerts)),
         }

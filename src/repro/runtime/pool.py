@@ -41,7 +41,8 @@ power/active histories, temperature and throttle histograms — is
 from __future__ import annotations
 
 from enum import Enum
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (TYPE_CHECKING, Any, Dict, List, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -49,6 +50,9 @@ from repro.core.cluster import ClusterSpec, UnitSpec
 from repro.power.opp import OPPTable, unit_power
 from repro.power.thermal import (ThermalModel, ThermalParams,
                                  VectorThermalModel)
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (obs is optional)
+    from repro.obs.attribution import EnergyLedger
 
 
 class UnitState(str, Enum):
@@ -151,6 +155,10 @@ class UnitPool:
         self.max_temp_hist: List[float] = []
         self.throttled_hist: List[int] = []
         self.fan_power_hist: List[float] = []
+        # observability (attach_ledger): when unattached — the default —
+        # charge() pays exactly one is-None check per tick
+        self._obs_ledger: Optional["EnergyLedger"] = None
+        self._obs_rack = ""
 
     # -- queries -----------------------------------------------------------
     def active(self, tenant: str) -> int:
@@ -178,6 +186,9 @@ class UnitPool:
 
     def n_active(self) -> int:
         return sum(1 for s in self.state if s is UnitState.ACTIVE)
+
+    def n_waking_total(self) -> int:
+        return sum(1 for s in self.state if s is UnitState.WAKING)
 
     def free_units(self) -> int:
         return self.spec.n_units - self.n_allocated()
@@ -360,7 +371,24 @@ class UnitPool:
     def _new_power_buf(self, fill: float) -> Union[List[float], np.ndarray]:
         return [fill] * self.spec.n_units
 
+    def _n_latched_of(self, mine: Sequence[int]) -> int:
+        """Trip-latched dies among ``mine`` (ledger cause split)."""
+        assert self.thermal is not None
+        thr = self.thermal.throttled
+        return sum(1 for u in mine if thr[u])
+
     # -- accounting --------------------------------------------------------
+    def attach_ledger(self, ledger: "EnergyLedger", rack: str = "") -> None:
+        """Meter every subsequent ``charge`` tick into ``ledger`` under
+        rack label ``rack`` (default: the spec's name). The ledger's
+        replay starts from the pool's current ``energy_j``, so its
+        :meth:`~repro.obs.attribution.EnergyLedger.rack_energy_j` stays
+        bitwise-equal to this pool's integral even when attached
+        mid-run."""
+        self._obs_rack = rack or self.spec.name
+        self._obs_ledger = ledger
+        ledger.register_pool(self._obs_rack, base_energy_j=self.energy_j)
+
     def charge(self, t: float, dt_s: float, utils: Dict[str, float],
                extra: Optional[Dict[str, int]] = None,
                offered: float = 0.0, served: float = 0.0,
@@ -399,12 +427,18 @@ class UnitPool:
         p_tenant: Dict[str, float] = {}
         p_units = 0.0
         fan_w = 0.0
+        ledger = self._obs_ledger
+        # leaf groups mirror this loop's accumulation order exactly, so
+        # the ledger replay reproduces energy_j bitwise (see repro.obs)
+        groups: Optional[List[Any]] = [] if ledger is not None else None
         if self.opp_table is None:
             for name, cnt in powered.items():
                 u = min(max(utils[name], 0.0), 1.0)
                 p = cnt * unit.power(u)
                 p_tenant[name] = p
                 p_units += p
+                if groups is not None:
+                    groups.append((name, [("active", p, cnt)], 0, 0.0))
         else:
             table = self.opp_table
             # per-unit draw, for thermal: off/waking units at the floor
@@ -417,8 +451,9 @@ class UnitPool:
             for name, cnt in powered.items():
                 u = min(max(utils[name], 0.0), 1.0)
                 mine = self._active_units_of(name)
+                counts = self._opp_counts(mine)
                 p, pw_per_opp = _power_from_opp_counts(
-                    unit, u, table, self._opp_counts(mine))
+                    unit, u, table, counts)
                 if per_unit_w is not None:
                     self._scatter_unit_power(per_unit_w, mine, pw_per_opp)
                 # extras are metered at the tenant's requested point
@@ -436,6 +471,19 @@ class UnitPool:
                             per_unit_w[spare.pop()] = pw
                 p_tenant[name] = p
                 p_units += p
+                if groups is not None:
+                    # same products, same ascending-OPP order, same
+                    # zero-count skips as _power_from_opp_counts
+                    leaves: List[Tuple[str, float, int]] = [
+                        ("active:opp%d" % k, counts[k] * pw_per_opp[k],
+                         counts[k])
+                        for k in range(len(counts)) if counts[k]]
+                    if n_extra > 0:
+                        leaves.append(("hedge", n_extra * pw, n_extra))
+                    fu = self._n_latched_of(mine) \
+                        if self.thermal is not None else 0
+                    fw = pw_per_opp[table.lowest] if fu else 0.0
+                    groups.append((name, leaves, fu, fw))
             if self.thermal is not None:
                 fan_w = self.thermal.step(dt_s, per_unit_w)
                 self.max_temp_hist.append(self.thermal.max_die_temp_c())
@@ -445,6 +493,12 @@ class UnitPool:
         p_rest = rest * p_base
         total = self.spec.p_shared + fan_w + p_units + p_rest
         self.energy_j += total * dt_s
+        if ledger is not None:
+            assert groups is not None
+            ledger.record_pool_tick(
+                self._obs_rack, t, dt_s, shared_w=self.spec.p_shared,
+                fan_w=fan_w, groups=groups, rest_w=p_rest, rest_units=rest,
+                waking_units=self.n_waking_total())
         self.served += served
         for name, p in p_tenant.items():
             self.tenant_energy_j[name] = \
@@ -570,6 +624,14 @@ class VectorUnitPool(UnitPool):
 
     def n_active(self) -> int:
         return sum(self._n_active_of.values())
+
+    def n_waking_total(self) -> int:
+        return self._n_waking_total
+
+    def _n_latched_of(self, mine: Sequence[int]) -> int:
+        assert self.thermal is not None
+        return int(np.count_nonzero(
+            np.asarray(self.thermal.throttled)[np.asarray(mine, np.int64)]))
 
     # -- DVFS --------------------------------------------------------------
     def set_opp(self, tenant: str, idx: int) -> None:

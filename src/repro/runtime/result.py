@@ -132,11 +132,15 @@ class Telemetry:
 
     @property
     def duration_s(self) -> float:
+        """Covered time: span of tick starts plus the final tick's width
+        (taken from the last *actual* delta, so non-uniform tick spacing
+        — e.g. stitched traces — is measured correctly)."""
         if len(self.time_s) < 1:
             return 0.0
-        dt = (self.time_s[1] - self.time_s[0]) if len(self.time_s) > 1 \
-            else 1.0
-        return float(self.time_s[-1] - self.time_s[0] + dt)
+        if len(self.time_s) == 1:
+            return 1.0
+        last_dt = self.time_s[-1] - self.time_s[-2]
+        return float(self.time_s[-1] - self.time_s[0] + last_dt)
 
     @property
     def mean_active(self) -> float:

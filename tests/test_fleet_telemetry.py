@@ -1,0 +1,141 @@
+"""FleetTelemetry roll-ups: duration under non-uniform tick spacing,
+the energy/TCO bridges, proportionality edge cases, and the
+``drained=False`` sustained-overload path."""
+import numpy as np
+import pytest
+
+from repro.core.cluster import soc_cluster
+from repro.core.tco import ELECTRICITY_USD_PER_KWH, PUE_EDGE
+from repro.fleet import Fleet, JoinShortestQueueRouter, homogeneous_fleet
+from repro.fleet.telemetry import FleetTelemetry, empirical_proportionality
+from repro.runtime import ScalePolicy
+from repro.runtime.result import Telemetry
+
+
+def _mk(time_s, power_rows, **kw):
+    power_rows = np.asarray(power_rows, float)
+    racks, ticks = power_rows.shape
+    defaults = dict(
+        time_s=np.asarray(time_s, float),
+        offered_rps=np.zeros(ticks),
+        assigned_rps=np.zeros((racks, ticks)),
+        active_units=np.ones((racks, ticks)),
+        power_w=power_rows,
+        queued=np.zeros((racks, ticks), np.int64),
+        served=float(ticks),
+        energy_j=float(power_rows.sum() * 60.0),
+        p50_latency_s=0.1,
+        p95_latency_s=0.2,
+        p99_latency_s=0.3,
+    )
+    defaults.update(kw)
+    return FleetTelemetry(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# duration_s: actual tick deltas, not an assumed uniform grid.
+# ---------------------------------------------------------------------------
+def test_duration_uniform_spacing():
+    tel = _mk([0.0, 60.0, 120.0], np.ones((2, 3)))
+    assert tel.duration_s == 180.0
+
+
+def test_duration_nonuniform_spacing_uses_actual_deltas():
+    # stitched trace: deltas 1, 2, 4 — covered time is span + last width
+    # = (7 - 0) + (7 - 3) = 11, NOT ticks * first_delta = 4
+    tel = _mk([0.0, 1.0, 3.0, 7.0], np.ones((1, 4)))
+    assert tel.duration_s == 11.0
+    per_rack = Telemetry(time_s=np.array([0.0, 1.0, 3.0, 7.0]))
+    assert per_rack.duration_s == 11.0
+
+
+def test_duration_degenerate_lengths():
+    assert _mk(np.zeros(0), np.ones((1, 0)), served=0.0).duration_s == 0.0
+    assert _mk([5.0], np.ones((1, 1))).duration_s == 1.0
+    assert Telemetry(time_s=np.zeros(0)).duration_s == 0.0
+    assert Telemetry(time_s=np.array([3.0])).duration_s == 1.0
+
+
+def test_throughput_uses_covered_duration():
+    tel = _mk([0.0, 1.0, 3.0, 7.0], np.ones((1, 4)), served=22.0)
+    assert tel.throughput == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# empirical_proportionality edges.
+# ---------------------------------------------------------------------------
+def test_proportionality_empty_series_is_zero():
+    assert empirical_proportionality(np.zeros(0), np.zeros(0)) == 0.0
+
+
+def test_proportionality_zero_max_is_zero():
+    assert empirical_proportionality(np.array([1.0, 2.0]),
+                                     np.zeros(2)) == 0.0
+    assert empirical_proportionality(np.zeros(2),
+                                     np.array([1.0, 2.0])) == 0.0
+
+
+def test_proportionality_perfect_tracking_is_one():
+    load = np.array([10.0, 20.0, 40.0])
+    assert empirical_proportionality(load, 7.5 * load) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Energy/TCO bridges.
+# ---------------------------------------------------------------------------
+def test_energy_report_bridge_fields():
+    power = np.array([[100.0, 200.0, 300.0], [50.0, 50.0, 50.0]])
+    tel = _mk([0.0, 60.0, 120.0], power, served=90.0)
+    rep = tel.energy_report()
+    assert rep.joules == tel.energy_j
+    assert rep.avg_power_w == tel.mean_power_w == pytest.approx(250.0)
+    assert rep.peak_power_w == tel.peak_power_w == 350.0
+    assert rep.items == 90.0
+    assert rep.tpe == tel.tpe
+    assert rep.proportionality == tel.proportionality()
+
+
+def test_monthly_electricity_formula():
+    tel = _mk([0.0, 60.0], np.full((1, 2), 1000.0))
+    # 1 kW mean -> 720 kWh/month, priced at the EIA rate x PUE
+    expect = 720.0 * ELECTRICITY_USD_PER_KWH * PUE_EDGE
+    assert tel.monthly_electricity_usd() == pytest.approx(expect)
+    assert tel.monthly_electricity_usd(pue=1.0) == pytest.approx(
+        720.0 * ELECTRICITY_USD_PER_KWH)
+
+
+def test_summary_zero_tick_edge():
+    tel = _mk(np.zeros(0), np.ones((2, 0)), served=0.0, energy_j=0.0)
+    s = tel.summary()
+    assert s["mean_power_w"] == 0.0
+    assert s["peak_power_w"] == 0.0
+    assert s["mean_active_units"] == 0.0
+    assert s["proportionality"] == 0.0
+    assert s["monthly_electricity_usd"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Sustained overload: drained=False surfaces in the roll-up.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["scalar", "vector"])
+def test_overload_sets_drained_false(backend):
+    racks = homogeneous_fleet(soc_cluster(), 2, unit_rate=30.0,
+                              policy=ScalePolicy(cooldown_s=300.0))
+    fleet = Fleet(racks, router=JoinShortestQueueRouter(), dt_s=60.0,
+                  backend=backend)
+    # 40x capacity for 3 ticks: the 10x-trace drain cap cannot clear it
+    tel = fleet.play_trace([40.0 * fleet.capacity_rps] * 3)
+    assert tel.drained is False
+    assert tel.queued[:, -1].sum() > 0
+    assert tel.summary()["drained"] == 0.0
+
+
+def test_normal_run_sets_drained_true():
+    racks = homogeneous_fleet(soc_cluster(), 2, unit_rate=30.0,
+                              policy=ScalePolicy(cooldown_s=300.0))
+    fleet = Fleet(racks, router=JoinShortestQueueRouter(), dt_s=60.0,
+                  backend="vector")
+    tel = fleet.play_trace([0.3 * fleet.capacity_rps] * 5)
+    assert tel.drained is True
+    assert tel.summary()["drained"] == 1.0
+    assert tel.summary()["alerts"] == 0.0

@@ -1,0 +1,431 @@
+"""Observability layer: ledger bitwise replay on the fig14/fig15/fig16
+scenarios, probe parity across engines, obs-on == obs-off telemetry,
+chrome-trace validity, SLO alerting, and the exporters/report CLI.
+
+The ledger assertions use ``==`` (bitwise), not ``approx`` — that is
+the contract: on the scalar and vector backends every recorded joule
+replays to the exact ``energy_j`` float the engines integrated. The
+jax backend is compared within its documented 1e-9 relative parity
+budget (see ``tests/test_jax_parity.py``)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import edge_server_cpu, soc_cluster
+from repro.fleet import (Fleet, JoinShortestQueueRouter, diurnal_trace,
+                         flash_crowd_trace, homogeneous_fleet,
+                         scale_to_users)
+from repro.obs import (CAUSES, EnergyLedger, FleetObs, LatencyBurnRule,
+                       MemorySink, ProbeRegistry, QueueBlowupRule, SloPolicy,
+                       ThrottleStormRule, build_chrome_trace,
+                       validate_chrome_trace)
+from repro.power import (FixedFreqGovernor, SchedutilGovernor, ThermalParams,
+                         sd865_opp_table)
+from repro.runtime import (ClusterRuntime, MultiTenantRuntime, QueueWorkload,
+                           ScalePolicy, Tenant)
+
+UNIT_RATE = 30.0
+DT_S = 60.0
+JAX_RTOL = 1e-9
+
+
+def fig16_racks(dvfs=False, hedge=False, n_soc=4, n_cpu=2):
+    """The fig16 mixed fleet: SD865 racks + Xeon racks."""
+    policy = ScalePolicy(
+        cooldown_s=300.0, min_units=1,
+        freq_governor=SchedutilGovernor() if dvfs else None,
+        hedge_after_s=4 * DT_S if hedge else None)
+    kwargs = dict(opp_table=sd865_opp_table(),
+                  thermal=ThermalParams()) if dvfs else {}
+    racks = homogeneous_fleet(soc_cluster(), n_soc, unit_rate=UNIT_RATE,
+                              policy=policy, **kwargs)
+    racks += homogeneous_fleet(edge_server_cpu(), n_cpu, unit_rate=9.0)
+    return racks
+
+
+def fig16_trace(hours=2.0, frac=0.5, seed=9):
+    return scale_to_users(
+        diurnal_trace(peak_rps=1.0, hours=hours, dt_s=DT_S, seed=seed),
+        users=frac * 3e5, rps_per_user=0.02)
+
+
+def fresh_obs(slo=None):
+    return FleetObs(probes=ProbeRegistry([MemorySink()]),
+                    ledger=EnergyLedger(), slo=slo)
+
+
+# ---------------------------------------------------------------------------
+# Pool surface: fig15-style ClusterRuntime scenarios.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["scalar", "vector"])
+def test_pool_ledger_bitwise_fig15_dvfs_thermal(backend):
+    """Sustained near-peak load, schedutil + OPP table + RC thermal:
+    the ledger replay equals the pool integral bitwise."""
+    spec = soc_cluster()
+    rt = ClusterRuntime(
+        spec, QueueWorkload(unit_rate=10.0),
+        policy=ScalePolicy(cooldown_s=30.0,
+                           freq_governor=SchedutilGovernor()),
+        opp_table=sd865_opp_table(), thermal=ThermalParams(),
+        dt_s=1.0, backend=backend)
+    ledger = EnergyLedger()
+    rt.pool.attach_ledger(ledger)
+    offered = 0.8 * 10.0 * spec.n_units
+    for _ in range(120):
+        rt.submit(cost=offered, count=offered)
+        rt.tick()
+    assert ledger.rack_energy_j()[spec.name] == rt.pool.energy_j
+    assert ledger.total_energy_j() == rt.pool.energy_j
+    assert ledger.n_ticks == 120
+
+
+def test_pool_ledger_bitwise_under_throttling():
+    """fig15's sustained-peak throttling run: trip latches fire and the
+    throttle_floor cause appears, while the replay stays bitwise."""
+    spec = soc_cluster()
+    rt = ClusterRuntime(
+        spec, QueueWorkload(unit_rate=10.0),
+        policy=ScalePolicy(min_units=spec.n_units, cooldown_s=1e9,
+                           freq_governor=FixedFreqGovernor()),
+        opp_table=sd865_opp_table(),
+        # default fan_t_low_c (45C) sits just above this scenario's PCB
+        # steady state (~43.6C): dies trip but the fan never spins. Drop
+        # the fan-on threshold so the fan cause appears in the split.
+        thermal=ThermalParams(fan_t_low_c=40.0), dt_s=1.0)
+    ledger = EnergyLedger()
+    rt.pool.attach_ledger(ledger)
+    offered = 2.0 * 10.0 * spec.n_units
+    for _ in range(400):
+        rt.submit(cost=offered, count=offered)
+        rt.tick()
+    assert max(rt.pool.throttled_hist) > 0, "scenario must actually trip"
+    assert ledger.rack_energy_j()[spec.name] == rt.pool.energy_j
+    split = ledger.by_cause()
+    assert split.get("throttle_floor", 0.0) > 0.0
+    assert split.get("fan", 0.0) > 0.0
+    total = sum(split.values())
+    assert total == pytest.approx(ledger.total_energy_j(), rel=1e-9)
+
+
+def test_pool_ledger_bitwise_mid_run_attach():
+    """Attaching after some energy has accrued still replays bitwise
+    (the ledger seeds from the pool's integral at attach time)."""
+    spec = soc_cluster()
+    rt = ClusterRuntime(spec, QueueWorkload(unit_rate=10.0),
+                        policy=ScalePolicy(cooldown_s=30.0), dt_s=1.0)
+    for _ in range(25):
+        rt.submit(cost=100.0, count=100.0)
+        rt.tick()
+    ledger = EnergyLedger()
+    rt.pool.attach_ledger(ledger, rack="late")
+    for _ in range(25):
+        rt.submit(cost=100.0, count=100.0)
+        rt.tick()
+    assert ledger.rack_energy_j()["late"] == rt.pool.energy_j
+    assert ledger.n_ticks == 25
+
+
+def test_pool_ledger_bitwise_fig14_multi_tenant():
+    """fig14's colocated tenants (hedging on) meter into one ledger;
+    the replay is bitwise and each tenant shows up in the split."""
+    spec = soc_cluster()
+    names = ("transcoding", "dl-serving", "lm-serving")
+    policy = ScalePolicy(cooldown_s=120.0, min_units=2,
+                         hedge_after_s=4 * DT_S)
+    runtime = MultiTenantRuntime(
+        spec,
+        [Tenant(m, QueueWorkload(unit_rate=8.0, name=m), policy=policy)
+         for m in names],
+        dt_s=DT_S)
+    ledger = EnergyLedger()
+    runtime.pool.attach_ledger(ledger)
+    n = 48
+    traces = {
+        m: np.roll(diurnal_trace(peak_rps=8.0 * spec.n_units * 0.45,
+                                 hours=n * DT_S / 3600.0, dt_s=DT_S,
+                                 seed=i), i * n // 3)
+        for i, m in enumerate(names)
+    }
+    runtime.play_traces(traces, dt_s=DT_S)
+    assert ledger.rack_energy_j()[spec.name] == runtime.pool.energy_j
+    by_tenant = ledger.by_tenant()
+    for m in names:
+        assert by_tenant.get(m, 0.0) > 0.0
+    # tenant attribution matches the pool's own per-tenant meter
+    for m in names:
+        assert by_tenant[m] <= runtime.pool.energy_j
+
+
+# ---------------------------------------------------------------------------
+# Fleet surface: fig16 scenarios on all three engines.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["scalar", "vector"])
+@pytest.mark.parametrize("dvfs", [False, True])
+def test_fleet_ledger_bitwise_fig16(backend, dvfs):
+    fleet = Fleet(fig16_racks(dvfs=dvfs, hedge=dvfs),
+                  router=JoinShortestQueueRouter(), dt_s=DT_S,
+                  backend=backend, obs=fresh_obs())
+    tel = fleet.play_trace(fig16_trace())
+    ledger = fleet.obs.ledger
+    racks = ledger.rack_energy_j()
+    for name, rack_tel in zip(tel.rack_names, tel.per_rack):
+        assert racks[name] == rack_tel.energy_j, name
+    assert ledger.total_energy_j() == tel.energy_j
+    assert ledger.n_ticks == tel.ticks
+
+
+def test_fleet_ledger_bitwise_flash_crowd():
+    trace = flash_crowd_trace(base_rps=900.0, spike_mult=6.0, hours=1.0,
+                              dt_s=DT_S, noise=0.0)
+    for backend in ("scalar", "vector"):
+        fleet = Fleet(fig16_racks(), router=JoinShortestQueueRouter(),
+                      dt_s=DT_S, backend=backend, obs=fresh_obs())
+        tel = fleet.play_trace(trace)
+        assert fleet.obs.ledger.total_energy_j() == tel.energy_j
+
+
+def test_fleet_ledger_jax_within_tolerance():
+    pytest.importorskip("jax")
+    fleet = Fleet(fig16_racks(dvfs=True), router=JoinShortestQueueRouter(),
+                  dt_s=DT_S, backend="jax", obs=fresh_obs())
+    tel = fleet.play_trace(fig16_trace())
+    ledger = fleet.obs.ledger
+    assert ledger.tolerance == JAX_RTOL  # set by Fleet._wire_obs
+    racks = ledger.rack_energy_j()
+    for name, rack_tel in zip(tel.rack_names, tel.per_rack):
+        assert racks[name] == pytest.approx(rack_tel.energy_j,
+                                            rel=JAX_RTOL), name
+    assert ledger.total_energy_j() == pytest.approx(tel.energy_j,
+                                                    rel=JAX_RTOL)
+    assert ledger.n_ticks == tel.ticks
+
+
+def test_fleet_by_cause_partitions_energy():
+    fleet = Fleet(fig16_racks(dvfs=True), router=JoinShortestQueueRouter(),
+                  dt_s=DT_S, backend="vector", obs=fresh_obs())
+    tel = fleet.play_trace(fig16_trace())
+    ledger = fleet.obs.ledger
+    split = ledger.by_cause()
+    assert set(split) <= set(CAUSES)
+    assert sum(split.values()) == pytest.approx(tel.energy_j, rel=1e-9)
+    assert split["shared"] > 0 and split["active"] > 0
+    # gated-off units draw p_off = 0 W in these specs: the idle cause
+    # is metered (key present) but carries no energy
+    assert split["idle"] == 0.0
+    # per-(rack, tenant, cause) cells also re-sum to the total
+    cells = [j for tenants in ledger.by_rack_tenant_cause().values()
+             for causes in tenants.values() for j in causes.values()]
+    assert sum(cells) == pytest.approx(tel.energy_j, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Probes: cross-engine parity and the no-perturbation contract.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dvfs", [False, True])
+def test_probe_history_scalar_vector_bitwise(dvfs):
+    trace = fig16_trace(hours=1.0)
+    hists, times = {}, {}
+    for backend in ("scalar", "vector"):
+        obs = fresh_obs()
+        fleet = Fleet(fig16_racks(dvfs=dvfs),
+                      router=JoinShortestQueueRouter(), dt_s=DT_S,
+                      backend=backend, obs=obs)
+        fleet.play_trace(trace)
+        sink = obs.probes._sinks[0]
+        hists[backend] = sink.history()
+        times[backend] = sink.times()
+    assert np.array_equal(times["scalar"], times["vector"])
+    assert set(hists["scalar"]) == set(hists["vector"])
+    for metric, rows in hists["scalar"].items():
+        assert np.array_equal(rows, hists["vector"][metric],
+                              equal_nan=True), metric
+
+
+def test_probe_history_jax_matches_vector():
+    pytest.importorskip("jax")
+    trace = fig16_trace(hours=1.0)
+    hists = {}
+    for backend in ("vector", "jax"):
+        obs = fresh_obs()
+        fleet = Fleet(fig16_racks(), router=JoinShortestQueueRouter(),
+                      dt_s=DT_S, backend=backend, obs=obs)
+        fleet.play_trace(trace)
+        hists[backend] = obs.probes._sinks[0].history()
+    for metric in ("active_units", "queued", "hedge_units", "waking_units"):
+        assert np.array_equal(hists["vector"][metric], hists["jax"][metric]), \
+            metric
+    for metric in ("power_w", "utilization"):
+        np.testing.assert_allclose(hists["jax"][metric],
+                                   hists["vector"][metric], rtol=JAX_RTOL)
+
+
+@pytest.mark.parametrize("backend", ["scalar", "vector", "jax"])
+def test_obs_on_does_not_perturb_telemetry(backend):
+    if backend == "jax":
+        pytest.importorskip("jax")
+    trace = fig16_trace(hours=1.0)
+    plain = Fleet(fig16_racks(dvfs=True), router=JoinShortestQueueRouter(),
+                  dt_s=DT_S, backend=backend).play_trace(trace)
+    obs = Fleet(fig16_racks(dvfs=True), router=JoinShortestQueueRouter(),
+                dt_s=DT_S, backend=backend,
+                obs=fresh_obs()).play_trace(trace)
+    assert np.array_equal(plain.power_w, obs.power_w)
+    assert np.array_equal(plain.active_units, obs.active_units)
+    assert np.array_equal(plain.queued, obs.queued)
+    assert plain.energy_j == obs.energy_j
+    assert plain.served == obs.served
+
+
+def test_probe_registry_without_sinks_is_inactive():
+    reg = ProbeRegistry()
+    assert not reg.active
+    sink = reg.add_sink(MemorySink())
+    assert reg.active
+    reg.bind(["r0"])
+    reg.emit_tick(0.0, 1.0, {"power_w": np.array([5.0])})
+    assert sink.n_ticks == 1
+    assert sink.rack_names == ["r0"]
+    assert sink.history()["power_w"].shape == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# Request traces: chrome trace-event JSON.
+# ---------------------------------------------------------------------------
+def test_chrome_trace_validates_and_round_trips():
+    obs = fresh_obs()
+    fleet = Fleet(fig16_racks(dvfs=True), router=JoinShortestQueueRouter(),
+                  dt_s=DT_S, backend="vector", obs=obs)
+    tel = fleet.play_trace(fig16_trace(hours=1.0))
+    sink = obs.probes._sinks[0]
+    trace = build_chrome_trace(tel, probes=sink)
+    assert validate_chrome_trace(trace) == []
+    # survives JSON serialization (what Perfetto actually loads)
+    back = json.loads(json.dumps(trace))
+    assert back["displayTimeUnit"] == "ms"
+    events = back["traceEvents"]
+    phases = {ev["ph"] for ev in events}
+    assert "M" in phases and "X" in phases and "C" in phases
+    spans = [ev for ev in events if ev["ph"] == "X"]
+    assert spans, "sampled request spans must be present"
+    for ev in spans:
+        assert ev["ts"] >= 0 and ev["dur"] >= 0
+    counters = [ev for ev in events if ev["ph"] == "C"]
+    assert {"power_w"} <= {ev["name"].split("/")[0] for ev in counters}
+
+
+def test_chrome_trace_validator_flags_garbage():
+    assert validate_chrome_trace({"traceEvents": "nope"})
+    bad = {"traceEvents": [{"ph": "X", "name": "x", "ts": -5}]}
+    assert validate_chrome_trace(bad)
+
+
+# ---------------------------------------------------------------------------
+# SLO burn-rate alerts on FleetTelemetry.alerts.
+# ---------------------------------------------------------------------------
+def test_queue_blowup_alert_fires_under_overload():
+    # play_trace submits ONE aggregated request per rack per trace tick,
+    # so queue depth counts pending tick-batches: 2 racks x 3 overload
+    # ticks peaks at a fleet-wide total of 6
+    slo = SloPolicy([QueueBlowupRule(max_queued=3)])
+    fleet = Fleet(fig16_racks(n_soc=2, n_cpu=0),
+                  router=JoinShortestQueueRouter(), dt_s=DT_S,
+                  backend="vector", obs=FleetObs(slo=slo))
+    tel = fleet.play_trace([5.0 * fleet.capacity_rps] * 3)
+    assert tel.alerts, "sustained overload must raise queue_blowup"
+    alert = tel.alerts[0]
+    assert alert.rule == "queue_blowup"
+    assert alert.worst_value > alert.threshold
+    assert alert.t_end > alert.t_start
+    assert tel.summary()["alerts"] == float(len(tel.alerts))
+    rec = alert.to_record()
+    assert rec["rule"] == "queue_blowup"
+
+
+def test_latency_burn_alert_merges_windows():
+    # aggregated trace-tick batches mean few completions: a 2h window
+    # and min_count=2 keep the rolling p95 populated across the drain
+    slo = SloPolicy([LatencyBurnRule(target_s=30.0, window_s=7200.0,
+                                     min_count=2)])
+    fleet = Fleet(fig16_racks(n_soc=2, n_cpu=0),
+                  router=JoinShortestQueueRouter(), dt_s=DT_S,
+                  backend="vector", obs=FleetObs(slo=slo))
+    trace = [2.0 * fleet.capacity_rps] * 4 + [0.0] * 4
+    tel = fleet.play_trace(trace)
+    burn = [a for a in tel.alerts if a.rule == "latency_burn"]
+    assert burn, "queue-built latency must breach a 30s p95 target"
+    # consecutive violating ticks merged: windows don't overlap
+    for a, b in zip(burn, burn[1:]):
+        assert a.t_end <= b.t_start
+
+
+def test_quiet_run_produces_no_alerts():
+    slo = SloPolicy([QueueBlowupRule(max_queued=10_000),
+                     ThrottleStormRule(max_throttled_units=0),
+                     LatencyBurnRule(target_s=3600.0)])
+    fleet = Fleet(fig16_racks(), router=JoinShortestQueueRouter(),
+                  dt_s=DT_S, backend="vector", obs=FleetObs(slo=slo))
+    tel = fleet.play_trace(fig16_trace(hours=0.5, frac=0.3))
+    assert tel.alerts == []
+
+
+def test_slo_evaluate_is_deterministic():
+    slo = SloPolicy([QueueBlowupRule(max_queued=3)])
+    fleet = Fleet(fig16_racks(n_soc=2, n_cpu=0),
+                  router=JoinShortestQueueRouter(), dt_s=DT_S,
+                  backend="vector")
+    tel = fleet.play_trace([5.0 * fleet.capacity_rps] * 3)
+    first = [a.to_record() for a in slo.evaluate(tel)]
+    second = [a.to_record() for a in slo.evaluate(tel)]
+    assert first == second and first
+
+
+# ---------------------------------------------------------------------------
+# Exporters + the report CLI.
+# ---------------------------------------------------------------------------
+def test_exporters_write_all_formats(tmp_path):
+    from repro.obs.export import (metric_records, prometheus_text,
+                                  write_attribution_json, write_chrome_trace,
+                                  write_metrics_jsonl)
+    obs = fresh_obs()
+    fleet = Fleet(fig16_racks(), router=JoinShortestQueueRouter(),
+                  dt_s=DT_S, backend="vector", obs=obs)
+    tel = fleet.play_trace(fig16_trace(hours=0.5))
+    sink = obs.probes._sinks[0]
+
+    records = list(metric_records(sink))
+    assert records and all("metric" in r and "t" in r for r in records)
+
+    jl = tmp_path / "metrics.jsonl"
+    write_metrics_jsonl(jl, sink)
+    lines = jl.read_text().strip().splitlines()
+    assert len(lines) == len(records)
+    assert json.loads(lines[0])["metric"]
+
+    prom = prometheus_text(sink)
+    assert "# TYPE repro_fleet_power_w gauge" in prom
+    assert 'rack="' in prom
+
+    tr = tmp_path / "trace.json"
+    write_chrome_trace(tr, build_chrome_trace(tel, probes=sink))
+    assert json.loads(tr.read_text())["traceEvents"]
+
+    attr = tmp_path / "attribution.json"
+    write_attribution_json(attr, obs.ledger)
+    data = json.loads(attr.read_text())
+    assert data["total_energy_j"] == tel.energy_j
+    assert any(row["cause"] == "active" for row in data["records"])
+
+
+def test_report_cli_smoke(tmp_path):
+    from repro.obs.report import main
+    rc = main(["--backend", "vector", "--soc", "2", "--cpu", "1",
+               "--hours", "0.5", "--out-dir", str(tmp_path)])
+    assert rc == 0
+    for name in ("report.md", "report.html", "trace.json", "metrics.jsonl",
+                 "prometheus.txt", "attribution.json", "summary.json"):
+        assert (tmp_path / name).exists(), name
+    summary = json.loads((tmp_path / "summary.json").read_text())
+    assert summary["served"] > 0 and summary["drained"] == 1.0
+    assert validate_chrome_trace(
+        json.loads((tmp_path / "trace.json").read_text())) == []

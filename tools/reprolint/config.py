@@ -43,6 +43,13 @@ PARITY_CRITICAL = [
     "*repro/fleet/jax_engine.py",
     "*repro/runtime/pool.py",
     "*repro/power/thermal.py",
+    # The energy ledger replays engine accumulation bitwise (its sums
+    # must mirror the engines' exact expression trees), so it carries
+    # the same order-pinning contract. The rest of repro/obs (probes,
+    # exporters, SLO roll-ups, report) is deliberately NOT listed:
+    # those only read telemetry for display/alerting and never feed
+    # back into the parity-compared numbers.
+    "*repro/obs/attribution.py",
 ]
 
 #: Modules that *select* between alternatives scored by floats —

@@ -36,7 +36,17 @@ conclusions can flip versus single-rack ones. This benchmark drives a
      engine by >= ``MIN_SWEEP_SPEEDUP`` (5x) wall-clock — the
      payoff the jax backend exists for. Skipped cleanly when jax is
      not installed; selectable fleet-wide via ``run.py --backend``.
-  6. **Throughput** — steady-state rack-ticks/s of the vector engine
+  6. **Chaos** — correlated fault injection (``repro.fleet.chaos``):
+     10% of the mixed fleet's racks are killed at the peak operating
+     point and the recovery metrics must be non-vacuous —
+     join-shortest-queue re-converges (rolling p95 back within 10% of
+     the pre-fault baseline) in fewer ticks than capacity-oblivious
+     round-robin, whose uniform shares tip the small Xeon racks over
+     capacity while the SoC racks are dark; and on a flash crowd whose
+     spike coincides with the kill, straggler hedging cuts the
+     recovery-window p99 (the respill surge pushes queue waits past
+     ``hedge_after_s`` while scale-up is still cooldown-gated).
+  7. **Throughput** — steady-state rack-ticks/s of the vector engine
      must be >= 10x the scalar engine's, both on the binary-gating
      mixed fleet and with the frequency governor + thermal stack
      enabled — the configuration the PR 4 engine rejected outright
@@ -44,7 +54,7 @@ conclusions can flip versus single-rack ones. This benchmark drives a
 
 Asserts are enforced inline, like fig14/fig15. Under ``run.py --fast``
 (the CI tier-1 smoke) the machine-timing assertions of steps 1, 5
-and 6 are skipped — on shared runners a noisy neighbor could fail the
+and 7 are skipped — on shared runners a noisy neighbor could fail the
 *functional* job on wall-clock alone; the dedicated CI perf-gate job
 (``benchmarks/perf_gate.py``, 2x headroom) owns performance-regression
 detection there. A default (non-fast) run checks everything.
@@ -59,9 +69,10 @@ import numpy as np
 
 from benchmarks.common import emit, emit_metric, header
 from repro.core.cluster import edge_server_cpu, soc_cluster
-from repro.fleet import (Fleet, FleetTelemetry, JoinShortestQueueRouter,
-                         PowerAwareRouter, RackConfig, RoundRobinRouter,
-                         Router, diurnal_trace, flash_crowd_trace,
+from repro.fleet import (ChaosSchedule, Fleet, FleetTelemetry,
+                         JoinShortestQueueRouter, PowerAwareRouter,
+                         RackConfig, RoundRobinRouter, Router,
+                         diurnal_trace, flash_crowd_trace, hedging_delta,
                          homogeneous_fleet, scale_to_users)
 from repro.power import SchedutilGovernor, ThermalParams, sd865_opp_table
 from repro.runtime import ScalePolicy
@@ -247,6 +258,85 @@ def _jax_section(perf: bool, short: np.ndarray, crowd: np.ndarray,
         f"vector engine (measured {speedup:.1f}x)")
 
 
+def _chaos_section() -> None:
+    """Correlated rack kills (10% of racks) at the peak operating
+    point; both sub-scenarios are deterministic (steady plateau /
+    seeded crowd) so the recovery asserts are exact."""
+    def chaos_racks(hedge: Optional[float] = None) -> List[RackConfig]:
+        pol = ScalePolicy(cooldown_s=300.0, min_units=1,
+                          hedge_after_s=hedge)
+        racks = homogeneous_fleet(soc_cluster(), 16, SOC_UNIT_RATE,
+                                  policy=pol)
+        racks += homogeneous_fleet(edge_server_cpu(), 4, CPU_UNIT_RATE,
+                                   policy=pol)
+        return racks
+
+    # (a) JSQ vs capacity-oblivious RR through the same kill. The
+    # plateau sits at the load RR can run this fleet at all (uniform
+    # shares just under the Xeon racks' capacity — see the section-2
+    # note); the kill tips the live-rack share over it, so RR strands
+    # backlog on the small racks while JSQ routes around the hole.
+    plateau = np.full(360, 1700.0)
+
+    def kill_sched() -> ChaosSchedule:
+        sched = ChaosSchedule(on_kill="respill")
+        sched.kill_rack(0, start_s=120 * DT_S, end_s=180 * DT_S)
+        sched.kill_rack(1, start_s=120 * DT_S, end_s=180 * DT_S)
+        return sched
+
+    recov = {}
+    for router_cls in (JoinShortestQueueRouter, RoundRobinRouter):
+        fleet = Fleet(chaos_racks(), router=router_cls(), dt_s=DT_S,
+                      backend="vector", chaos=kill_sched(), sanitize=True)
+        tel = fleet.play_trace(plateau)
+        rec = tel.recovery
+        assert tel.drained and rec is not None
+        recov[router_cls.name] = rec
+        emit(f"fig16/chaos_{router_cls.name}", 0.0,
+             f"reconvergence_ticks={rec.reconvergence_ticks};"
+             f"p99_blowup={rec.p99_blowup:.2f};"
+             f"baseline_p95_s={rec.baseline_p95_s:.1f}")
+    jsq_r, rr_r = (recov["join-shortest-queue"], recov["round-robin"])
+    assert rr_r.reconvergence_ticks is not None \
+        and rr_r.reconvergence_ticks > 0 and rr_r.p99_blowup > 1.0, \
+        "the rack kill must visibly degrade round-robin (non-vacuous)"
+    assert jsq_r.reconvergence_ticks is not None \
+        and jsq_r.reconvergence_ticks < rr_r.reconvergence_ticks, \
+        "JSQ must re-converge faster than round-robin after a rack kill"
+
+    # (b) hedging benefit: the kill lands at a flash crowd's peak, the
+    # dead racks' queues respill onto already-loaded survivors, and
+    # waits cross hedge_after_s while cooldown still gates scale-up —
+    # exactly the window hedged borrowing exists for.
+    chaos_cap = sum(rc.spec.n_units * rc.unit_rate for rc in chaos_racks())
+    crowd = flash_crowd_trace(base_rps=0.3 * chaos_cap, spike_mult=4.0,
+                              hours=2.0, dt_s=DT_S, seed=16)
+    peak_tick = int(np.argmax(crowd))
+
+    def crowd_sched() -> ChaosSchedule:
+        sched = ChaosSchedule(on_kill="respill")
+        sched.kill_rack(0, start_s=peak_tick * DT_S,
+                        end_s=(peak_tick + 30) * DT_S)
+        sched.kill_rack(1, start_s=peak_tick * DT_S,
+                        end_s=(peak_tick + 30) * DT_S)
+        return sched
+
+    tel = Fleet(chaos_racks(hedge=180.0), router=JoinShortestQueueRouter(),
+                dt_s=DT_S, backend="vector", chaos=crowd_sched(),
+                sanitize=True).play_trace(crowd)
+    assert tel.respilled_requests > 0, \
+        "kill at the crowd peak must evacuate a non-empty queue"
+    delta = hedging_delta(chaos_racks(hedge=180.0), crowd, crowd_sched(),
+                          dt_s=DT_S, router=JoinShortestQueueRouter())
+    emit("fig16/chaos_hedging", 0.0,
+         f"respilled={tel.respilled_requests};"
+         f"with_hedge_p99_s={delta['recovery_p99_with_hedge_s']:.1f};"
+         f"without_hedge_p99_s={delta['recovery_p99_without_hedge_s']:.1f};"
+         f"benefit_s={delta['hedging_benefit_s']:.1f}")
+    assert delta["hedging_benefit_s"] > 0.0, \
+        "hedging must cut the recovery-window p99 (non-vacuously)"
+
+
 def run(perf: bool = True, backend: Optional[str] = None) -> None:
     """``backend`` overrides the engine of the sweep sections (1, 2, 4);
     the parity sections always pin their own engine pairs."""
@@ -368,7 +458,10 @@ def run(perf: bool = True, backend: Optional[str] = None) -> None:
     # --- 5. jax backend: tolerance parity + batched config sweep ----------
     _jax_section(perf, short, crowd, dvfs_short, d_v)
 
-    # --- 6. vectorized engine throughput ----------------------------------
+    # --- 6. chaos: correlated rack kills at peak --------------------------
+    _chaos_section()
+
+    # --- 7. vectorized engine throughput ----------------------------------
     if not perf:
         emit("fig16/speedup", 0.0, "skipped (--fast)")
         return

@@ -15,7 +15,6 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Sequence, Tuple
 
-import jax
 import numpy as np
 
 log = logging.getLogger(__name__)
@@ -130,6 +129,10 @@ def shrink_mesh_shape(shape: Tuple[int, ...], axes: Tuple[str, ...],
 def remesh_arrays(tree, new_shardings):
     """Re-shard a pytree of arrays onto a new mesh (device_put handles the
     all-to-all movement; from a checkpoint this is a plain sharded load)."""
+    # deferred: failure detection (HealthTracker) must stay importable
+    # without jax — the scalar/vector chaos path composes with it
+    import jax
+
     return jax.tree.map(
         lambda x, s: jax.device_put(x, s), tree, new_shardings)
 

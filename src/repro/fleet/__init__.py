@@ -15,6 +15,9 @@ claims can be evaluated at the scale public edge platforms run at
     ``vmap``\\ s whole fig15-style config grids into one XLA program;
   * :mod:`~repro.fleet.router` — round-robin, join-shortest-queue
     (water-fill), and power-aware (efficiency-packed) request routers;
+  * :mod:`~repro.fleet.chaos` — correlated fault injection (rack/unit
+    kills, shared-fan-rail failure, rack power caps) with recovery
+    metrics and seeded random schedules for the CI chaos gate;
   * :mod:`~repro.fleet.traces` — diurnal, flash-crowd, and replayed
     arrival traces, scalable to a target user population;
   * :class:`~repro.fleet.telemetry.FleetTelemetry` — fleet roll-ups
@@ -35,6 +38,16 @@ Typical use::
 """
 from typing import Any
 
+from repro.fleet.chaos import (
+    ChaosEvent,
+    ChaosMonitor,
+    ChaosSchedule,
+    RecoveryReport,
+    chaos_seed,
+    hedging_delta,
+    recovery_report,
+    recovery_window_p99,
+)
 from repro.fleet.fleet import Fleet, RackConfig, homogeneous_fleet
 from repro.fleet.router import (
     ROUTERS,
@@ -67,6 +80,14 @@ __all__ = [
     "Fleet",
     "RackConfig",
     "homogeneous_fleet",
+    "ChaosEvent",
+    "ChaosSchedule",
+    "ChaosMonitor",
+    "RecoveryReport",
+    "chaos_seed",
+    "hedging_delta",
+    "recovery_report",
+    "recovery_window_p99",
     "SweepConfig",
     "sweep",
     "Router",

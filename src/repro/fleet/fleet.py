@@ -40,6 +40,7 @@ per-rack ``select`` call against a real
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Any, List, Optional, Sequence, Tuple
@@ -47,6 +48,12 @@ from typing import TYPE_CHECKING, Any, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.cluster import ClusterSpec
+from repro.fleet.chaos import (
+    ChaosMonitor,
+    ChaosSchedule,
+    LoweredChaos,
+    recovery_report,
+)
 from repro.fleet.engine_state import (
     GOV_FIXED,
     GOV_RACE,
@@ -113,6 +120,25 @@ def homogeneous_fleet(
     ]
 
 
+def _init_chaos_state(engine: Any, n: int) -> None:
+    """Shared chaos bookkeeping both tick engines carry (inert until
+    ``apply_chaos`` is first called — the no-chaos fast paths check a
+    single bool). ``chaos_dead`` is the *current* per-rack down-unit
+    count; the cumulative counters feed telemetry and the sanitizer's
+    conservation credit."""
+    engine._chaos_active = False
+    engine.chaos_on_kill = "respill"
+    engine.chaos_dead = np.zeros(n, np.int64)
+    engine.chaos_fan = np.zeros(n, bool)
+    engine.chaos_cap = np.zeros(n, bool)
+    engine.chaos_evac_cost = 0.0
+    engine.chaos_evac_by_rack = np.zeros(n)
+    engine.chaos_dropped = 0
+    engine.chaos_dropped_cost = 0.0
+    engine.chaos_respilled = 0
+    engine.chaos_respilled_cost = 0.0
+
+
 class _ScalarFleetEngine:
     """Reference engine: one per-unit ClusterRuntime per rack."""
 
@@ -144,12 +170,60 @@ class _ScalarFleetEngine:
                     backend="scalar",
                 )
             )
+        self.n_units = np.array([rc.spec.n_units for rc in racks], np.int64)
+        _init_chaos_state(self, len(self.rts))
 
     def queued_cost(self) -> np.ndarray:
         return np.array([rt.workload.pending_cost for rt in self.rts], float)
 
     def active_units(self) -> np.ndarray:
         return np.array([rt.active_units for rt in self.rts], np.int64)
+
+    def apply_chaos(
+        self,
+        dead: np.ndarray,
+        fan_fail: np.ndarray,
+        power_cap: np.ndarray,
+    ) -> float:
+        """Impose one tick's fault masks on every rack (called by the
+        fleet driver *before* routing). Kills are count-granular: the
+        governor's ``unit_cap`` force-releases units beyond the cap and
+        blocks hedging past it, so the pool's charge arithmetic never
+        changes. A full-rack kill *edge* evacuates the rack's queue;
+        the evacuated cost is returned for the driver to re-offer
+        (``on_kill="respill"``) or counted as dropped. Racks are walked
+        in ascending order so the respilled total accumulates in the
+        same float order as the vector engine's."""
+        spill = 0.0
+        prev = self.chaos_dead
+        respill = self.chaos_on_kill == "respill"
+        for r, rt in enumerate(self.rts):
+            d = int(dead[r])
+            nu = int(self.n_units[r])
+            if d >= nu and prev[r] < nu:
+                n_req, cost = rt.workload.evacuate()
+                self.chaos_evac_cost += cost
+                self.chaos_evac_by_rack[r] += cost
+                if respill:
+                    spill += cost
+                    self.chaos_respilled += n_req
+                    self.chaos_respilled_cost += cost
+                else:
+                    self.chaos_dropped += n_req
+                    self.chaos_dropped_cost += cost
+            gov = rt.governor
+            gov.unit_cap = (nu - d) if d > 0 else None
+            gov.force_floor_opp = bool(power_cap[r])
+            pool_th = rt.pool.thermal
+            if pool_th is not None:
+                pool_th.fan_failed = bool(fan_fail[r])
+        np.copyto(self.chaos_dead, dead)
+        np.copyto(self.chaos_fan, fan_fail)
+        np.copyto(self.chaos_cap, power_cap)
+        self._chaos_active = bool(
+            dead.any() or fan_fail.any() or power_cap.any()
+        )
+        return spill
 
     def tick(self, assign_rps: np.ndarray, dt: float
              ) -> Tuple[np.ndarray, np.ndarray]:
@@ -284,14 +358,22 @@ class _StackedThermal:
         return bool(self.latched.any())
 
     def step(
-        self, dt: float, pw: np.ndarray
+        self, dt: float, pw: np.ndarray,
+        fan_fail: Optional[np.ndarray] = None,
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Advance every stacked network one tick under the flat
         per-unit power draw; returns per-thermal-rack ``(fan_w,
-        max_die_temp_c, n_throttled)`` — the three pool histograms."""
+        max_die_temp_c, n_throttled)`` — the three pool histograms.
+        ``fan_fail`` (chaos, per thermal rack) pins a failed shared fan
+        rail's airflow at zero: frac = 0.0 collapses ``r_pcb`` to the
+        no-airflow resistance and ``fan_w`` to 0.0, bitwise the scalar
+        ``ThermalModel.fan_failed`` path; healthy racks' fracs are left
+        untouched."""
         hottest = np.maximum.reduceat(self.t_pcb, self.group_starts)
         raw_frac = (hottest - self.fan_low) / self.fan_span
         frac = np.minimum(1.0, np.maximum(0.0, raw_frac))
+        if fan_fail is not None and fan_fail.any():
+            frac = np.where(fan_fail, 0.0, frac)
         r_pcb = self.r_pcb0 * (1.0 - (1.0 - self.fan_rmin) * frac)
         tau = np.minimum(self.r_die * self.c_die, r_pcb * self.c_pcb)
         denom = np.maximum(0.25 * tau, 1e-6)
@@ -433,12 +515,47 @@ class _VectorFleetEngine:
         self._fan_rows: List[np.ndarray] = []
         self._temp_rows: List[np.ndarray] = []
         self._thr_rows: List[np.ndarray] = []
+        _init_chaos_state(self, n)
 
     def queued_cost(self) -> np.ndarray:
         return np.array([wl.pending_cost for wl in self.wls], float)
 
     def active_units(self) -> np.ndarray:
         return self.active.copy()
+
+    def apply_chaos(
+        self,
+        dead: np.ndarray,
+        fan_fail: np.ndarray,
+        power_cap: np.ndarray,
+    ) -> float:
+        """Vector twin of the scalar engine's ``apply_chaos``: same
+        ascending-rack evacuation order (so the respilled total is the
+        same float accumulation), same counters. The masks themselves
+        are folded into :meth:`tick` as overlays — carried governor
+        state (``self.opp``, cooldown stamps) is never clobbered."""
+        spill = 0.0
+        prev = self.chaos_dead
+        respill = self.chaos_on_kill == "respill"
+        nu = self.n_units
+        for r in np.nonzero((dead >= nu) & (prev < nu))[0]:
+            n_req, cost = self.wls[r].evacuate()
+            self.chaos_evac_cost += cost
+            self.chaos_evac_by_rack[r] += cost
+            if respill:
+                spill += cost
+                self.chaos_respilled += n_req
+                self.chaos_respilled_cost += cost
+            else:
+                self.chaos_dropped += n_req
+                self.chaos_dropped_cost += cost
+        np.copyto(self.chaos_dead, dead)
+        np.copyto(self.chaos_fan, fan_fail)
+        np.copyto(self.chaos_cap, power_cap)
+        self._chaos_active = bool(
+            dead.any() or fan_fail.any() or power_cap.any()
+        )
+        return spill
 
     # ------------------------------------------------------------------
     def _select_opps(self, rate: np.ndarray, t: float) -> None:
@@ -507,9 +624,21 @@ class _VectorFleetEngine:
         # frequency governors pick this tick's OPP; the activation
         # target is then sized against that point's effective rate
         self._select_opps(rate, t)
+        # chaos overlays (inert fast path: one bool when no fault is
+        # live). Killed units shrink the usable rack; a power-capped
+        # rack *runs* at the floor point this tick while the carried
+        # governor state (self.opp) is untouched — exactly the scalar
+        # governor's force_floor_opp / unit_cap semantics.
+        chaos = self._chaos_active
+        if chaos:
+            cap_units = self.n_units - self.chaos_dead
+            opp_eff = np.where(self.chaos_cap & self.has_table, 0, self.opp)
+        else:
+            cap_units = self.n_units
+            opp_eff = self.opp
         # the chosen points' perf scales, for both activation sizing and
         # the workload's mean perf multiplier
-        perf_req = self.perf_tab[self._rr, self.opp]
+        perf_req = self.perf_tab[self._rr, opp_eff]
         perf_sz = np.where(self.has_table, perf_req, 1.0)
         # UnitGovernor.target_units with group == 1
         need = rate * self.headroom / (self.unit_rate * np.maximum(perf_sz, 1e-9))
@@ -518,6 +647,12 @@ class _VectorFleetEngine:
         # UnitGovernor.apply_target: immediate scale-up, cooldown-gated
         # scale-down to max(min floor, target)
         active = self.active
+        if chaos:
+            # killed units are force-released (no cooldown stamp, no
+            # scale event — a fault is not a scaling decision) and the
+            # target is capped, mirroring apply_target's unit_cap path
+            tgt = np.minimum(tgt, cap_units)
+            active = np.minimum(active, cap_units)
         up = tgt > active
         keep = np.maximum(self.minq, tgt)
         in_cooldown = t - self.last_down > self.cooldown
@@ -529,8 +664,19 @@ class _VectorFleetEngine:
         self.active = new_active
         k_f = new_active.astype(float)
         # mean perf-scale over each rack's active units (pool.perf_scale:
-        # trip-latched units are dragged to the floor point)
-        perf_used = np.where(self.has_table, (k_f * perf_req) / k_f, 1.0)
+        # trip-latched units are dragged to the floor point). A fully
+        # killed rack has k == 0: the pool returns the requested point's
+        # perf there (k_div only rewrites the k == 0 lanes — for k >= 1
+        # the division is bitwise the original expression)
+        if chaos:
+            k_div = np.maximum(k_f, 1.0)
+            perf_used = np.where(
+                self.has_table,
+                np.where(new_active > 0, (k_f * perf_req) / k_div, perf_req),
+                1.0,
+            )
+        else:
+            perf_used = np.where(self.has_table, (k_f * perf_req) / k_f, 1.0)
         latched_any = self.therm is not None and self.therm.any_latched()
         floor_all = None
         if latched_any:
@@ -542,13 +688,21 @@ class _VectorFleetEngine:
             c_low_f = c_low_t.astype(float)
             k_t = k_f[ti]
             p0 = self.perf_tab[ti, 0]
-            pr = self.perf_tab[ti, self.opp[ti]]
+            pr = self.perf_tab[ti, opp_eff[ti]]
             # single product when everything lands in the floor bucket,
             # the two-bucket ascending accumulation otherwise — exactly
             # _perf_from_opp_counts
-            floor_all = (self.opp[ti] == 0) & (c_low_t > 0)
+            floor_all = (opp_eff[ti] == 0) & (c_low_t > 0)
             mixed = c_low_f * p0 + (k_t - c_low_f) * pr
-            perf_used[ti] = np.where(floor_all, k_t * p0, mixed) / k_t
+            if chaos:
+                k_div_t = np.maximum(k_t, 1.0)
+                perf_used[ti] = np.where(
+                    k_t > 0,
+                    np.where(floor_all, k_t * p0, mixed) / k_div_t,
+                    pr,
+                )
+            else:
+                perf_used[ti] = np.where(floor_all, k_t * p0, mixed) / k_t
         else:
             am = c_low_f = None
         # fluid FIFO drain per rack (QueueWorkload.step_fast — the
@@ -558,6 +712,9 @@ class _VectorFleetEngine:
         n = len(self.wls)
         acts = new_active.tolist()
         nu_l = self.n_units.tolist()
+        # hedging may only borrow a *live* unit (scalar: unit_cap gates
+        # the borrow in MultiTenantRuntime)
+        cap_l = cap_units.tolist() if chaos else nu_l
         perf_l = perf_used.tolist()
         hedges = [0] * n
         utils_l: List[float] = []
@@ -569,7 +726,7 @@ class _VectorFleetEngine:
             a = acts[r]
             h = 0
             dl = self._hedge_deadline[r]
-            if dl is not None and a < nu_l[r]:
+            if dl is not None and a < cap_l[r]:
                 age = wl.oldest_waiting_s(t)
                 if age is not None and age > dl:
                     h = 1
@@ -593,7 +750,7 @@ class _VectorFleetEngine:
         # hedge unit at the requested point, the rest at the gated floor
         u = np.minimum(np.maximum(utils, 0.0), 1.0)
         ug = u**self.gamma
-        w_req = self.p_idle + self.spk_tab[self._rr, self.opp] * ug
+        w_req = self.p_idle + self.spk_tab[self._rr, opp_eff] * ug
         h_f = h_arr.astype(float)
         powered = new_active + h_arr
         powered_f = powered.astype(float)
@@ -618,7 +775,9 @@ class _VectorFleetEngine:
                 np.copyto(pw, w_low[ti][th.rack_u], where=am & th.latched)
             for j in np.nonzero(h_arr[ti] > 0)[0]:
                 pw[th.last_unit[j]] = w_req[ti[j]]
-            f_t, temp_t, thr_t = th.step(dt, pw)
+            f_t, temp_t, thr_t = th.step(
+                dt, pw, fan_fail=self.chaos_fan[ti] if chaos else None
+            )
             fan_w[ti] = f_t
             self._fan_rows.append(f_t)
             self._temp_rows.append(temp_t)
@@ -644,6 +803,7 @@ class _VectorFleetEngine:
                 t,
                 dt,
                 total=total,
+                opp_eff=opp_eff,
                 queued=queued,
                 powered=powered,
                 powered_f=powered_f,
@@ -666,6 +826,7 @@ class _VectorFleetEngine:
         dt: float,
         *,
         total: np.ndarray,
+        opp_eff: np.ndarray,
         queued: np.ndarray,
         powered: np.ndarray,
         powered_f: np.ndarray,
@@ -726,7 +887,7 @@ class _VectorFleetEngine:
                 "waking_units": zeros,
                 "utilization": util_agg,
                 "opp_index": (
-                    np.where(self.has_table, self.opp, 0).astype(float)
+                    np.where(self.has_table, opp_eff, 0).astype(float)
                     if self._any_table
                     else zeros
                 ),
@@ -812,6 +973,7 @@ class Fleet:
         idle_units_off: bool = True,
         sanitize: Optional[bool] = None,
         obs: Optional["FleetObs"] = None,
+        chaos: Optional[ChaosSchedule] = None,
     ) -> None:
         assert racks, "need at least one rack"
         self.racks = list(racks)
@@ -850,6 +1012,20 @@ class Fleet:
         self.rack_names = [
             rc.name or f"{rc.spec.name}/{i}" for i, rc in enumerate(self.racks)
         ]
+        self.chaos = chaos
+        self._lowered: Optional[LoweredChaos] = None
+        self.chaos_monitor: Optional[ChaosMonitor] = None
+        if chaos is not None:
+            self._lowered = chaos.lower([int(u) for u in self._n_units])
+            if hasattr(self.engine, "set_chaos"):
+                # jax: lowered once into per-tick mask rows, scanned
+                self.engine.set_chaos(self._lowered)
+            else:
+                self.engine.chaos_on_kill = self._lowered.on_kill
+            # a rack that misses two tick heartbeats is declared failed
+            self.chaos_monitor = ChaosMonitor(
+                self.n_racks, timeout_s=2.0 * dt_s
+            )
         # cumulative per-tick driver history (grows across play_trace calls,
         # in lockstep with the engines' own cumulative state)
         self._offered: List[float] = []
@@ -903,15 +1079,41 @@ class Fleet:
         return float(self._capacity.sum())  # reprolint: ok[RPL001] roll-up-only fleet metric; never enters the bitwise-compared telemetry
 
     def view(self) -> FleetView:
+        capacity = self._capacity
+        alive = None
+        if self._lowered is not None:
+            # routers see the degraded fleet: killed units shrink a
+            # rack's advertised capacity, a fully dead rack is excluded
+            # outright (alive mask). With no live fault both fields are
+            # bitwise the no-chaos view.
+            dead = getattr(self.engine, "chaos_dead", None)
+            if dead is not None and dead.any():
+                live = (self._n_units - dead).astype(float)
+                capacity = self._capacity * (
+                    live / self._n_units.astype(float)
+                )
+                alive = dead < self._n_units
         return FleetView(
             t=self.engine.now,
             dt_s=self.dt_s,
-            capacity_rps=self._capacity,
+            capacity_rps=capacity,
             queued_cost=self.engine.queued_cost(),
             active_units=self.engine.active_units(),
             n_units=self._n_units,
             full_load_j_per_req=self._jpr,
+            alive=alive,
         )
+
+    def _chaos_step(self) -> float:
+        """Apply the schedule's masks at the engine clock's current
+        tick; returns the respill *rate* (rps) to fold into this tick's
+        routed total (0.0 unless a full-rack kill edge fired under
+        ``on_kill="respill"``)."""
+        assert self._lowered is not None
+        dead, fan, cap = self._lowered.masks_at(self.engine.now)
+        if self.chaos_monitor is not None:
+            self.chaos_monitor.observe(self.engine.now, dead, self._n_units)
+        return self.engine.apply_chaos(dead, fan, cap) / self.dt_s
 
     def play_trace(
         self, trace_rps: Sequence[float], drain: bool = True
@@ -934,14 +1136,40 @@ class Fleet:
             assigned, queued_rows, n_drain, jdrained = self.engine.play(
                 trace, drain=drain
             )
+            # chaos respill re-entered the in-scan routed total; mirror
+            # it into the driver's offered series (the scalar/vector
+            # loops add _chaos_step's respill rate before routing)
+            extra = None
+            n_new = len(trace) + n_drain
+            if (
+                self._lowered is not None
+                and self._lowered.on_kill == "respill"
+                and n_new > 0
+            ):
+                ev = self.engine._full("evac")
+                if ev.shape[0] >= n_new:
+                    extra = ev[-n_new:].sum(axis=1) / dt  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
             for i, rps in enumerate(trace):
-                self._offered.append(float(rps))
+                off = float(rps)
+                if extra is not None:
+                    off += float(extra[i])
+                self._offered.append(off)
                 self._assigned.append(np.asarray(assigned[i], float))
             for j in range(n_drain):
-                self._offered.append(0.0)
+                off = 0.0
+                if extra is not None:
+                    off += float(extra[len(trace) + j])
+                self._offered.append(off)
                 self._assigned.append(
                     np.asarray(assigned[len(trace) + j], float)
                 )
+            if self.chaos_monitor is not None and n_new > 0:
+                # replay the tick heartbeats the in-scan run could not
+                # deliver live (tick-deterministic, same masks)
+                assert self._lowered is not None
+                for t in np.asarray(self.engine._t_hist, float)[-n_new:]:
+                    d, _, _ = self._lowered.masks_at(float(t))
+                    self.chaos_monitor.observe(float(t), d, self._n_units)
             for row in queued_rows:
                 self._queued_rows.append(np.asarray(row, np.int64))
             if jdrained is not None:
@@ -953,17 +1181,30 @@ class Fleet:
             return self._build_telemetry()
         zero = np.zeros(self.n_racks)
         queued = conc = None
+        lowered = self._lowered
         for rps in trace:
-            assign = np.asarray(self.router.route(float(rps), self.view()), float)
-            self._offered.append(float(rps))
+            total = float(rps)
+            if lowered is not None:
+                total += self._chaos_step()
+            assign = np.asarray(self.router.route(total, self.view()), float)
+            self._offered.append(total)
             self._assigned.append(assign)
             queued, conc = self.engine.tick(assign, dt)
             self._queued_rows.append(queued)
         if drain:
             for _ in range(10 * len(trace) + 100):
-                self._offered.append(0.0)
-                self._assigned.append(zero)
-                queued, conc = self.engine.tick(zero, dt)
+                total = self._chaos_step() if lowered is not None else 0.0
+                if total > 0.0:
+                    # a kill edge during drain respills the dead rack's
+                    # backlog through the router like any offered load
+                    assign = np.asarray(
+                        self.router.route(total, self.view()), float
+                    )
+                else:
+                    assign = zero
+                self._offered.append(total)
+                self._assigned.append(assign)
+                queued, conc = self.engine.tick(assign, dt)
                 self._queued_rows.append(queued)
                 if int(queued.sum()) == 0 and int(conc.sum()) == 0:  # reprolint: ok[RPL001] zero-test only: sum()==0 iff all elements are 0, order-free
                     break
@@ -1106,6 +1347,25 @@ class Fleet:
             wall_s=wall,
             drained=self._drained,
         )
+        if self.chaos is not None:
+            eng = self.engine
+            tel.chaos_events = [e.to_record() for e in self.chaos.events]
+            tel.dropped_requests = int(getattr(eng, "chaos_dropped", 0))
+            tel.dropped_cost = float(getattr(eng, "chaos_dropped_cost", 0.0))
+            tel.respilled_requests = int(getattr(eng, "chaos_respilled", 0))
+            tel.respilled_cost = float(
+                getattr(eng, "chaos_respilled_cost", 0.0)
+            )
+            fault_t = self.chaos.fault_t
+            if math.isfinite(fault_t):
+                tel.recovery = recovery_report(
+                    tel,
+                    fault_t,
+                    dropped_requests=tel.dropped_requests,
+                    dropped_cost=tel.dropped_cost,
+                    respilled_requests=tel.respilled_requests,
+                    respilled_cost=tel.respilled_cost,
+                )
         if self.obs is not None and self.obs.slo is not None:
             # evaluate() resets rule state first, so rebuilding telemetry
             # (cumulative across play_trace calls) stays idempotent

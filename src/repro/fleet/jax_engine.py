@@ -113,21 +113,39 @@ class _Dims(NamedTuple):
     # needs to expand observability state after the scan; compiled as a
     # separate program so obs-off pays nothing
     emit_obs: bool = False
+    # chaos mask rows are threaded through xs and the evacuation /
+    # unit-cap / floor-OPP overlays run in-scan; compiled separately so
+    # a chaos-free fleet runs the exact pre-chaos program
+    chaos_on: bool = False
 
 
 # ---------------------------------------------------------------------------
 # pure per-tick pipeline (everything below runs under jit)
 
 
-def _route(params: Dict[str, Any], queued: Any, total: Any, dt: Any) -> Any:
+def _route(
+    params: Dict[str, Any],
+    queued: Any,
+    total: Any,
+    dt: Any,
+    cap: Any,
+    alive: Optional[Any],
+) -> Any:
     """All three routers, computed branchlessly and selected by
     ``params["router_kind"]`` — which is what lets a vmapped sweep give
-    every config its own router. Mirrors ``repro.fleet.router``."""
-    cap = params["capacity_rps"]
+    every config its own router. Mirrors ``repro.fleet.router``.
+
+    ``cap`` is the (possibly chaos-degraded) per-rack capacity;
+    ``alive`` is the chaos liveness mask (``None`` statically when no
+    chaos is wired, keeping the compiled program unchanged)."""
     n = cap.shape[0]
     rk = params["router_kind"]
-    # round-robin: uniform spread
-    rr = jnp.full(n, total / n)
+    # round-robin: uniform spread (over live racks only under chaos)
+    if alive is None:
+        rr = jnp.full(n, total / n)
+    else:
+        n_alive = jnp.sum(alive.astype(jnp.int64))  # reprolint: ok[RPL001] int64 counter, exact in any order
+        rr = jnp.where(alive, total / jnp.maximum(n_alive, 1), 0.0)
     # join-shortest-queue: water-fill on expected queueing delay
     capm = jnp.maximum(cap, 1e-12)
     work = total * dt
@@ -156,7 +174,9 @@ def _route(params: Dict[str, Any], queued: Any, total: Any, dt: Any) -> Any:
     rem = total - jnp.sum(take)  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
     take = take + jnp.where(rem > 1e-12, greedy(rem, capo - take), 0.0)
     rem2 = total - jnp.sum(take)  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
-    spread = rem2 * capo / jnp.sum(capo)  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
+    # chaos: a fully-dead fleet has zero capacity — guard the spread
+    # denominator (the numerator is already zero, so the quotient is 0)
+    spread = rem2 * capo / jnp.maximum(jnp.sum(capo), 1e-12)  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
     take = take + jnp.where(rem2 > 1e-12, spread, 0.0)
     pa = jnp.zeros(n).at[porder].set(take)
     assign = jnp.where(rk == 0, rr, jnp.where(rk == 1, jsq, pa))
@@ -215,17 +235,24 @@ def _thermal_step(
     latched: Any,
     pw: Any,
     dt: Any,
+    fan_fail: Optional[Any] = None,
 ) -> Tuple[Any, Any, Any, Any, Any, Any]:
     """Stacked RC Euler step (twin of ``_StackedThermal.step``). The
     per-rack sub-step counts are data-dependent, so a ``fori_loop``
     runs to the static worst case (``ThermalLayout.max_substeps``) with
-    per-rack live masks — masked racks add exact zeros."""
+    per-rack live masks — masked racks add exact zeros.
+
+    ``fan_fail`` (chaos, per thermal rack) pins the fan fraction to
+    exactly 0.0: zero airflow, zero fan power, and the PCB resistance
+    collapses to ``r_pcb0`` exactly (``1 - (1 - rmin) * 0.0 == 1``)."""
     rack_u = params["th_rack_u"]
     rack_g = params["th_rack_g"]
     group_of_u = params["th_group_of_u"]
     hottest = jax.ops.segment_max(t_pcb, rack_g, num_segments=dims.nt)
     raw_frac = (hottest - params["th_fan_low"]) / params["th_fan_span"]
     frac = jnp.clip(raw_frac, 0.0, 1.0)
+    if fan_fail is not None:
+        frac = jnp.where(fan_fail, 0.0, frac)
     r_pcb = params["th_r_pcb0"] * (1.0 - (1.0 - params["th_fan_rmin"]) * frac)
     tau = jnp.minimum(
         params["th_r_die"] * params["th_c_die"], r_pcb * params["th_c_pcb"]
@@ -275,12 +302,44 @@ def _step(
     A = carry["A"]
     S = carry["S"]
     total = x["rps"] * params["trace_scale"]
-    assign = _route(params, B, total, dt)
+    # chaos overlays (compiled out entirely when dims.chaos_on is off).
+    # A full-rack kill edge evacuates the rack's pending cost *before*
+    # routing — exactly the scalar/vector drivers' _chaos_step order —
+    # and under on_kill="respill" the evacuated mass re-enters this
+    # tick's offered total through the router like any other load.
+    if dims.chaos_on:
+        kill_edge = x["chaos_kill"]
+        evac = jnp.where(kill_edge, B, 0.0)
+        B = jnp.where(kill_edge, 0.0, B)
+        E_new = carry["E"] + evac
+        total = total + params["chaos_respill"] * jnp.sum(evac) / dt  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
+        cap_units = jnp.maximum(params["n_units"] - x["chaos_dead"], 0)
+        # routers see the degraded fleet: killed units shrink capacity,
+        # a fully-dead rack advertises exactly 0.0 and alive=False
+        cap_rt = params["capacity_rps"] * (
+            cap_units.astype(jnp.float64)
+            / params["n_units"].astype(jnp.float64)
+        )
+        alive: Optional[Any] = x["chaos_dead"] < params["n_units"]
+    else:
+        evac = E_new = None
+        cap_units = params["n_units"]
+        cap_rt = params["capacity_rps"]
+        alive = None
+    assign = _route(params, B, total, dt, cap_rt, alive)
     work = assign * dt
     rate = work / dt
     # frequency governors pick this tick's OPP (window_s == dt_s)
     opp = _select_opps(params, dims, carry["opp"], carry["backlog"], rate)
-    perf_req = jnp.take_along_axis(params["perf_tab"], opp[:, None], axis=1)[:, 0]
+    # a power-capped rack *runs* at the floor point this tick while the
+    # carried governor state stays untouched (force_floor_opp twin)
+    if dims.chaos_on:
+        opp_eff = jnp.where(x["chaos_cap"] & params["has_table"], 0, opp)
+    else:
+        opp_eff = opp
+    perf_req = jnp.take_along_axis(
+        params["perf_tab"], opp_eff[:, None], axis=1
+    )[:, 0]
     perf_sz = jnp.where(params["has_table"], perf_req, 1.0)
     # UnitGovernor.target_units / apply_target with group == 1
     need = rate * params["headroom"] / (
@@ -291,6 +350,12 @@ def _step(
     )
     tgt = jnp.maximum(1, raw.astype(jnp.int64))
     active = carry["active"]
+    if dims.chaos_on:
+        # killed units are force-released (no cooldown stamp, no scale
+        # event — a fault is not a scaling decision) and the target is
+        # capped, mirroring apply_target's unit_cap path
+        tgt = jnp.minimum(tgt, cap_units)
+        active = jnp.minimum(active, cap_units)
     up = tgt > active
     keep_n = jnp.maximum(params["minq"], tgt)
     in_cooldown = t - carry["last_down"] > params["cooldown"]
@@ -301,8 +366,18 @@ def _step(
     last_down = jnp.where(down, t, carry["last_down"])
     k_f = new_active.astype(jnp.float64)
     # mean perf-scale over active units; trip-latched dies dragged to
-    # the floor OPP (pool.perf_scale / _perf_from_opp_counts)
-    perf_used = jnp.where(params["has_table"], (k_f * perf_req) / k_f, 1.0)
+    # the floor OPP (pool.perf_scale / _perf_from_opp_counts). A fully
+    # killed rack has k == 0: the pool returns the requested point's
+    # perf there (the k_div guard only rewrites the k == 0 lanes)
+    if dims.chaos_on:
+        k_div = jnp.maximum(k_f, 1.0)
+        perf_used = jnp.where(
+            params["has_table"],
+            jnp.where(new_active > 0, (k_f * perf_req) / k_div, perf_req),
+            1.0,
+        )
+    else:
+        perf_used = jnp.where(params["has_table"], (k_f * perf_req) / k_f, 1.0)
     if dims.has_thermal:
         ti = params["t_idx"]
         rack_u = params["th_rack_u"]
@@ -314,11 +389,21 @@ def _step(
         k_t = jnp.take(k_f, ti)
         p0 = jnp.take(params["perf_tab"][:, 0], ti)
         pr = jnp.take(perf_req, ti)
-        floor_all = (jnp.take(opp, ti) == 0) & (c_low_t > 0)
+        floor_all = (jnp.take(opp_eff, ti) == 0) & (c_low_t > 0)
         mixed = c_low_f * p0 + (k_t - c_low_f) * pr
-        perf_used = perf_used.at[ti].set(
-            jnp.where(floor_all, k_t * p0, mixed) / k_t
-        )
+        if dims.chaos_on:
+            k_div_t = jnp.maximum(k_t, 1.0)
+            perf_used = perf_used.at[ti].set(
+                jnp.where(
+                    k_t > 0.0,
+                    jnp.where(floor_all, k_t * p0, mixed) / k_div_t,
+                    pr,
+                )
+            )
+        else:
+            perf_used = perf_used.at[ti].set(
+                jnp.where(floor_all, k_t * p0, mixed) / k_t
+            )
     # straggler hedging: the submission ring carries (cumulative cost,
     # arrival) per trace tick; the head request is the first submission
     # not yet fully served (searchsorted past S + forgiveness)
@@ -334,9 +419,16 @@ def _step(
             jnp.where(wmask, arrival_t, arr_buf[:, ptr])
         )
         new_ptr = ptr + wmask.astype(jnp.int64)
+        # under chaos the head search skips evacuated mass: the combined
+        # dispatched axis is S + E (served + voided), mirroring the
+        # scalar queue being physically cleared by evacuate()
+        if dims.chaos_on:
+            disp = S + E_new
+        else:
+            disp = S
         head = jax.vmap(
             lambda row, key: jnp.searchsorted(row, key, side="right")
-        )(A_buf, S + _cum_tol(S))
+        )(A_buf, disp + _cum_tol(disp))
         hidx = jnp.minimum(head, jnp.maximum(new_ptr - 1, 0))
         head_arrival = jnp.take_along_axis(arr_buf, hidx[:, None], axis=1)[:, 0]
         age = jnp.maximum(0.0, t - head_arrival)
@@ -344,8 +436,13 @@ def _step(
         h = (
             pending
             & (age > params["hedge_deadline"])
-            & (new_active < params["n_units"])
+            & (new_active < cap_units)
         ).astype(jnp.int64)
+        if dims.chaos_on:
+            # drain-tick respill is not recorded in the submission ring
+            # (is_trace gates writes); without a ring entry past the
+            # dispatched axis there is no head request to age
+            h = h * (head < new_ptr).astype(jnp.int64)
     else:
         h = jnp.zeros_like(new_active)
     hedged = carry["hedged"] + h
@@ -370,7 +467,9 @@ def _step(
     # rest at the gated floor
     u = jnp.clip(util, 0.0, 1.0)
     ug = u ** params["gamma"]
-    spk_req = jnp.take_along_axis(params["spk_tab"], opp[:, None], axis=1)[:, 0]
+    spk_req = jnp.take_along_axis(
+        params["spk_tab"], opp_eff[:, None], axis=1
+    )[:, 0]
     w_req = params["p_idle"] + spk_req * ug
     h_f = h.astype(jnp.float64)
     powered = new_active + h
@@ -390,8 +489,12 @@ def _step(
         pw = pw.at[last_u].set(
             jnp.where(jnp.take(h, ti) > 0, w_req_t, pw[last_u])
         )
+        fan_fail_t = (
+            jnp.take(x["chaos_fan"], ti) if dims.chaos_on else None
+        )
         t_die, t_pcb, new_latched, fan_t, temp_t, thr_t = _thermal_step(
-            params, dims, carry["t_die"], carry["t_pcb"], latched, pw, dt
+            params, dims, carry["t_die"], carry["t_pcb"], latched, pw, dt,
+            fan_fail=fan_fail_t,
         )
         fan_w = fan_w.at[ti].set(fan_t)
     p_units = jnp.where(
@@ -409,7 +512,9 @@ def _step(
 
     new_carry: Dict[str, Any] = {
         "t": keep(t + dt, t),
-        "B": keep(B_new, B),
+        # fall back to the *pre-evacuation* carry on dead ticks (the
+        # local B was rewritten by the chaos kill edge above)
+        "B": keep(B_new, carry["B"]),
         "A": keep(A_new, A),
         "S": keep(S_new, S),
         "opp": keep(opp, carry["opp"]),
@@ -430,6 +535,8 @@ def _step(
         new_carry["A_buf"] = keep(A_buf, carry["A_buf"])
         new_carry["arr_buf"] = keep(arr_buf, carry["arr_buf"])
         new_carry["ptr"] = keep(new_ptr, carry["ptr"])
+    if dims.chaos_on:
+        new_carry["E"] = keep(E_new, carry["E"])
     ys: Dict[str, Any] = {
         "assign": assign,
         "rate": rate,
@@ -449,8 +556,10 @@ def _step(
         ys["fan"] = fan_t
         ys["temp"] = temp_t
         ys["thr"] = thr_t
+    if dims.chaos_on:
+        ys["evac"] = evac
     if dims.emit_obs:
-        ys["opp"] = opp
+        ys["opp"] = opp_eff
         ys["w_req"] = w_req
         if dims.has_thermal:
             ys["c_low"] = c_low_f
@@ -552,7 +661,11 @@ def _base_params(
 
 
 def _make_dims(
-    arr: FleetArrays, dt_s: float, hedge_on: bool, emit_obs: bool = False
+    arr: FleetArrays,
+    dt_s: float,
+    hedge_on: bool,
+    emit_obs: bool = False,
+    chaos_on: bool = False,
 ) -> _Dims:
     th = arr.thermal
     return _Dims(
@@ -563,6 +676,7 @@ def _make_dims(
         max_sub=0 if th is None else th.max_substeps(dt_s),
         hedge_on=hedge_on,
         emit_obs=emit_obs,
+        chaos_on=chaos_on,
     )
 
 
@@ -640,9 +754,20 @@ def _responses_for_rack(
     cap_col: np.ndarray,
     perf_col: np.ndarray,
     unit_rate: float,
+    evac_col: Optional[np.ndarray] = None,
 ) -> List[Response]:
     """Rebuild the rack's :class:`Response` list from emitted rows,
-    with ``QueueWorkload.step_fast``'s finish-time arithmetic."""
+    with ``QueueWorkload.step_fast``'s finish-time arithmetic.
+
+    ``evac_col`` (chaos) is the per-tick cost evacuated by full-rack
+    kills: the dispatched axis becomes ``S + cumsum(evac)`` — a kill
+    edge flushes the whole pending queue in one jump — and any request
+    whose crossing tick carries an evacuation was *voided*, not served
+    (``QueueWorkload.evacuate`` emits no Response), so it is skipped.
+    A killed rack serves exactly zero that tick (its unit cap is 0),
+    so a crossing at an evacuation tick is always a void."""
+    if evac_col is not None:
+        s_col = s_col + np.cumsum(evac_col)  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum replays the device carry's sequential adds
     sub, a_sub, j = _completions(work_col, s_col)
     t_all = len(ts)
     done: List[Tuple[int, int, Response]] = []
@@ -650,6 +775,8 @@ def _responses_for_rack(
         jj = int(j[k])
         if jj >= t_all:
             continue  # never completed (undrained overload)
+        if evac_col is not None and evac_col[jj] > 0.0:
+            continue  # voided by evacuation, not served
         arrival = float(ts[sub[k]]) + 0.5 * dt
         cap_j = float(cap_col[jj])
         s_prev = float(s_col[jj - 1]) if jj > 0 else 0.0
@@ -752,9 +879,34 @@ class _JaxFleetEngine:
         self._A_buf = np.full((n, 0), np.inf)
         self._arr_buf = np.full((n, 0), np.inf)
         self._ptr = 0
+        # chaos surface (inert until Fleet calls set_chaos): the lowered
+        # schedule, the cumulative evacuated-cost carry, and the same
+        # counters the scalar/vector engines expose to _build_telemetry
+        self._chaos: Optional[Any] = None
+        self.chaos_on_kill = "respill"
+        self._E = np.zeros(n)
+        self.chaos_dead = np.zeros(n, np.int64)
+        self.chaos_fan = np.zeros(n, bool)
+        self.chaos_cap = np.zeros(n, bool)
+        self.chaos_evac_cost = 0.0
+        self.chaos_evac_by_rack = np.zeros(n)
+        self.chaos_dropped = 0
+        self.chaos_dropped_cost = 0.0
+        self.chaos_respilled = 0
+        self.chaos_respilled_cost = 0.0
         # cumulative per-tick emitted history (for telemetry rebuilds)
         self._t_hist: List[float] = []
         self._hist: Dict[str, List[np.ndarray]] = {}
+
+    def set_chaos(self, lowered: Any) -> None:
+        """Wire a :class:`~repro.fleet.chaos.LoweredChaos` schedule.
+
+        Called by ``Fleet.__init__``; the schedule is re-sampled into
+        per-tick mask rows (``LoweredChaos.rows``) block by block at
+        ``play`` time so the jitted scan stays shape-static — the same
+        compiled program serves every schedule."""
+        self._chaos = lowered if lowered.any_events() else None
+        self.chaos_on_kill = lowered.on_kill
 
     # -- sanitizer / Fleet.view surface ---------------------------------
     def queued_cost(self) -> np.ndarray:
@@ -788,6 +940,8 @@ class _JaxFleetEngine:
             c["A_buf"] = self._A_buf
             c["arr_buf"] = self._arr_buf
             c["ptr"] = np.int64(self._ptr)
+        if self._chaos is not None:
+            c["E"] = self._E
         return c
 
     def _full(self, key: str) -> np.ndarray:
@@ -820,11 +974,35 @@ class _JaxFleetEngine:
             self._A_buf = np.concatenate([self._A_buf, pad], axis=1)
             self._arr_buf = np.concatenate([self._arr_buf, pad.copy()], axis=1)
         hedge_on = self._hedge_any and self._A_buf.shape[1] > 0
+        chaos = self._chaos
         dims = _make_dims(
-            self.arrays, dt, hedge_on, emit_obs=self.obs is not None
+            self.arrays, dt, hedge_on,
+            emit_obs=self.obs is not None,
+            chaos_on=chaos is not None,
         )
         params = self._params
+        if chaos is not None:
+            params = dict(params)
+            params["chaos_respill"] = np.float64(
+                1.0 if self.chaos_on_kill == "respill" else 0.0
+            )
+
+        def chaos_xs(t0: float) -> Dict[str, np.ndarray]:
+            """Per-tick mask rows for one block starting at ``t0``.
+            Live ticks are a prefix of every block, so tick ``i`` runs
+            at exactly ``t0 + i*dt`` — rows beyond the live prefix are
+            masked out by the scan's carry-through."""
+            assert chaos is not None
+            rows = chaos.rows(t0, _BLOCK, dt)
+            return {
+                "chaos_dead": rows["dead"],
+                "chaos_fan": rows["fan_fail"],
+                "chaos_cap": rows["power_cap"],
+                "chaos_kill": rows["kill_edge"],
+            }
+
         carry = self._carry(hedge_on)
+        cur_t = self.now
         zeros = np.zeros(_BLOCK)
         falses = np.zeros(_BLOCK, bool)
         kept: List[Dict[str, np.ndarray]] = []
@@ -835,12 +1013,13 @@ class _JaxFleetEngine:
             rps[:blk] = trace[pos : pos + blk]
             live = np.zeros(_BLOCK, bool)
             live[:blk] = True
-            carry, ys = _RUN(
-                params, carry, {"rps": rps, "live": live, "is_trace": live},
-                dims=dims,
-            )
+            xs = {"rps": rps, "live": live, "is_trace": live}
+            if chaos is not None:
+                xs.update(chaos_xs(cur_t))
+            carry, ys = _RUN(params, carry, xs, dims=dims)
             kept.append(_host_rows(ys, blk))
             pos += blk
+            cur_t += blk * dt
         if kept:
             all_empty = bool(kept[-1]["empty"][-1].all())
         else:
@@ -859,6 +1038,11 @@ class _JaxFleetEngine:
                 live = np.zeros(_BLOCK, bool)
                 live[:blk] = True
                 xs = {"rps": zeros, "live": live, "is_trace": falses}
+                if chaos is not None:
+                    # the rewind re-runs the same block with a shorter
+                    # live prefix, so the rows must be reused verbatim
+                    xs_chaos = chaos_xs(cur_t)
+                    xs.update(xs_chaos)
                 carry0 = carry
                 carry, ys = _RUN(params, carry0, xs, dims=dims)
                 rows = _host_rows(ys, blk)
@@ -869,18 +1053,17 @@ class _JaxFleetEngine:
                     stop = int(idle[0])
                     live2 = np.zeros(_BLOCK, bool)
                     live2[: stop + 1] = True
-                    carry, _ = _RUN(
-                        params,
-                        carry0,
-                        {"rps": zeros, "live": live2, "is_trace": falses},
-                        dims=dims,
-                    )
+                    xs2 = {"rps": zeros, "live": live2, "is_trace": falses}
+                    if chaos is not None:
+                        xs2.update(xs_chaos)
+                    carry, _ = _RUN(params, carry0, xs2, dims=dims)
                     kept.append({k: v[: stop + 1] for k, v in rows.items()})
                     found = True
                 else:
                     kept.append(rows)
                     all_empty = bool(allm[-1])
                     done += blk
+                    cur_t += blk * dt
             drained = found
         elif t_len == 0:
             drained = None
@@ -912,6 +1095,8 @@ class _JaxFleetEngine:
             self._A_buf = np.asarray(fin["A_buf"])
             self._arr_buf = np.asarray(fin["arr_buf"])
             self._ptr = int(fin["ptr"])
+        if chaos is not None:
+            self._E = np.asarray(fin["E"])
         # append this call's rows to the cumulative history
         if kept:
             rows_all = {k: np.concatenate([r[k] for r in kept]) for k in kept[0]}
@@ -924,9 +1109,16 @@ class _JaxFleetEngine:
             self._t_hist.extend((t0 + np.arange(n_rows) * dt).tolist())
             for k, v in rows_all.items():
                 self._hist.setdefault(k, []).append(v)
-        # queue depths come from the *full* history (cumulative S/A)
+        # queue depths come from the *full* history (cumulative S/A);
+        # under chaos the dispatched axis is S + cumsum(evac) — a kill
+        # edge drains the queue count to zero the same tick, exactly
+        # like QueueWorkload.evacuate clearing the scalar queue
         work_all = self._full("work")
         s_all = self._full("S")
+        if chaos is not None and "evac" in self._hist:
+            evac_all = self._full("evac")
+            s_all = s_all + np.cumsum(evac_all, axis=0)  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum replays the device carry's sequential adds
+            self._update_chaos_counters(work_all, s_all, evac_all)
         queued_rows = np.zeros((n_rows, n), np.int64)
         for r in range(n):
             q = _queued_for_rack(work_all[:, r], s_all[:, r])
@@ -935,7 +1127,51 @@ class _JaxFleetEngine:
         assigned = (
             rows_all["assign"] if n_rows else np.zeros((0, n))
         )
+        if chaos is not None and n_rows:
+            # host mirrors of the mask state (Fleet.view / telemetry):
+            # the last applied masks are the ones sampled at the final
+            # tick's *start*, same as the scalar/vector drivers
+            d_fin, f_fin, c_fin = chaos.masks_at(self.now - dt)
+            self.chaos_dead = d_fin
+            self.chaos_fan = f_fin
+            self.chaos_cap = c_fin
         return assigned, queued_rows, n_rows - t_len, drained
+
+    def _update_chaos_counters(
+        self,
+        work_all: np.ndarray,
+        s_eff_all: np.ndarray,
+        evac_all: np.ndarray,
+    ) -> None:
+        """Recompute the cumulative drop/respill accounting from the
+        full emitted history (idempotent across ``play`` calls).
+
+        Costs are the evacuated mass itself; request counts come from
+        the same host reconstruction that builds Response lists — a
+        submission whose crossing tick carries an evacuation was voided
+        by the kill, and ``on_kill`` decides which bucket it lands in.
+        ``s_eff_all`` must already include the evacuation cumsum."""
+        self.chaos_evac_by_rack = evac_all.sum(axis=0)  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
+        self.chaos_evac_cost = float(self.chaos_evac_by_rack.sum())  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
+        t_all = evac_all.shape[0]
+        n_voided = 0
+        for r in range(self.n_racks):
+            ecol = evac_all[:, r]
+            if not ecol.any():
+                continue
+            _, _, j = _completions(work_all[:, r], s_eff_all[:, r])
+            jv = np.clip(j, 0, t_all - 1)
+            n_voided += int(np.count_nonzero((j < t_all) & (ecol[jv] > 0.0)))
+        if self.chaos_on_kill == "respill":
+            self.chaos_respilled = n_voided
+            self.chaos_respilled_cost = self.chaos_evac_cost
+            self.chaos_dropped = 0
+            self.chaos_dropped_cost = 0.0
+        else:
+            self.chaos_dropped = n_voided
+            self.chaos_dropped_cost = self.chaos_evac_cost
+            self.chaos_respilled = 0
+            self.chaos_respilled_cost = 0.0
 
     # -------------------------------------------------------------------
     def per_rack_telemetry(self) -> List[Telemetry]:
@@ -958,6 +1194,11 @@ class _JaxFleetEngine:
         else:
             fan = temp = thr = None
             col_of = {}
+        evac = (
+            self._full("evac")
+            if self._chaos is not None and "evac" in self._hist
+            else None
+        )
         arr = self.arrays
         out: List[Telemetry] = []
         for r in range(self.n_racks):
@@ -969,6 +1210,7 @@ class _JaxFleetEngine:
                 cap[:, r],
                 perf[:, r],
                 float(arr.unit_rate[r]),
+                evac_col=None if evac is None else evac[:, r],
             )
             p50, p99 = latency_percentiles(responses)
             j = col_of.get(r)

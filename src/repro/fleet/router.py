@@ -22,7 +22,7 @@ scalar and vector fleet engines comparable end to end.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Protocol, runtime_checkable
+from typing import Optional, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -38,7 +38,15 @@ __all__ = [
 
 @dataclass
 class FleetView:
-    """Per-rack state a router may consult (arrays of length n_racks)."""
+    """Per-rack state a router may consult (arrays of length n_racks).
+
+    Under chaos the fleet publishes a *degraded* view: killed units
+    shrink ``capacity_rps`` and a fully dead rack carries capacity 0.0
+    and ``alive=False``. JSQ and the power-aware router exclude dead
+    racks through the zeroed capacity alone (their assignments are
+    capacity-scaled); round-robin consults ``alive`` directly. ``None``
+    means no chaos is wired — bitwise-identical to the pre-chaos view.
+    """
 
     t: float
     dt_s: float
@@ -47,6 +55,7 @@ class FleetView:
     active_units: np.ndarray
     n_units: np.ndarray
     full_load_j_per_req: np.ndarray  # rack energy cost per request at peak
+    alive: Optional[np.ndarray] = None  # chaos: False = rack fully dead
 
     @property
     def n_racks(self) -> int:
@@ -72,7 +81,16 @@ class RoundRobinRouter:
     name = "round-robin"
 
     def route(self, total_rps: float, view: FleetView) -> np.ndarray:
-        return np.full(view.n_racks, total_rps / view.n_racks)
+        alive = view.alive
+        if alive is None:
+            return np.full(view.n_racks, total_rps / view.n_racks)
+        # chaos degradation: spread only over live racks (a dead rack's
+        # queue was evacuated; sending it more work would strand it).
+        # All racks dead = nowhere to route — the load is lost.
+        n_alive = int(np.count_nonzero(alive))
+        if n_alive == 0:
+            return np.zeros(view.n_racks)
+        return np.where(alive, total_rps / n_alive, 0.0)
 
 
 class JoinShortestQueueRouter:
@@ -137,6 +155,9 @@ class PowerAwareRouter:
             return np.zeros(view.n_racks)
         order = np.argsort(view.full_load_j_per_req, kind="stable")
         cap = view.capacity_rps[order]
+        if float(cap.sum()) <= 0.0:  # reprolint: ok[RPL001] zero-test only: capacities are non-negative, sum()==0 iff all are 0
+            # chaos: every rack dead — nowhere to route
+            return np.zeros(view.n_racks)
         setpoint = cap * self.util_target
         take = self._greedy(total_rps, setpoint)
         rem = total_rps - float(take.sum())  # reprolint: ok[RPL001] router runs once per tick on identical views in both engines; its output is replayed, not recomputed, so any reduction order is parity-safe

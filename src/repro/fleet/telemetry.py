@@ -11,13 +11,16 @@ feeds the existing energy/TCO models: :meth:`energy_report` produces a
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List
+from typing import TYPE_CHECKING, Any, Dict, List, Optional
 
 import numpy as np
 
 from repro.core.energy import EnergyReport
 from repro.core.tco import ELECTRICITY_USD_PER_KWH, PUE_EDGE
 from repro.runtime.result import Telemetry
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.fleet.chaos import RecoveryReport
 
 __all__ = ["FleetTelemetry", "empirical_proportionality"]
 
@@ -63,6 +66,16 @@ class FleetTelemetry:
     # SLO alert windows (repro.obs.slo.Alert), filled by Fleet when an
     # obs config with an slo policy is attached; empty otherwise
     alerts: List[Any] = field(default_factory=list)
+    # chaos (filled by Fleet when a ChaosSchedule is wired; defaults
+    # otherwise): the schedule's event records, the full-rack-kill queue
+    # accounting (drop/respill per ChaosSchedule.on_kill), and the
+    # post-hoc recovery metrics (repro.fleet.chaos.recovery_report)
+    chaos_events: List[Dict[str, Any]] = field(default_factory=list)
+    dropped_requests: int = 0
+    dropped_cost: float = 0.0
+    respilled_requests: int = 0
+    respilled_cost: float = 0.0
+    recovery: Optional["RecoveryReport"] = None
 
     # ----- derived ---------------------------------------------------------
     @property
@@ -139,7 +152,7 @@ class FleetTelemetry:
         return monthly_kwh * ELECTRICITY_USD_PER_KWH * pue
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "racks": self.n_racks,
             "ticks": self.ticks,
             "served": self.served,
@@ -157,3 +170,16 @@ class FleetTelemetry:
             "drained": float(self.drained),
             "alerts": float(len(self.alerts)),
         }
+        if self.chaos_events:
+            out["chaos_events"] = float(len(self.chaos_events))
+            out["dropped_requests"] = float(self.dropped_requests)
+            out["respilled_requests"] = float(self.respilled_requests)
+            rec = self.recovery
+            if rec is not None:
+                out["recovery_p99_blowup"] = rec.p99_blowup
+                out["reconvergence_ticks"] = (
+                    float(rec.reconvergence_ticks)
+                    if rec.reconvergence_ticks is not None
+                    else -1.0
+                )
+        return out

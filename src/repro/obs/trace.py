@@ -128,6 +128,29 @@ class TraceRecorder:
                     "ts": float(times[i]) * 1e6, "s": "t",
                     "args": {"rack": names[r],
                              "borrowed": int(hedge[i, r])}})
+        # --- chaos fault windows as instants ----------------------------
+        # one instant at each event's start (and, for bounded windows,
+        # one at its end) on the afflicted rack's track, so fault
+        # injection lines up visually with the latency/power response
+        for rec in getattr(tel, "chaos_events", []) or []:
+            r = int(rec.get("rack", 0))
+            if not 0 <= r < len(names):
+                continue
+            kind = str(rec.get("kind", "fault"))
+            args = {"rack": names[r], **rec}
+            if not np.isfinite(args.get("end_s", 0.0)):
+                args["end_s"] = None  # open-ended fault, keep strict JSON
+            self.events.append({
+                "ph": _PH_INSTANT, "name": f"chaos_{kind}", "cat": "chaos",
+                "pid": 1, "tid": r + 1,
+                "ts": float(rec.get("start_s", 0.0)) * 1e6, "s": "t",
+                "args": args})
+            end_s = float(rec.get("end_s", np.inf))
+            if np.isfinite(end_s):
+                self.events.append({
+                    "ph": _PH_INSTANT, "name": f"chaos_{kind}_clear",
+                    "cat": "chaos", "pid": 1, "tid": r + 1,
+                    "ts": end_s * 1e6, "s": "t", "args": args})
 
     @staticmethod
     def _series(tel: Any, probes: Optional[Any]) -> Dict[str, np.ndarray]:

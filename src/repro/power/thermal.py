@@ -74,9 +74,15 @@ class ThermalModel:
         self.t_pcb: List[float] = [p.t_ambient_c] * len(self._groups)
         self.throttled: List[bool] = [False] * spec.n_units
         self.fan_frac = 0.0
+        # chaos hook: a failed shared fan rail pins airflow at zero
+        # (fan_frac = 0.0, so r_pcb_eff collapses to the no-airflow
+        # r_pcb_c_per_w exactly); set per tick by the fleet chaos driver
+        self.fan_failed = False
 
     # ------------------------------------------------------------------
     def _fan_frac(self) -> float:
+        if self.fan_failed:
+            return 0.0
         p = self.params
         hottest = max(self.t_pcb)
         span = max(p.fan_t_high_c - p.fan_t_low_c, 1e-9)
@@ -178,6 +184,8 @@ class VectorThermalModel(ThermalModel):
 
     # ------------------------------------------------------------------
     def _fan_frac(self) -> float:
+        if self.fan_failed:
+            return 0.0
         p = self.params
         hottest = float(self.t_pcb.max())
         span = max(p.fan_t_high_c - p.fan_t_low_c, 1e-9)

@@ -238,10 +238,13 @@ class MultiTenantRuntime:
             h = 0
             deadline = govs[m].policy.hedge_after_s
             wl = self._states[m].tenant.workload
-            if deadline is not None and free > 0:
+            unit_cap = govs[m].unit_cap
+            if deadline is not None and free > 0 \
+                    and (unit_cap is None or active[m] < unit_cap):
                 # a borrowed unit must add real capacity: skip when the
                 # workload's own concurrency cap (e.g. batcher slots)
-                # already binds
+                # already binds; a chaos unit_cap (killed units look
+                # free to the pool) gates the borrow the same way
                 cap_fn = getattr(wl, "max_useful_units", None)
                 capped = cap_fn is not None and active[m] + 1 > cap_fn()
                 age = None if capped else _oldest_waiting_s(wl, t)

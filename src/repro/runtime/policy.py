@@ -92,6 +92,17 @@ class UnitGovernor:
         self._opp_target: Optional[int] = None \
             if self.pool.opp_table is None else self.pool.opp_table.nominal
         self.backlog = False          # runtime sets from last tick's queue
+        # chaos hooks (repro.fleet.chaos), set per tick by the fleet
+        # driver. unit_cap models killed units: the governor may not
+        # hold more than cap units (excess is force-released, bypassing
+        # the cooldown — a fault is not a scale decision). A capped-out
+        # rack also may not borrow hedge units (MultiTenantRuntime
+        # gates on it). force_floor_opp models a rack power cap: the
+        # frequency governor still runs (its persistent target is
+        # untouched, so it resumes cleanly on release) but the pool is
+        # driven at the floor OPP and activation is sized against it.
+        self.unit_cap: Optional[int] = None
+        self.force_floor_opp = False
         self._arrivals: List[Tuple[float, float]] = []   # (t, count)
         self._last_downscale = -1e9
         self._tick_rate = 0.0
@@ -176,6 +187,8 @@ class UnitGovernor:
                     backlog=self.backlog,
                     p_gated_w=self.spec.unit.p_off if self.idle_units_off
                     else self.spec.unit.p_idle)))
+        if self.force_floor_opp:
+            return table[table.lowest].perf_scale
         return table[self._opp_target].perf_scale
 
     def desired_units(self, t: float, offered: Optional[float] = None
@@ -198,6 +211,17 @@ class UnitGovernor:
         ticks it changes nothing."""
         p = self.policy
         wake_s = p.wake_latency_s if self.model_wake_latency else 0.0
+        cap = self.unit_cap
+        if cap is not None:
+            # chaos kill: units beyond the cap are force-released now —
+            # no cooldown gate, no scale event, no downscale stamp (a
+            # fault is not a scaling decision)
+            over = (self.pool.active(self.tenant)
+                    + self.pool.waking(self.tenant) - cap)
+            if over > 0:
+                self.pool.release(self.tenant, over)
+            if tgt > cap:
+                tgt = cap
         active = self.pool.active(self.tenant)
         waking = self.pool.waking(self.tenant)
         if tgt > active + waking:
@@ -215,7 +239,11 @@ class UnitGovernor:
                 self._last_downscale = t
                 self.scale_events += 1
         if self._opp_target is not None:
-            self.pool.set_opp(self.tenant, self._opp_target)
+            opp_run = self._opp_target
+            table = self.pool.opp_table
+            if self.force_floor_opp and table is not None:
+                opp_run = table.lowest
+            self.pool.set_opp(self.tenant, opp_run)
         self.pool.advance(t, dt_s, self.tenant)
         return self.pool.active(self.tenant)
 

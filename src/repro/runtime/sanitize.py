@@ -320,6 +320,11 @@ class FleetSanitizer:
         engine = fleet.engine
         self.injected = np.zeros(fleet.n_racks)
         self._prev_energy = np.zeros(fleet.n_racks)
+        self._prev_served = np.zeros(fleet.n_racks)
+        # resurrection check needs per-tick granularity (the jax play
+        # wrapper checks once per whole trace, where a rack may serve
+        # legitimately before its kill window opens)
+        self._per_tick = hasattr(engine, "tick")
         self._pools = [rt.pool for rt in engine.rts] \
             if hasattr(engine, "rts") else []
         for pool in self._pools:
@@ -332,16 +337,19 @@ class FleetSanitizer:
         fleet._sanitizer = self
 
     # -- engine accessors (scalar vs vector) ----------------------------
+    # np.array (not asarray): the vector engine mutates served_acc /
+    # energy in place, so an aliasing view would make the grew-while-dead
+    # and energy-monotonicity deltas compare an array against itself
     def _served(self) -> np.ndarray:
         engine = self.fleet.engine
         if hasattr(engine, "served_acc"):
-            return np.asarray(engine.served_acc, float)
+            return np.array(engine.served_acc, float)
         return np.asarray([rt.pool.served for rt in engine.rts], float)
 
     def _energy(self) -> np.ndarray:
         engine = self.fleet.engine
         if hasattr(engine, "energy"):
-            return np.asarray(engine.energy, float)
+            return np.array(engine.energy, float)
         return np.asarray([rt.pool.energy_j for rt in engine.rts], float)
 
     def _wrap(self, tick: Callable[..., Any]) -> Callable[..., Any]:
@@ -384,15 +392,32 @@ class FleetSanitizer:
         engine = self.fleet.engine
         served = self._served()
         pending = np.asarray(engine.queued_cost(), float)
+        # chaos credit: a full-rack kill evacuates queued cost out of
+        # the fluid system (respilled cost re-enters through the router
+        # and is re-counted as injected; dropped cost leaves for good)
+        evac = getattr(engine, "chaos_evac_by_rack", None)
+        balance = self.injected - (served + pending)
+        if evac is not None:
+            balance = balance - np.asarray(evac, float)
         tol = _CONS_ATOL + _CONS_RTOL * np.maximum(self.injected, 1.0)
-        gap = np.abs(self.injected - (served + pending))
-        bad = np.nonzero(gap > tol)[0]
+        bad = np.nonzero(np.abs(balance) > tol)[0]
         _require(
             len(bad) == 0,
             "request conservation violated: rack(s) "
             f"{bad.tolist()} injected {self.injected[bad].tolist()} != "
             f"served {served[bad].tolist()} + queued "
-            f"{pending[bad].tolist()}")
+            f"{pending[bad].tolist()} (+ evacuated)")
+        dead = getattr(engine, "chaos_dead", None)
+        if self._per_tick and dead is not None:
+            full = np.asarray(dead) >= np.asarray(engine.n_units)
+            if full.any():
+                grew = served - self._prev_served
+                res = np.nonzero(full & (grew > 1e-9))[0]
+                _require(
+                    len(res) == 0,
+                    f"resurrection: fully-killed rack(s) {res.tolist()} "
+                    "served requests while dead")
+        self._prev_served = served
         energy = self._energy()
         _require(bool(np.all(np.isfinite(energy)) and np.all(energy >= 0)),
                  f"rack energy non-finite or negative: {energy.tolist()}")

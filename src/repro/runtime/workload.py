@@ -171,6 +171,21 @@ class QueueWorkload:
         arrival = self._queue[0][0].arrival_s
         return max(0.0, t - (arrival or 0.0))
 
+    def evacuate(self) -> "tuple[int, float]":
+        """Chaos full-rack kill: discard every queued request, returning
+        ``(n_requests, remaining_cost)``. No :class:`Response` is
+        emitted — the requests never complete here; the fleet layer
+        decides whether their cost is respilled through the router or
+        dropped (``repro.fleet.chaos``). The cost sum is an explicit
+        left-to-right loop so both fleet engines (which share this
+        queue class) evacuate bitwise-identical totals."""
+        n = len(self._queue)
+        cost = 0.0
+        for _req, rem in self._queue:
+            cost += rem
+        self._queue.clear()
+        return n, cost
+
     # -- helpers -----------------------------------------------------------
     @property
     def pending_cost(self) -> float:

@@ -1,0 +1,450 @@
+"""Chaos engineering: correlated fault injection across all three
+fleet engines (``repro.fleet.chaos``).
+
+Covers the parity contract (scalar/vector bitwise under chaos, jax on
+the tolerance budgets from ``tests/test_jax_parity.py``), the
+drop/respill queue policy on full-rack kills, router degradation,
+recovery metrics, the sim-clocked :class:`ChaosMonitor`, sanitizer
+resurrection trapping, chaos trace instants, and SLO alert coverage
+during fault windows.
+
+The randomized tests derive their schedule from ``chaos_seed()``
+(``REPRO_CHAOS_SEED`` env var — CI sets it from ``github.run_id`` and
+echoes the repro command). The long soak is gated behind
+``REPRO_CHAOS_SOAK=1`` (nightly CI only).
+"""
+import math
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import soc_cluster
+from repro.fleet import (ChaosEvent, ChaosMonitor, ChaosSchedule, Fleet,
+                         JoinShortestQueueRouter, PowerAwareRouter,
+                         RoundRobinRouter, chaos_seed, diurnal_trace,
+                         flash_crowd_trace, hedging_delta,
+                         homogeneous_fleet)
+from repro.obs import FleetObs, QueueBlowupRule, SloPolicy
+from repro.obs.trace import build_chrome_trace, validate_chrome_trace
+from repro.power import SchedutilGovernor, ThermalParams, sd865_opp_table
+from repro.runtime import ScalePolicy
+from repro.runtime.sanitize import InvariantViolation
+
+UNIT_RATE = 30.0
+DT_S = 60.0
+HOUR = 3600.0
+
+# jax tolerance budgets (same contract as tests/test_jax_parity.py)
+RTOL = {"served": 1e-12, "energy": 1e-12, "power": 1e-9, "queued": 1e-9,
+        "lat": 1e-9}
+ATOL = 1e-9
+
+
+def _racks(n=4, governor=False, thermal=None, hedge=None):
+    policy = ScalePolicy(
+        cooldown_s=300.0, min_units=1, headroom=1.25,
+        hedge_after_s=hedge,
+        freq_governor=SchedutilGovernor() if governor else None)
+    return homogeneous_fleet(
+        soc_cluster(), n, UNIT_RATE, policy=policy,
+        opp_table=sd865_opp_table() if governor else None,
+        thermal=thermal)
+
+
+def _full_schedule(on_kill="respill"):
+    """All four fault kinds: rack kill, partial kill, fan rail, power
+    cap — the correlated-failure set the module exists for."""
+    sched = ChaosSchedule(on_kill=on_kill)
+    sched.kill_rack(1, start_s=4 * HOUR, end_s=8 * HOUR)
+    sched.kill_units(2, 20, start_s=5 * HOUR, end_s=9 * HOUR)
+    sched.fail_fan(0, start_s=3 * HOUR, end_s=10 * HOUR)
+    sched.power_cap(3, start_s=6 * HOUR, end_s=11 * HOUR)
+    return sched
+
+
+def _fleet(backend, sched, *, n=4, dt_s=DT_S, router=None, thermal=None,
+           hedge=None, governor=True, obs=None):
+    return Fleet(_racks(n, governor=governor, thermal=thermal, hedge=hedge),
+                 router=router or JoinShortestQueueRouter(), dt_s=dt_s,
+                 backend=backend, chaos=sched, sanitize=True, obs=obs)
+
+
+def _backlog_trace(n=4, dt_s=DT_S, ticks=80):
+    """Flash crowd holding through a kill window so the dead rack has a
+    deep queue when the kill lands (non-vacuous drop/respill)."""
+    cap = n * 60 * UNIT_RATE
+    return flash_crowd_trace(
+        base_rps=0.35 * cap, spike_mult=4.0, hours=ticks * dt_s / HOUR,
+        dt_s=dt_s, spike_start_h=0.25 * ticks * dt_s / HOUR,
+        spike_ramp_h=0.05 * ticks * dt_s / HOUR,
+        spike_hold_h=0.6 * ticks * dt_s / HOUR, seed=3)
+
+
+def _backlog_schedule(on_kill, dt_s=DT_S):
+    sched = ChaosSchedule(on_kill=on_kill)
+    sched.kill_rack(1, start_s=30 * dt_s, end_s=60 * dt_s)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Scalar/vector bitwise parity under chaos.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("on_kill", ["respill", "drop"])
+def test_scalar_vector_bitwise_under_chaos(on_kill):
+    trace = diurnal_trace(peak_rps=0.7 * 4 * 60 * UNIT_RATE, hours=16,
+                          dt_s=DT_S)
+    ts = _fleet("scalar", _full_schedule(on_kill), thermal=ThermalParams(),
+                hedge=240.0).play_trace(trace)
+    tv = _fleet("vector", _full_schedule(on_kill), thermal=ThermalParams(),
+                hedge=240.0).play_trace(trace)
+    assert ts.served == tv.served
+    assert ts.energy_j == tv.energy_j
+    assert np.array_equal(ts.power_w, tv.power_w)
+    assert np.array_equal(ts.queued, tv.queued)
+    assert np.array_equal(ts.active_units, tv.active_units)
+    assert np.array_equal(ts.assigned_rps, tv.assigned_rps)
+    assert ts.p99_latency_s == tv.p99_latency_s
+    assert ts.dropped_requests == tv.dropped_requests
+    assert ts.respilled_requests == tv.respilled_requests
+    assert ts.dropped_cost == tv.dropped_cost
+    assert ts.respilled_cost == tv.respilled_cost
+
+
+def test_random_schedule_scalar_vector_bitwise():
+    """The randomized CI gate: the seed comes from ``REPRO_CHAOS_SEED``
+    (github.run_id in CI), so a red run reproduces locally with
+    ``REPRO_CHAOS_SEED=<n> pytest tests/test_chaos.py``."""
+    seed = chaos_seed(default=20260808)
+    horizon = 120 * DT_S
+    sched = ChaosSchedule.random(4, horizon, seed=seed, n_events=4)
+    trace = diurnal_trace(peak_rps=0.6 * 4 * 60 * UNIT_RATE,
+                          hours=horizon / HOUR, dt_s=DT_S)
+    ts = _fleet("scalar", sched, thermal=ThermalParams()).play_trace(trace)
+    tv = _fleet("vector", sched, thermal=ThermalParams()).play_trace(trace)
+    assert ts.served == tv.served, f"seed={seed}"
+    assert ts.energy_j == tv.energy_j, f"seed={seed}"
+    assert np.array_equal(ts.power_w, tv.power_w), f"seed={seed}"
+    assert np.array_equal(ts.queued, tv.queued), f"seed={seed}"
+    assert ts.respilled_requests == tv.respilled_requests, f"seed={seed}"
+    assert ts.dropped_requests == tv.dropped_requests, f"seed={seed}"
+
+
+# ---------------------------------------------------------------------------
+# Jax tolerance parity under chaos.
+# ---------------------------------------------------------------------------
+def test_jax_tolerance_parity_under_chaos():
+    pytest.importorskip("jax")
+    dt = 120.0
+    trace = diurnal_trace(peak_rps=0.7 * 4 * 60 * UNIT_RATE, hours=24,
+                          dt_s=dt)
+
+    def run(backend):
+        return _fleet(backend, _full_schedule(), dt_s=dt,
+                      thermal=ThermalParams(), hedge=240.0
+                      ).play_trace(trace)
+
+    tv, tj = run("vector"), run("jax")
+    assert np.isclose(tv.served, tj.served, rtol=RTOL["served"])
+    assert np.isclose(tv.energy_j, tj.energy_j, rtol=RTOL["energy"])
+    assert np.allclose(tv.power_w, tj.power_w, rtol=RTOL["power"],
+                       atol=ATOL)
+    assert np.allclose(tv.queued, tj.queued, rtol=RTOL["queued"], atol=ATOL)
+    assert np.array_equal(tv.active_units, tj.active_units)
+    assert np.allclose(tv.assigned_rps, tj.assigned_rps, rtol=1e-9,
+                       atol=ATOL)
+    assert np.allclose(tv.offered_rps, tj.offered_rps, rtol=1e-9, atol=ATOL)
+    assert np.isclose(tv.p50_latency_s, tj.p50_latency_s, rtol=RTOL["lat"])
+    assert np.isclose(tv.p99_latency_s, tj.p99_latency_s, rtol=RTOL["lat"])
+    assert tv.respilled_requests == tj.respilled_requests
+    assert tv.dropped_requests == tj.dropped_requests
+    assert np.isclose(tv.respilled_cost, tj.respilled_cost, rtol=1e-9,
+                      atol=ATOL)
+    rv, rj = tv.recovery, tj.recovery
+    assert rv is not None and rj is not None
+    assert rv.reconvergence_ticks == rj.reconvergence_ticks
+    assert np.isclose(rv.p99_blowup, rj.p99_blowup, rtol=1e-9)
+
+
+@pytest.mark.parametrize("on_kill", ["respill", "drop"])
+def test_jax_voided_request_parity(on_kill):
+    """Requests evacuated by a full-rack kill are voided identically:
+    exact per-request counts and cost parity vs the vector oracle."""
+    pytest.importorskip("jax")
+    trace = _backlog_trace()
+    tv = _fleet("vector", _backlog_schedule(on_kill)).play_trace(trace)
+    tj = _fleet("jax", _backlog_schedule(on_kill)).play_trace(trace)
+    assert tv.respilled_requests == tj.respilled_requests
+    assert tv.dropped_requests == tj.dropped_requests
+    assert np.isclose(tv.respilled_cost, tj.respilled_cost, rtol=1e-9)
+    assert np.isclose(tv.dropped_cost, tj.dropped_cost, rtol=1e-9)
+    assert np.isclose(tv.served, tj.served, rtol=1e-11)
+    assert np.allclose(tv.queued, tj.queued, rtol=1e-9, atol=ATOL)
+    voided = (tv.respilled_requests if on_kill == "respill"
+              else tv.dropped_requests)
+    assert voided > 0, "vacuous: no backlog on the rack at kill time"
+
+
+# ---------------------------------------------------------------------------
+# Drop/respill accounting (non-vacuous, engine-level).
+# ---------------------------------------------------------------------------
+def test_respill_reoffers_and_drop_discards():
+    trace = _backlog_trace()
+    t_re = _fleet("vector", _backlog_schedule("respill")).play_trace(trace)
+    t_dr = _fleet("vector", _backlog_schedule("drop")).play_trace(trace)
+    assert t_re.respilled_requests > 0 and t_re.respilled_cost > 0.0
+    assert t_re.dropped_requests == 0 and t_re.dropped_cost == 0.0
+    assert t_dr.dropped_requests > 0 and t_dr.dropped_cost > 0.0
+    assert t_dr.respilled_requests == 0 and t_dr.respilled_cost == 0.0
+    # respilled cost re-enters through the router as offered load
+    extra = float(np.sum(t_re.offered_rps) - np.sum(t_dr.offered_rps))
+    assert np.isclose(extra * DT_S, t_re.respilled_cost, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Router degradation: a dead rack receives exactly zero.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "router", [RoundRobinRouter, JoinShortestQueueRouter, PowerAwareRouter])
+def test_routers_assign_zero_to_dead_rack(router):
+    sched = ChaosSchedule()
+    sched.kill_rack(1, start_s=20 * DT_S, end_s=50 * DT_S)
+    trace = np.full(80, 0.5 * 4 * 60 * UNIT_RATE)
+    tel = _fleet("vector", sched, router=router(),
+                 governor=False).play_trace(trace)
+    dead_window = tel.assigned_rps[1, 20:50]
+    assert np.all(dead_window == 0.0), router.name
+    # and it resumes taking load after restoration
+    assert tel.assigned_rps[1, 50:80].sum() > 0.0, router.name
+
+
+def test_partial_kill_caps_active_units():
+    sched = ChaosSchedule()
+    sched.kill_units(2, 40, start_s=10 * DT_S, end_s=30 * DT_S)
+    trace = np.full(50, 0.8 * 4 * 60 * UNIT_RATE)
+    tel = _fleet("vector", sched).play_trace(trace)
+    assert np.all(tel.active_units[2, 10:30] <= 60 - 40)
+    assert tel.active_units[2, 35:].max() > 60 - 40  # recovers
+
+
+# ---------------------------------------------------------------------------
+# Recovery metrics.
+# ---------------------------------------------------------------------------
+def test_recovery_metrics_non_vacuous():
+    trace = _backlog_trace(ticks=120)
+    tel = _fleet("vector", _backlog_schedule("respill")).play_trace(trace)
+    rec = tel.recovery
+    assert rec is not None
+    assert rec.fault_t == 30 * DT_S
+    assert rec.baseline_p95_s > 0.0
+    assert rec.p99_blowup >= 1.0
+    assert rec.reconvergence_ticks is not None
+    assert rec.reconvergence_ticks >= 0
+    assert rec.respilled_requests == tel.respilled_requests
+    summ = tel.summary()
+    assert summ["chaos_events"] == 1.0
+    assert summ["recovery_p99_blowup"] == rec.p99_blowup
+
+
+def test_hedging_delta_runs_both_arms():
+    racks = _racks(4, governor=True, hedge=180.0)
+    sched = _backlog_schedule("respill")
+    trace = _backlog_trace()
+    delta = hedging_delta(racks, trace, sched, dt_s=DT_S,
+                          router=JoinShortestQueueRouter())
+    assert set(delta) == {"recovery_p99_with_hedge_s",
+                          "recovery_p99_without_hedge_s",
+                          "hedging_benefit_s"}
+    assert delta["recovery_p99_with_hedge_s"] > 0.0
+    assert delta["recovery_p99_without_hedge_s"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Seeded schedule generation / REPRO_CHAOS_SEED plumbing.
+# ---------------------------------------------------------------------------
+def test_random_schedule_is_seed_deterministic():
+    a = ChaosSchedule.random(8, 24 * HOUR, seed=7)
+    b = ChaosSchedule.random(8, 24 * HOUR, seed=7)
+    c = ChaosSchedule.random(8, 24 * HOUR, seed=8)
+    assert [e.to_record() for e in a.events] == \
+        [e.to_record() for e in b.events]
+    assert [e.to_record() for e in a.events] != \
+        [e.to_record() for e in c.events]
+    assert all(0.0 <= e.start_s < e.end_s <= 24 * HOUR for e in a.events)
+
+
+def test_chaos_seed_reads_env(monkeypatch):
+    monkeypatch.delenv("REPRO_CHAOS_SEED", raising=False)
+    assert chaos_seed(default=42) == 42
+    monkeypatch.setenv("REPRO_CHAOS_SEED", "12345")
+    assert chaos_seed(default=42) == 12345
+
+
+def test_chaos_event_validation():
+    with pytest.raises(ValueError):
+        ChaosEvent("meteor", 0, 0.0, 10.0)
+    with pytest.raises(ValueError):
+        ChaosEvent("kill", 0, 10.0, 10.0)  # empty window
+    ev = ChaosEvent("kill", 1, 5.0)  # open-ended
+    assert ev.active(5.0) and ev.active(1e12) and not ev.active(4.9)
+    assert ev.to_record()["end_s"] == math.inf
+
+
+# ---------------------------------------------------------------------------
+# ChaosMonitor: failure detection on the simulation clock.
+# ---------------------------------------------------------------------------
+def test_chaos_monitor_is_tick_deterministic():
+    """Failure detection depends only on the observed tick times, never
+    on wall time (the HealthTracker wall-clock-default fix)."""
+    n_units = np.full(3, 64, np.int64)
+    alive = np.zeros(3, np.int64)
+    dead1 = alive.copy()
+    dead1[1] = 64
+
+    def feed(mon, sleep_s):
+        out = []
+        for t, dead in [(0.0, alive), (60.0, dead1), (120.0, dead1),
+                        (180.0, dead1), (240.0, dead1)]:
+            if sleep_s:
+                time.sleep(sleep_s)
+            mon.observe(t, dead, n_units)
+            out.append(tuple(mon.failed_racks()))
+        return out
+
+    fast = feed(ChaosMonitor(3, timeout_s=2 * 60.0), 0.0)
+    slow = feed(ChaosMonitor(3, timeout_s=2 * 60.0), 0.05)
+    assert fast == slow
+    assert fast[-1] == (1,)  # rack 1 missed > timeout_s of sim time
+    assert fast[0] == fast[1] == ()  # not before the timeout
+
+
+def test_fleet_chaos_monitor_flags_killed_rack():
+    sched = ChaosSchedule()
+    sched.kill_rack(2, start_s=10 * DT_S)  # never restored
+    trace = np.full(40, 0.4 * 4 * 60 * UNIT_RATE)
+    fleet = _fleet("vector", sched)
+    fleet.play_trace(trace)
+    assert fleet.chaos_monitor is not None
+    assert 2 in fleet.chaos_monitor.failed_racks()
+
+
+# ---------------------------------------------------------------------------
+# Sanitizer: deliberate corruption is trapped.
+# ---------------------------------------------------------------------------
+def test_sanitizer_traps_resurrection():
+    """A fully-dead rack that 'serves' a request is an invariant
+    violation — injected deliberately by corrupting the engine's served
+    accumulator (and crediting the ledger so conservation alone cannot
+    mask the resurrection check)."""
+    sched = ChaosSchedule()
+    sched.kill_rack(1, start_s=5 * DT_S)  # dead through end of run
+    trace = np.full(20, 0.3 * 4 * 60 * UNIT_RATE)
+    fleet = _fleet("vector", sched)
+    fleet.play_trace(trace)
+    san = fleet._sanitizer
+    san.check()  # clean run passes
+    fleet.engine.served_acc[1] += 1.0
+    san.injected[1] += 1.0  # keep conservation satisfied
+    with pytest.raises(InvariantViolation, match="resurrection"):
+        san.check()
+
+
+def test_sanitizer_traps_conservation_break_under_chaos():
+    sched = _backlog_schedule("drop")
+    fleet = _fleet("vector", sched)
+    fleet.play_trace(_backlog_trace())
+    san = fleet._sanitizer
+    san.check()
+    fleet.engine.chaos_evac_by_rack[1] += 1e6  # phantom evacuation
+    with pytest.raises(InvariantViolation, match="conservation"):
+        san.check()
+
+
+def test_sanitized_fleet_runs_clean_under_chaos():
+    # sanitize=True on every _fleet() above already arms the per-tick
+    # checks; this one just makes the contract explicit end to end
+    for backend in ("scalar", "vector"):
+        tel = _fleet(backend, _full_schedule("drop"),
+                     thermal=ThermalParams()).play_trace(
+            diurnal_trace(peak_rps=0.6 * 4 * 60 * UNIT_RATE, hours=12,
+                          dt_s=DT_S))
+        assert tel.drained
+
+
+# ---------------------------------------------------------------------------
+# Observability: trace instants + SLO alerts during the fault window.
+# ---------------------------------------------------------------------------
+def test_chaos_events_appear_as_trace_instants():
+    sched = _backlog_schedule("respill")
+    sched.fail_fan(0, start_s=10 * DT_S)  # open-ended
+    tel = _fleet("vector", sched,
+                 thermal=ThermalParams()).play_trace(_backlog_trace())
+    assert len(tel.chaos_events) == 2
+    trace = build_chrome_trace(tel)
+    assert validate_chrome_trace(trace) == []
+    names = [ev["name"] for ev in trace["traceEvents"]]
+    assert "chaos_kill" in names
+    assert "chaos_kill_clear" in names  # bounded window gets a clear
+    assert "chaos_fan_fail" in names
+    assert "chaos_fan_fail_clear" not in names  # open-ended: no clear
+    kill = next(ev for ev in trace["traceEvents"]
+                if ev["name"] == "chaos_kill")
+    assert kill["tid"] == 2  # rack 1's track
+    assert kill["ts"] == 30 * DT_S * 1e6
+    fan = next(ev for ev in trace["traceEvents"]
+               if ev["name"] == "chaos_fan_fail")
+    assert fan["args"]["end_s"] is None  # strict JSON, no Infinity
+
+
+def test_slo_alert_fires_during_chaos_window():
+    slo = SloPolicy([QueueBlowupRule(max_queued=10)])
+    sched = _backlog_schedule("drop")
+    tel = _fleet("vector", sched,
+                 obs=FleetObs(slo=slo)).play_trace(_backlog_trace())
+    assert tel.alerts, "kill-induced backlog should trip the SLO rule"
+    fault_t, fault_end = 30 * DT_S, 60 * DT_S
+    assert any(a.t_start < fault_end and a.t_end > fault_t
+               for a in tel.alerts), "no alert overlaps the fault window"
+
+
+# ---------------------------------------------------------------------------
+# Nightly randomized soak (REPRO_CHAOS_SOAK=1).
+# ---------------------------------------------------------------------------
+@pytest.mark.skipif(os.environ.get("REPRO_CHAOS_SOAK") != "1",
+                    reason="set REPRO_CHAOS_SOAK=1 (nightly CI) to run")
+def test_chaos_soak_randomized():
+    """Longer randomized sweep: scalar/vector bitwise + sanitizer-clean
+    on a fan of seeds derived from the run seed; jax tolerance parity
+    spot-checked on the first two."""
+    base = chaos_seed(default=0)
+    horizon = 160 * DT_S
+    trace = diurnal_trace(peak_rps=0.65 * 4 * 60 * UNIT_RATE,
+                          hours=horizon / HOUR, dt_s=DT_S)
+    have_jax = True
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        have_jax = False
+    for i in range(10):
+        seed = base * 1000 + i
+        on_kill = "respill" if i % 2 == 0 else "drop"
+        sched = ChaosSchedule.random(4, horizon, seed=seed, n_events=5,
+                                     on_kill=on_kill)
+        ts = _fleet("scalar", sched,
+                    thermal=ThermalParams()).play_trace(trace)
+        tv = _fleet("vector", sched,
+                    thermal=ThermalParams()).play_trace(trace)
+        assert ts.served == tv.served, f"seed={seed}"
+        assert ts.energy_j == tv.energy_j, f"seed={seed}"
+        assert np.array_equal(ts.power_w, tv.power_w), f"seed={seed}"
+        assert np.array_equal(ts.queued, tv.queued), f"seed={seed}"
+        if have_jax and i < 2:
+            tj = _fleet("jax", sched,
+                        thermal=ThermalParams()).play_trace(trace)
+            assert np.isclose(tv.served, tj.served,
+                              rtol=RTOL["served"]), f"seed={seed}"
+            assert np.allclose(tv.power_w, tj.power_w, rtol=RTOL["power"],
+                               atol=ATOL), f"seed={seed}"
+            assert np.allclose(tv.queued, tj.queued, rtol=RTOL["queued"],
+                               atol=ATOL), f"seed={seed}"

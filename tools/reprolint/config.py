@@ -34,6 +34,11 @@ PARITY_CRITICAL = [
     "*repro/fleet/telemetry.py",
     "*repro/fleet/router.py",
     "*repro/fleet/engine_state.py",
+    # Chaos masks feed straight into the engines' served/energy
+    # accumulators and the recovery metrics compared across backends,
+    # so fault lowering and the respill/drop accounting carry the same
+    # order-pinning contract as the engines themselves.
+    "*repro/fleet/chaos.py",
     # The jax engine is parity-critical with a *tolerance* contract
     # (XLA reorders reductions by design): reductions there are waived
     # line by line with "# reprolint: ok[RPL001] jax tolerance-parity

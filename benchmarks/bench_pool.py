@@ -22,6 +22,12 @@ the build on a >2x slowdown of the vectorized paths):
     the per-tick mask application and respill routing in the driver
     loop) — chaos masking must not knock the vector engine off its
     fast path;
+  * ``fleet_degrade/vector_rack_ticks_per_s`` — the binary-gating fleet
+    measurement with the full graceful-degradation control plane active
+    (tiered admission, deadline expiry, breakers, retry ring, per-tier
+    request splitting) at 90% load — the control plane's per-tick cost
+    is gated against the baseline so it stays a thin shim over the
+    vector fast path;
   * ``obs/fleet_probe_overhead_ratio`` (plus the probes-on rate
     ``obs/fleet_probes_on_rack_ticks_per_s``) — probes-enabled over
     probes-disabled vector fleet tick rate, both arms interleaved per
@@ -138,6 +144,50 @@ def _fleet_chaos_rack_ticks_per_s(n_racks: int = 100, ticks: int = 400,
     return best
 
 
+def _fleet_degrade_rack_ticks_per_s(n_racks: int = 100, ticks: int = 400,
+                                    reps: int = 3, warmup: int = 10
+                                    ) -> float:
+    """Best-of-``reps`` rack-ticks/s of the vector fleet engine with the
+    full graceful-degradation control plane active — every tick runs
+    deadline expiry, the breaker state machine, retry-ring release,
+    tiered admission (``DegradeDriver.pre_route``), and the three-way
+    tier split of each rack's submission (``_tier_requests``). Offered
+    load sits at 90% of capacity with tight deadline budgets so the
+    admission/retry paths do real work inside the measured window."""
+    from repro.distributed.fault import RetryPolicy
+    from repro.fleet import BreakerConfig, DegradePolicy, TierSpec
+
+    best = 0.0
+    dt = 60.0
+    for _ in range(reps):
+        policy = DegradePolicy(
+            tiers=(TierSpec("gold", 0.2, 600.0),
+                   TierSpec("silver", 0.3, 300.0),
+                   TierSpec("bulk", 0.5, 120.0)),
+            queue_deadline_s=600.0,
+            breaker=BreakerConfig(open_after_s=300.0, close_below_s=120.0,
+                                  cooldown_s=600.0, probe_fraction=0.25,
+                                  fail_timeout_s=120.0),
+            retry=RetryPolicy(max_attempts=3, backoff_s=120.0, jitter=0.5),
+            seed=5)
+        fleet = Fleet(
+            homogeneous_fleet(soc_cluster(), n_racks, unit_rate=30.0),
+            router=JoinShortestQueueRouter(), dt_s=dt, backend="vector",
+            degrade=policy)
+        rps = 0.9 * fleet.capacity_rps
+        for _ in range(warmup):
+            total, split, view = fleet._degrade_pre(rps, 0.0)
+            assign = np.asarray(fleet.router.route(total, view), float)
+            fleet.engine.tick(assign, dt, tier_split=split)
+        t0 = time.perf_counter()
+        for _ in range(ticks):
+            total, split, view = fleet._degrade_pre(rps, 0.0)
+            assign = np.asarray(fleet.router.route(total, view), float)
+            fleet.engine.tick(assign, dt, tier_split=split)
+        best = max(best, n_racks * ticks / (time.perf_counter() - t0))
+    return best
+
+
 def _fleet_obs_overhead(n_racks: int = 100, ticks: int = 400,
                         reps: int = 5, warmup: int = 10
                         ) -> "tuple[float, float]":
@@ -233,6 +283,10 @@ def run() -> None:
     emit_metric("fleet_chaos/vector_rack_ticks_per_s", c_vector)
     emit("fleet_chaos/overhead", 0.0,
          f"chaos_over_plain={c_vector/f_vector:.2f}x")
+    g_vector = _fleet_degrade_rack_ticks_per_s()
+    emit_metric("fleet_degrade/vector_rack_ticks_per_s", g_vector)
+    emit("fleet_degrade/overhead", 0.0,
+         f"degrade_over_plain={g_vector/f_vector:.2f}x")
     o_on, o_ratio = _fleet_obs_overhead()
     emit_metric("obs/fleet_probes_on_rack_ticks_per_s", o_on)
     emit_metric("obs/fleet_probe_overhead_ratio", o_ratio)

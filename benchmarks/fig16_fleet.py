@@ -46,6 +46,14 @@ conclusions can flip versus single-rack ones. This benchmark drives a
      spike coincides with the kill, straggler hedging cuts the
      recovery-window p99 (the respill surge pushes queue waits past
      ``hedge_after_s`` while scale-up is still cooldown-gated).
+  6b. **Degradation** — the graceful-degradation control plane
+     (``repro.fleet.degrade``) through the same flash crowd with a
+     two-rack kill at its peak: tiered admission + breakers must hold
+     the gold tier's p99 within 1.5x of the pre-fault baseline and cut
+     re-convergence vs the accept-everything fleet, at a terminal loss
+     bounded under 10% of injected mass; scalar/vector stay bitwise on
+     every shed/retry/breaker counter and jax matches within
+     ``JAX_RTOL``.
   7. **Throughput** — steady-state rack-ticks/s of the vector engine
      must be >= 10x the scalar engine's, both on the binary-gating
      mixed fleet and with the frequency governor + thermal stack
@@ -337,6 +345,149 @@ def _chaos_section() -> None:
         "hedging must cut the recovery-window p99 (non-vacuously)"
 
 
+def _degrade_section() -> None:
+    """Graceful degradation (``repro.fleet.degrade``): the flash crowd
+    of the chaos section with a two-rack kill at its peak, run through
+    the degrade control plane (tiered admission + deadline shedding +
+    breakers + seeded retry) vs the same fleet accepting everything.
+    The payoff claims: gold-tier p99 holds within tolerance of the
+    pre-fault baseline, re-convergence beats the accept-everything
+    fleet, and the price is a bounded shed rate — plus the standing
+    parity contract on every degrade counter."""
+    from repro.distributed.fault import RetryPolicy
+    from repro.fleet import (BreakerConfig, DegradePolicy, TierSpec,
+                             tier_latency_percentiles)
+
+    def degrade_racks() -> List[RackConfig]:
+        pol = ScalePolicy(cooldown_s=300.0, min_units=1)
+        racks = homogeneous_fleet(soc_cluster(), 16, SOC_UNIT_RATE,
+                                  policy=pol)
+        racks += homogeneous_fleet(edge_server_cpu(), 4, CPU_UNIT_RATE,
+                                   policy=pol)
+        return racks
+
+    cap = sum(rc.spec.n_units * rc.unit_rate for rc in degrade_racks())
+    crowd = flash_crowd_trace(base_rps=0.3 * cap, spike_mult=4.0,
+                              hours=2.0, dt_s=DT_S, seed=16)
+    peak_tick = int(np.argmax(crowd))  # spike peaks ~1.28x capacity
+
+    def kill_sched() -> ChaosSchedule:
+        sched = ChaosSchedule(on_kill="respill")
+        sched.kill_rack(0, start_s=peak_tick * DT_S,
+                        end_s=(peak_tick + 30) * DT_S)
+        sched.kill_rack(1, start_s=peak_tick * DT_S,
+                        end_s=(peak_tick + 30) * DT_S)
+        return sched
+
+    def degrade_policy() -> DegradePolicy:
+        return DegradePolicy(
+            tiers=(TierSpec("gold", 0.2, 600.0),
+                   TierSpec("silver", 0.3, 300.0),
+                   TierSpec("bulk", 0.5, 120.0)),
+            queue_deadline_s=600.0,
+            breaker=BreakerConfig(open_after_s=300.0, close_below_s=120.0,
+                                  cooldown_s=600.0, probe_fraction=0.25,
+                                  fail_timeout_s=120.0),
+            retry=RetryPolicy(max_attempts=3, backoff_s=120.0, jitter=0.5),
+            seed=16)
+
+    def run_fleet(backend: str, degrade: Optional[DegradePolicy],
+                  chaos: Optional[ChaosSchedule]) -> FleetTelemetry:
+        return Fleet(degrade_racks(), router=JoinShortestQueueRouter(),
+                     dt_s=DT_S, backend=backend, chaos=chaos,
+                     degrade=degrade, sanitize=True).play_trace(crowd)
+
+    base = run_fleet("vector", degrade_policy(), None)   # pre-fault
+    deg = run_fleet("vector", degrade_policy(), kill_sched())
+    raw = run_fleet("vector", None, kill_sched())        # accept all
+    assert deg.drained and raw.drained and base.drained
+
+    # (a) the gold tier is protected: its p99 under the fault stays
+    # within tolerance of the pre-fault baseline, while the
+    # accept-everything fleet's overall p99 blows past it — and the
+    # admission order means the bulk tier, not gold, pays for it
+    gold_base = tier_latency_percentiles(base, "gold")[99.0]
+    gold_deg = tier_latency_percentiles(deg, "gold")[99.0]
+    assert gold_base > 0.0 and gold_deg > 0.0, \
+        "vacuous: the gold tier completed nothing"
+    assert gold_deg <= 1.5 * gold_base, (
+        f"gold-tier p99 must hold within 1.5x of the pre-fault baseline "
+        f"({gold_deg:.1f}s vs {gold_base:.1f}s)")
+    assert gold_deg < raw.p99_latency_s, \
+        "gold p99 under degradation must beat the accept-everything p99"
+    assert deg.shed_by_tier["gold"] == 0.0 \
+        and deg.shed_by_tier["bulk"] > 0.0, \
+        "admission must shed the loosest tier first, never gold here"
+
+    # (b) shedding + breakers buy back recovery time (non-vacuous:
+    # the kill visibly degrades both arms first)
+    deg_rec, raw_rec = deg.recovery, raw.recovery
+    assert deg_rec is not None and raw_rec is not None
+    assert raw_rec.p99_blowup > 1.0 and deg_rec.p99_blowup > 1.0
+    assert deg_rec.reconvergence_ticks is not None \
+        and raw_rec.reconvergence_ticks is not None \
+        and deg_rec.reconvergence_ticks < raw_rec.reconvergence_ticks, (
+        f"degradation must re-converge faster than accept-everything "
+        f"({deg_rec.reconvergence_ticks} vs "
+        f"{raw_rec.reconvergence_ticks} ticks)")
+
+    # (c) the price is bounded: terminal loss (deadline expiry + retry
+    # budget exhaustion + chaos drops) stays under 10% of injected mass
+    injected = float(np.sum(crowd)) * DT_S
+    loss = deg.expired_cost + deg.retry_dropped_cost + deg.dropped_cost
+    assert deg.shed_cost > 0.0 and deg.breaker_opens > 0 \
+        and deg.retried_cost > 0.0, "vacuous: no mechanism fired"
+    assert loss / injected <= 0.10, (
+        f"terminal loss must stay bounded ({loss / injected:.1%})")
+    emit("fig16/degrade", 0.0,
+         f"gold_p99_s={gold_deg:.1f};gold_baseline_p99_s={gold_base:.1f};"
+         f"raw_p99_s={raw.p99_latency_s:.1f};"
+         f"reconvergence_ticks={deg_rec.reconvergence_ticks};"
+         f"raw_reconvergence_ticks={raw_rec.reconvergence_ticks};"
+         f"shed_frac={deg.shed_cost / injected:.3f};"
+         f"loss_frac={loss / injected:.3f};"
+         f"breaker_opens={deg.breaker_opens}")
+
+    # (d) parity: the degrade counters are part of the bitwise contract
+    t_s = run_fleet("scalar", degrade_policy(), kill_sched())
+    bitwise = (
+        t_s.energy_j == deg.energy_j
+        and t_s.served == deg.served
+        and np.array_equal(t_s.power_w, deg.power_w)
+        and t_s.p99_latency_s == deg.p99_latency_s
+        and t_s.shed_cost == deg.shed_cost
+        and t_s.shed_by_tier == deg.shed_by_tier
+        and t_s.expired_cost == deg.expired_cost
+        and t_s.retried_cost == deg.retried_cost
+        and t_s.retry_dropped_cost == deg.retry_dropped_cost
+        and t_s.breaker_opens == deg.breaker_opens
+        and np.array_equal(t_s.breaker_state_t, deg.breaker_state_t))
+    emit("fig16/degrade_backend_parity", 0.0,
+         f"bitwise={bitwise};shed={deg.shed_cost:.1f}")
+    assert bitwise, \
+        "scalar/vector must stay bitwise-equal with degradation active"
+    try:
+        import jax  # noqa: F401
+    except Exception:
+        emit("fig16/degrade_jax_parity", 0.0, "skipped (jax unavailable)")
+        return
+    t_j = run_fleet("jax", degrade_policy(), kill_sched())
+    worst = 0.0
+    for series in ("served", "energy_j", "shed_cost", "retried_cost",
+                   "retry_dropped_cost", "expired_cost", "p99_latency_s",
+                   "shed_cost_t", "offered_rps"):
+        r = _maxrel(getattr(deg, series), getattr(t_j, series))
+        worst = max(worst, r)
+        assert r <= JAX_RTOL, (
+            f"fig16 degrade jax parity: {series} relative error "
+            f"{r:.2e} > {JAX_RTOL:g}")
+    assert t_j.breaker_opens == deg.breaker_opens \
+        and np.array_equal(t_j.breaker_state_t, deg.breaker_state_t), \
+        "breaker tick state must match exactly across engines"
+    emit("fig16/degrade_jax_parity", 0.0,
+         f"max_relerr={worst:.2e};rtol={JAX_RTOL:g}")
+
+
 def run(perf: bool = True, backend: Optional[str] = None) -> None:
     """``backend`` overrides the engine of the sweep sections (1, 2, 4);
     the parity sections always pin their own engine pairs."""
@@ -460,6 +611,9 @@ def run(perf: bool = True, backend: Optional[str] = None) -> None:
 
     # --- 6. chaos: correlated rack kills at peak --------------------------
     _chaos_section()
+
+    # --- 6b. graceful degradation under fault + flash crowd ---------------
+    _degrade_section()
 
     # --- 7. vectorized engine throughput ----------------------------------
     if not perf:

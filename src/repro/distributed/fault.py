@@ -87,21 +87,67 @@ class HealthTracker:
 # ---------------------------------------------------------------------------
 # Retries.
 # ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RetryPolicy:
+    """The single copy of the exponential-backoff math.
+
+    ``with_retries`` (wall clock) and the fleet's deterministic retry
+    mechanism (``repro.fleet.degrade``, sim clock) both delay attempt
+    ``a`` by :meth:`delay_s` — there is deliberately no second
+    implementation of ``backoff * 2**attempt`` anywhere in the repo.
+
+    The jitter path is *seeded and clock-free*: :meth:`jitter_u` is a
+    pure function of ``(seed, key)`` (the fleet uses the global tick
+    index as ``key``), so two engines replaying the same schedule draw
+    bit-identical jitter — wall-clock ``random.random()`` jitter would
+    make retry timing, and therefore telemetry, irreproducible.
+    """
+
+    max_attempts: int = 3
+    backoff_s: float = 0.1
+    jitter: float = 0.0  # fraction of the base delay added at u=1
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        assert self.max_attempts >= 1, "need at least one attempt"
+        assert self.backoff_s >= 0.0, "backoff must be non-negative"
+        assert 0.0 <= self.jitter, "jitter fraction must be >= 0"
+
+    def delay_s(self, attempt: int, u: float = 0.0) -> float:
+        """Backoff before retrying after failed attempt ``attempt``
+        (0-based): ``backoff_s * 2**attempt * (1 + jitter * u)`` with
+        ``u`` in [0, 1) from :meth:`jitter_u` (or 0 for no jitter)."""
+        return self.backoff_s * (2 ** attempt) * (1.0 + self.jitter * u)
+
+    def jitter_u(self, key: int) -> float:
+        """Deterministic jitter draw in [0, 1) for ``key`` — seeded,
+        independent of call order, identical across engines."""
+        return float(np.random.default_rng([self.seed, int(key)]).random())
+
+    @property
+    def max_delay_s(self) -> float:
+        """Upper bound on any single backoff delay (jitter maxed)."""
+        return self.delay_s(self.max_attempts - 1, 1.0)
+
+
 def with_retries(fn: Callable, max_attempts: int = 3,
                  backoff_s: float = 0.1,
                  retriable: Tuple[type, ...] = (RuntimeError,)):
     """Wrap a step function with bounded retries (transient XLA/runtime
-    failures; non-retriable exceptions propagate)."""
+    failures; non-retriable exceptions propagate). Delays come from
+    :class:`RetryPolicy` — jitter-free here for backward compatibility."""
+    policy = RetryPolicy(max_attempts=max_attempts, backoff_s=backoff_s)
+
     def wrapped(*a, **kw):
         last = None
-        for attempt in range(max_attempts):
+        for attempt in range(policy.max_attempts):
             try:
                 return fn(*a, **kw)
             except retriable as e:  # pragma: no cover - timing dependent
                 last = e
                 log.warning("step failed (attempt %d/%d): %s",
-                            attempt + 1, max_attempts, e)
-                time.sleep(backoff_s * (2 ** attempt))
+                            attempt + 1, policy.max_attempts, e)
+                time.sleep(policy.delay_s(attempt))
         raise last
     return wrapped
 

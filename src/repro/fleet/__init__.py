@@ -18,6 +18,10 @@ claims can be evaluated at the scale public edge platforms run at
   * :mod:`~repro.fleet.chaos` — correlated fault injection (rack/unit
     kills, shared-fan-rail failure, rack power caps) with recovery
     metrics and seeded random schedules for the CI chaos gate;
+  * :mod:`~repro.fleet.degrade` — graceful-degradation control plane:
+    SLO-tiered admission, deadline load shedding, per-rack circuit
+    breakers, and deterministic seeded retry, wired identically
+    through all three engines;
   * :mod:`~repro.fleet.traces` — diurnal, flash-crowd, and replayed
     arrival traces, scalable to a target user population;
   * :class:`~repro.fleet.telemetry.FleetTelemetry` — fleet roll-ups
@@ -47,6 +51,13 @@ from repro.fleet.chaos import (
     hedging_delta,
     recovery_report,
     recovery_window_p99,
+)
+from repro.fleet.degrade import (
+    BreakerConfig,
+    DegradePolicy,
+    TierSpec,
+    default_tiers,
+    tier_latency_percentiles,
 )
 from repro.fleet.fleet import Fleet, RackConfig, homogeneous_fleet
 from repro.fleet.router import (
@@ -85,6 +96,11 @@ __all__ = [
     "ChaosMonitor",
     "RecoveryReport",
     "chaos_seed",
+    "TierSpec",
+    "BreakerConfig",
+    "DegradePolicy",
+    "default_tiers",
+    "tier_latency_percentiles",
     "hedging_delta",
     "recovery_report",
     "recovery_window_p99",

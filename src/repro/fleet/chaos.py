@@ -526,3 +526,14 @@ class ChaosMonitor:
 
     def failed_racks(self) -> List[int]:
         return self.tracker.failed_units()
+
+    def failed_mask(self, n_racks: int) -> np.ndarray:
+        """Boolean per-rack failure mask — the array form the
+        degradation layer's circuit breakers consume (``degrade.py``
+        mirrors this timeout in whole ticks so every engine agrees on
+        the transition instant)."""
+        mask = np.zeros(n_racks, bool)
+        for r in self.failed_racks():
+            if r < n_racks:
+                mask[r] = True
+        return mask

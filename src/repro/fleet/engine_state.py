@@ -248,6 +248,13 @@ class FleetArrays:
     def any_hedge(self) -> bool:
         return any(dl is not None for dl in self.hedge_deadline)
 
+    @property
+    def capacity_rps(self) -> np.ndarray:
+        """Per-rack peak service rate (``n_units * unit_rate``) — the
+        denominator of every queue-delay estimate (routers, breakers,
+        the jax degradation lowering)."""
+        return self.n_units.astype(float) * self.unit_rate
+
 
 def build_fleet_arrays(
     racks: "Sequence[RackConfig]", idle_units_off: bool

@@ -54,6 +54,12 @@ from repro.fleet.chaos import (
     LoweredChaos,
     recovery_report,
 )
+from repro.fleet.degrade import (
+    BRK_CLOSED,
+    DegradeDriver,
+    DegradePolicy,
+    LoweredDegrade,
+)
 from repro.fleet.engine_state import (
     GOV_FIXED,
     GOV_RACE,
@@ -139,6 +145,54 @@ def _init_chaos_state(engine: Any, n: int) -> None:
     engine.chaos_respilled_cost = 0.0
 
 
+def _init_degrade_state(engine: Any, n: int) -> None:
+    """Shared degradation bookkeeping both tick engines carry (inert
+    until the fleet calls ``expire``). The cumulative expired cost is
+    the sanitizer's conservation credit — work abandoned past its
+    deadline was injected but will never be served."""
+    engine.degrade_expired = 0
+    engine.degrade_expired_cost = 0.0
+    engine.degrade_expired_by_rack = np.zeros(n)
+
+
+def _tier_requests(
+    work: float, arrival_s: float,
+    tier_split: Sequence[Tuple[Optional[str], float]],
+) -> List[Tuple[float, Request]]:
+    """Split one rack's tick work into per-tier sub-requests (shared by
+    both host engines so the sub-costs are the same float expressions).
+    Slice existence is decided by ``frac > 0`` alone — never by cost
+    rounding dust — and the *last positive-fraction* slice takes the
+    exact remainder, so the slices sum back to ``work`` bitwise and
+    splitting never perturbs conservation. The jax engine mirrors this
+    split host-side from its emitted per-tier admitted rows (its
+    fractions agree within tolerance, so the frac-positivity predicate
+    keeps sub-request counts identical across engines). Only the first
+    slice carries the arrival-rate ``count`` weight; the rest weigh
+    ``0.0`` (adding 0.0 to the non-negative windowed accumulator is a
+    bitwise no-op), keeping the scalar governor's rate estimate
+    identical to the unsplit path — the vector engine's ``work / dt``."""
+    out: List[Tuple[float, Request]] = []
+    idx = [i for i, (_name, frac) in enumerate(tier_split) if frac > 0.0]
+    if not idx:
+        return out
+    acc = 0.0
+    cnt = work
+    for i in idx[:-1]:
+        name, frac = tier_split[i]
+        c = work * frac
+        out.append(
+            (cnt, Request(payload=name, cost=c, arrival_s=arrival_s)))
+        cnt = 0.0
+        acc += c
+    c = work - acc
+    if c > 0.0:
+        out.append(
+            (cnt, Request(payload=tier_split[idx[-1]][0], cost=c,
+                          arrival_s=arrival_s)))
+    return out
+
+
 class _ScalarFleetEngine:
     """Reference engine: one per-unit ClusterRuntime per rack."""
 
@@ -172,9 +226,21 @@ class _ScalarFleetEngine:
             )
         self.n_units = np.array([rc.spec.n_units for rc in racks], np.int64)
         _init_chaos_state(self, len(self.rts))
+        _init_degrade_state(self, len(self.rts))
 
     def queued_cost(self) -> np.ndarray:
         return np.array([rt.workload.pending_cost for rt in self.rts], float)
+
+    def expire(self, deadline_s: float) -> None:
+        """Abandon queued work older than ``deadline_s`` (deadline-aware
+        load shedding; called by the fleet driver before routing)."""
+        t = self.now
+        for r, rt in enumerate(self.rts):
+            n_req, cost = rt.workload.expire(t, deadline_s)
+            if n_req:
+                self.degrade_expired += n_req
+                self.degrade_expired_cost += cost
+                self.degrade_expired_by_rack[r] += cost
 
     def active_units(self) -> np.ndarray:
         return np.array([rt.active_units for rt in self.rts], np.int64)
@@ -225,16 +291,24 @@ class _ScalarFleetEngine:
         )
         return spill
 
-    def tick(self, assign_rps: np.ndarray, dt: float
-             ) -> Tuple[np.ndarray, np.ndarray]:
+    def tick(
+        self, assign_rps: np.ndarray, dt: float,
+        tier_split: Optional[Sequence[Tuple[Optional[str], float]]] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
         t = self.now
         for r, rt in enumerate(self.rts):
             work = float(assign_rps[r]) * dt
             if work > 0:
-                rt.submit(
-                    count=work,
-                    request=Request(cost=work, arrival_s=t + 0.5 * dt),
-                )
+                if tier_split is None:
+                    rt.submit(
+                        count=work,
+                        request=Request(cost=work, arrival_s=t + 0.5 * dt),
+                    )
+                else:
+                    for cnt, req in _tier_requests(
+                        work, t + 0.5 * dt, tier_split
+                    ):
+                        rt.submit(count=cnt, request=req)
         n = len(self.rts)
         queued = np.zeros(n, np.int64)
         conc = np.zeros(n, np.int64)
@@ -516,9 +590,22 @@ class _VectorFleetEngine:
         self._temp_rows: List[np.ndarray] = []
         self._thr_rows: List[np.ndarray] = []
         _init_chaos_state(self, n)
+        _init_degrade_state(self, n)
 
     def queued_cost(self) -> np.ndarray:
         return np.array([wl.pending_cost for wl in self.wls], float)
+
+    def expire(self, deadline_s: float) -> None:
+        """Vector twin of the scalar ``expire`` — the deque walk lives
+        in the shared :class:`QueueWorkload`, so the popped requests and
+        reclaimed cost are identical by construction."""
+        t = self.now
+        for r, wl in enumerate(self.wls):
+            n_req, cost = wl.expire(t, deadline_s)
+            if n_req:
+                self.degrade_expired += n_req
+                self.degrade_expired_cost += cost
+                self.degrade_expired_by_rack[r] += cost
 
     def active_units(self) -> np.ndarray:
         return self.active.copy()
@@ -612,13 +699,22 @@ class _VectorFleetEngine:
             self.opp = np.where(self._has_ceiling, clamped, self.opp)
 
     # ------------------------------------------------------------------
-    def tick(self, assign_rps: np.ndarray, dt: float
-             ) -> Tuple[np.ndarray, np.ndarray]:
+    def tick(
+        self, assign_rps: np.ndarray, dt: float,
+        tier_split: Optional[Sequence[Tuple[Optional[str], float]]] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
         t = self.now
         work = assign_rps * dt
-        for r in np.nonzero(work > 0)[0]:
-            req = Request(cost=float(work[r]), arrival_s=t + 0.5 * dt)
-            self.wls[r].submit(req)
+        if tier_split is None:
+            for r in np.nonzero(work > 0)[0]:
+                req = Request(cost=float(work[r]), arrival_s=t + 0.5 * dt)
+                self.wls[r].submit(req)
+        else:
+            for r in np.nonzero(work > 0)[0]:
+                for _cnt, req in _tier_requests(
+                    float(work[r]), t + 0.5 * dt, tier_split
+                ):
+                    self.wls[r].submit(req)
         # windowed rate estimate with window == dt: this tick's work
         rate = work / dt
         # frequency governors pick this tick's OPP; the activation
@@ -974,6 +1070,7 @@ class Fleet:
         sanitize: Optional[bool] = None,
         obs: Optional["FleetObs"] = None,
         chaos: Optional[ChaosSchedule] = None,
+        degrade: Optional[DegradePolicy] = None,
     ) -> None:
         assert racks, "need at least one rack"
         self.racks = list(racks)
@@ -1026,6 +1123,24 @@ class Fleet:
             self.chaos_monitor = ChaosMonitor(
                 self.n_racks, timeout_s=2.0 * dt_s
             )
+        self.degrade = degrade
+        self._degrade_lowered: Optional[LoweredDegrade] = None
+        self._degrade_driver: Optional[DegradeDriver] = None
+        self._tier_payloads: List[Optional[str]] = []
+        if degrade is not None:
+            low = degrade.lower([int(u) for u in self._n_units], dt_s)
+            self._degrade_lowered = low
+            # tier payloads tag each sub-request; the trailing None slot
+            # is untiered chaos respill (bypasses admission)
+            self._tier_payloads = [t.name for t in low.tiers] + [None]
+            if hasattr(self.engine, "set_degrade"):
+                # jax: lowered to branchless per-tick rows in the scan
+                self.engine.set_degrade(low)
+            else:
+                # ONE driver instance serves whichever host engine runs,
+                # so scalar and vector degradation decisions are the
+                # same Python objects (bitwise parity by construction)
+                self._degrade_driver = DegradeDriver(low)
         # cumulative per-tick driver history (grows across play_trace calls,
         # in lockstep with the engines' own cumulative state)
         self._offered: List[float] = []
@@ -1115,6 +1230,35 @@ class Fleet:
             self.chaos_monitor.observe(self.engine.now, dead, self._n_units)
         return self.engine.apply_chaos(dead, fan, cap) / self.dt_s
 
+    def _degrade_pre(
+        self, rps: float, respill_rps: float
+    ) -> Tuple[float, Optional[List[Tuple[Optional[str], float]]], FleetView]:
+        """One tick of the degradation control plane (host engines):
+        deadline expiry, then breaker/retry/admission in the shared
+        :class:`DegradeDriver`, then the breaker-scaled router view.
+        Returns ``(routed_total_rps, tier_split, view)``."""
+        drv = self._degrade_driver
+        low = self._degrade_lowered
+        assert drv is not None and low is not None
+        deadline = low.policy.queue_deadline_s
+        if deadline is not None:
+            self.engine.expire(deadline)
+        view = self.view()  # chaos-degraded capacity, post-expiry queue
+        total, frac = drv.pre_route(
+            len(self._offered),
+            rps,
+            respill_rps,
+            view.queued_cost,
+            view.capacity_rps,
+            self.engine.chaos_dead,
+        )
+        split = None
+        if frac is not None:
+            split = list(zip(self._tier_payloads, frac.tolist()))
+        if low.breaker_on:
+            view = view.scaled(drv.breaker_scale())
+        return total, split, view
+
     def play_trace(
         self, trace_rps: Sequence[float], drain: bool = True
     ) -> FleetTelemetry:
@@ -1149,16 +1293,31 @@ class Fleet:
                 ev = self.engine._full("evac")
                 if ev.shape[0] >= n_new:
                     extra = ev[-n_new:].sum(axis=1) / dt  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
+            # with degradation on the offered series is the *admitted*
+            # total the scan actually routed (post-shed, plus released
+            # retries and respill) — the same total the host drivers
+            # append after DegradeDriver.pre_route
+            adm = None
+            if self._degrade_lowered is not None and n_new > 0:
+                rows = self.engine._full("dg_admitted")
+                if rows.shape[0] >= n_new:
+                    adm = rows[-n_new:]
             for i, rps in enumerate(trace):
-                off = float(rps)
-                if extra is not None:
-                    off += float(extra[i])
+                if adm is not None:
+                    off = float(adm[i])
+                else:
+                    off = float(rps)
+                    if extra is not None:
+                        off += float(extra[i])
                 self._offered.append(off)
                 self._assigned.append(np.asarray(assigned[i], float))
             for j in range(n_drain):
-                off = 0.0
-                if extra is not None:
-                    off += float(extra[len(trace) + j])
+                if adm is not None:
+                    off = float(adm[len(trace) + j])
+                else:
+                    off = 0.0
+                    if extra is not None:
+                        off += float(extra[len(trace) + j])
                 self._offered.append(off)
                 self._assigned.append(
                     np.asarray(assigned[len(trace) + j], float)
@@ -1182,35 +1341,52 @@ class Fleet:
         zero = np.zeros(self.n_racks)
         queued = conc = None
         lowered = self._lowered
+        drv = self._degrade_driver
         for rps in trace:
-            total = float(rps)
-            if lowered is not None:
-                total += self._chaos_step()
-            assign = np.asarray(self.router.route(total, self.view()), float)
+            respill = self._chaos_step() if lowered is not None else 0.0
+            if drv is not None:
+                total, split, view = self._degrade_pre(float(rps), respill)
+            else:
+                total, split, view = float(rps) + respill, None, self.view()
+            assign = np.asarray(self.router.route(total, view), float)
             self._offered.append(total)
             self._assigned.append(assign)
-            queued, conc = self.engine.tick(assign, dt)
+            queued, conc = self.engine.tick(assign, dt, tier_split=split)
             self._queued_rows.append(queued)
         if drain:
             for _ in range(10 * len(trace) + 100):
-                total = self._chaos_step() if lowered is not None else 0.0
+                respill = self._chaos_step() if lowered is not None else 0.0
+                if drv is not None:
+                    # released retry mass re-enters during drain, routed
+                    # like any offered load
+                    total, split, view = self._degrade_pre(0.0, respill)
+                else:
+                    total, split, view = respill, None, None
                 if total > 0.0:
                     # a kill edge during drain respills the dead rack's
                     # backlog through the router like any offered load
                     assign = np.asarray(
-                        self.router.route(total, self.view()), float
+                        self.router.route(
+                            total, view if view is not None else self.view()
+                        ),
+                        float,
                     )
                 else:
                     assign = zero
                 self._offered.append(total)
                 self._assigned.append(assign)
-                queued, conc = self.engine.tick(assign, dt)
+                queued, conc = self.engine.tick(assign, dt, tier_split=split)
                 self._queued_rows.append(queued)
-                if int(queued.sum()) == 0 and int(conc.sum()) == 0:  # reprolint: ok[RPL001] zero-test only: sum()==0 iff all elements are 0, order-free
+                ring = drv.ring_mass() if drv is not None else 0.0
+                if (
+                    int(queued.sum()) == 0 and int(conc.sum()) == 0  # reprolint: ok[RPL001] zero-test only: sum()==0 iff all elements are 0, order-free
+                    and ring <= 0.0
+                ):
                     break
         if queued is not None:
             self._drained = (
                 int(queued.sum()) == 0 and int(conc.sum()) == 0  # reprolint: ok[RPL001] zero-test only: sum()==0 iff all elements are 0, order-free
+                and (drv is None or drv.ring_mass() <= 0.0)
             )
         self._wall_s += time.perf_counter() - t0
         return self._build_telemetry()
@@ -1366,6 +1542,58 @@ class Fleet:
                     respilled_requests=tel.respilled_requests,
                     respilled_cost=tel.respilled_cost,
                 )
+        if self.degrade is not None:
+            eng = self.engine
+            # host backends read the shared driver; the jax engine
+            # mirrors the same attribute surface host-side after play
+            src: Any = self._degrade_driver if (
+                self._degrade_driver is not None) else eng
+            tel.degrade_on = True
+            tel.shed_cost = float(getattr(src, "shed_cost", 0.0))
+            shed_by_tier = np.asarray(
+                getattr(src, "shed_by_tier", np.zeros(0)), float)
+            tel.shed_by_tier = {
+                t.name: float(shed_by_tier[k])
+                for k, t in enumerate(self.degrade.tiers)
+                if k < len(shed_by_tier)
+            }
+            tel.shed_cost_t = np.asarray(
+                getattr(src, "shed_cost_t", []), float)
+            tel.expired_requests = int(getattr(eng, "degrade_expired", 0))
+            tel.expired_cost = float(
+                getattr(eng, "degrade_expired_cost", 0.0))
+            tel.retried_cost = float(getattr(src, "retried_cost", 0.0))
+            tel.retry_dropped_cost = float(
+                getattr(src, "retry_dropped_cost", 0.0))
+            tel.breaker_opens = int(getattr(src, "breaker_opens", 0))
+            rows = getattr(src, "breaker_state_t", [])
+            bt = (
+                np.stack([np.asarray(r, np.int64) for r in rows]).T
+                if len(rows)
+                else np.zeros((self.n_racks, 0), np.int64)
+            )
+            tel.breaker_state_t = bt
+            # derive open/half/close instants from the state matrix —
+            # one shared code path for every backend (trace + summary)
+            events: List[dict] = []
+            ts = tel.time_s
+            for r in range(bt.shape[0]):
+                prev = BRK_CLOSED
+                for i in range(bt.shape[1]):
+                    s = int(bt[r, i])
+                    if s != prev:
+                        t_ev = (
+                            float(ts[i]) if i < len(ts)
+                            else i * self.dt_s
+                        )
+                        events.append({
+                            "rack": self.rack_names[r],
+                            "t_s": t_ev,
+                            "state": s,
+                            "prev": prev,
+                        })
+                    prev = s
+            tel.breaker_events = events
         if self.obs is not None and self.obs.slo is not None:
             # evaluate() resets rule state first, so rebuilding telemetry
             # (cumulative across play_trace calls) stays idempotent

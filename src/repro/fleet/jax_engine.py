@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.fleet.degrade import BRK_HALF, BRK_OPEN
 from repro.fleet.engine_state import (
     GOV_FIXED,
     GOV_RACE,
@@ -117,6 +118,18 @@ class _Dims(NamedTuple):
     # unit-cap / floor-OPP overlays run in-scan; compiled separately so
     # a chaos-free fleet runs the exact pre-chaos program
     chaos_on: bool = False
+    # graceful degradation (repro.fleet.degrade lowered in-scan):
+    # deadline expiry, per-rack circuit breakers, tiered admission with
+    # a retry ring. All off by default so a degrade-free fleet compiles
+    # to the exact pre-degrade program.
+    degrade_on: bool = False
+    dg_admission: bool = False
+    dg_breaker_on: bool = False
+    dg_use_chaos: bool = False
+    dg_tiers: int = 0
+    dg_attempts: int = 1
+    dg_ring_slots: int = 1
+    dg_lag: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -301,7 +314,8 @@ def _step(
     B = carry["B"]
     A = carry["A"]
     S = carry["S"]
-    total = x["rps"] * params["trace_scale"]
+    fresh = x["rps"] * params["trace_scale"]
+    total = fresh
     # chaos overlays (compiled out entirely when dims.chaos_on is off).
     # A full-rack kill edge evacuates the rack's pending cost *before*
     # routing — exactly the scalar/vector drivers' _chaos_step order —
@@ -312,7 +326,8 @@ def _step(
         evac = jnp.where(kill_edge, B, 0.0)
         B = jnp.where(kill_edge, 0.0, B)
         E_new = carry["E"] + evac
-        total = total + params["chaos_respill"] * jnp.sum(evac) / dt  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
+        respill_rps = params["chaos_respill"] * jnp.sum(evac) / dt  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
+        total = total + respill_rps
         cap_units = jnp.maximum(params["n_units"] - x["chaos_dead"], 0)
         # routers see the degraded fleet: killed units shrink capacity,
         # a fully-dead rack advertises exactly 0.0 and alive=False
@@ -323,9 +338,149 @@ def _step(
         alive: Optional[Any] = x["chaos_dead"] < params["n_units"]
     else:
         evac = E_new = None
+        respill_rps = jnp.float64(0.0)
         cap_units = params["n_units"]
         cap_rt = params["capacity_rps"]
         alive = None
+    # graceful degradation control plane (repro.fleet.degrade lowered
+    # in-scan; compiled out entirely when dims.degrade_on is off). The
+    # per-tick order mirrors Fleet._degrade_pre exactly: deadline
+    # expiry on the post-evacuation queue, breaker state machine,
+    # retry-ring release + tiered admission, then routing against the
+    # breaker-scaled capacity. Respill bypasses admission, like the
+    # host driver.
+    D_new = None
+    brk_scale = None
+    if dims.degrade_on:
+        tick = carry["dg_tick"]
+        D = carry["dg_D"]
+        # deadline expiry: the lag ring W holds per-tick admitted work;
+        # the slot consumed at tick i was written at tick i - L, so
+        # A_lag = total submitted through tick i - L. FIFO serving
+        # means the un-dispatched part of that prefix is exactly the
+        # past-deadline mass — the same mass QueueWorkload.expire pops.
+        if dims.dg_lag > 0:
+            W = carry["dg_W"]
+            A_lag = carry["dg_A_lag"]
+            slotL = jnp.mod(tick, dims.dg_lag)
+            A_lag = A_lag + W[slotL]
+            disp_x = S + D if not dims.chaos_on else S + E_new + D
+            expired = jnp.clip(A_lag - disp_x, 0.0, B)
+            B = B - expired
+            D_new = D + expired
+        else:
+            W = A_lag = None
+            expired = jnp.zeros_like(B)
+            D_new = D
+        # per-rack circuit breakers (post-expiry queue depth, chaos-
+        # degraded capacity) — branchless twin of DegradeDriver's
+        # _update_breakers state machine
+        brk = carry["dg_brk"]
+        since = carry["dg_since"]
+        last_live = carry["dg_last_live"]
+        opens = carry["dg_opens"]
+        if dims.dg_breaker_on:
+            if dims.chaos_on and dims.dg_use_chaos:
+                full_dead = x["chaos_dead"] >= params["n_units"]
+            else:
+                full_dead = jnp.zeros(B.shape[0], bool)
+            last_live = jnp.where(full_dead, last_live, tick)
+            failed = (tick - last_live) > params["dg_fail_timeout_ticks"]
+            delay = B / jnp.maximum(cap_rt, 1e-12)
+            trip = (delay > params["dg_open_after"]) | failed
+            open_now = (brk == 0) & trip
+            to_half = (brk == BRK_OPEN) & (
+                tick - since >= params["dg_cooldown_ticks"]
+            )
+            half_trip = (brk == BRK_HALF) & trip
+            to_closed = (
+                (brk == BRK_HALF)
+                & (delay <= params["dg_close_below"])
+                & ~failed
+            )
+            brk = jnp.where(
+                open_now | half_trip,
+                BRK_OPEN,
+                jnp.where(to_half, BRK_HALF, jnp.where(to_closed, 0, brk)),
+            )
+            since = jnp.where(open_now | half_trip | to_half, tick, since)
+            opens = opens + jnp.sum(  # reprolint: ok[RPL001] int64 counter, exact in any order
+                (open_now | half_trip).astype(jnp.int64)
+            )
+            brk_scale = jnp.where(
+                brk == BRK_OPEN,
+                0.0,
+                jnp.where(brk == BRK_HALF, params["dg_probe"], 1.0),
+            )
+        else:
+            brk_scale = jnp.ones(B.shape[0])
+        # retry-ring release + SLO-tiered admission on fleet totals
+        ring = carry["dg_ring"]
+        shed_by_tier = carry["dg_shed_by_tier"]
+        retried = carry["dg_retried"]
+        dropped = carry["dg_retry_dropped"]
+        shed_row = jnp.zeros(ring.shape[1])
+        retried_d = jnp.float64(0.0)
+        dropped_d = jnp.float64(0.0)
+        if dims.dg_admission:
+            slot = jnp.mod(tick, dims.dg_ring_slots)
+            released = ring[slot]  # (tiers, attempts)
+            ring = ring.at[slot].set(0.0)
+            cap_total = jnp.sum(cap_rt * brk_scale)  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
+            queued_total = jnp.sum(B)  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
+            est_delay = queued_total / jnp.maximum(cap_total, 1e-12)
+            dticks = x["dg_dticks"]  # (attempts,) int64 backoff delays
+            shares = params["dg_shares"]
+            budgets = params["dg_budgets"]
+            # tier split of the fresh trace load: the last tier takes
+            # the exact remainder (DegradePolicy share semantics)
+            fresh_k = []
+            acc = jnp.float64(0.0)
+            for k in range(dims.dg_tiers - 1):
+                f_k = shares[k] * fresh
+                fresh_k.append(f_k)
+                acc = acc + f_k
+            fresh_k.append(fresh - acc)
+            admit_total = jnp.float64(0.0)
+            adm_list = []  # per-tier admitted rps, for the host-side
+            # tier-split reconstruction of sub-requests (mirrors the
+            # fractions DegradeDriver.pre_route hands to _tier_requests)
+            for k in range(dims.dg_tiers):
+                rel_mass = released[k]  # (attempts,)
+                rel_rps = jnp.sum(rel_mass) / dt  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
+                ok = (est_delay <= budgets[k]) & (cap_total > 1e-12)
+                adm_k = jnp.where(ok, fresh_k[k] + rel_rps, 0.0)
+                adm_list.append(adm_k)
+                admit_total = admit_total + adm_k
+                shed_fresh = jnp.where(ok, 0.0, fresh_k[k] * dt)
+                shed_row = shed_row.at[k].set(
+                    shed_fresh + jnp.where(ok, 0.0, jnp.sum(rel_mass))  # reprolint: ok[RPL001] jax tolerance-parity: XLA reduction order is unpinned by design here
+                )
+                # fresh shed enters the retry ring at attempt 0
+                if dims.dg_attempts > 1:
+                    s0 = jnp.mod(tick + dticks[0], dims.dg_ring_slots)
+                    ring = ring.at[s0, k, 1].add(shed_fresh)
+                    retried_d = retried_d + shed_fresh
+                else:
+                    dropped_d = dropped_d + shed_fresh
+                # re-shed released mass moves to the next attempt (or
+                # out of budget)
+                for a in range(1, dims.dg_attempts):
+                    m = jnp.where(ok, 0.0, rel_mass[a])
+                    if a + 1 >= dims.dg_attempts:
+                        dropped_d = dropped_d + m
+                    else:
+                        sa = jnp.mod(tick + dticks[a], dims.dg_ring_slots)
+                        ring = ring.at[sa, k, a + 1].add(m)
+                        retried_d = retried_d + m
+            shed_by_tier = shed_by_tier + shed_row
+            retried = retried + retried_d
+            dropped = dropped + dropped_d
+            total = admit_total + respill_rps
+        if dims.dg_breaker_on:
+            cap_rt = cap_rt * brk_scale
+            brk_alive = brk != BRK_OPEN
+            alive = brk_alive if alive is None else alive & brk_alive
     assign = _route(params, B, total, dt, cap_rt, alive)
     work = assign * dt
     rate = work / dt
@@ -426,6 +581,10 @@ def _step(
             disp = S + E_new
         else:
             disp = S
+        # deadline-expired mass leaves the queue the same way (the
+        # scalar queue is physically popped by expire())
+        if dims.degrade_on and dims.dg_lag > 0:
+            disp = disp + D_new
         head = jax.vmap(
             lambda row, key: jnp.searchsorted(row, key, side="right")
         )(A_buf, disp + _cum_tol(disp))
@@ -537,6 +696,26 @@ def _step(
         new_carry["ptr"] = keep(new_ptr, carry["ptr"])
     if dims.chaos_on:
         new_carry["E"] = keep(E_new, carry["E"])
+    if dims.degrade_on:
+        new_carry["dg_tick"] = keep(tick + 1, tick)
+        new_carry["dg_brk"] = keep(brk, carry["dg_brk"])
+        new_carry["dg_since"] = keep(since, carry["dg_since"])
+        new_carry["dg_last_live"] = keep(last_live, carry["dg_last_live"])
+        new_carry["dg_opens"] = keep(opens, carry["dg_opens"])
+        new_carry["dg_ring"] = keep(ring, carry["dg_ring"])
+        new_carry["dg_shed_by_tier"] = keep(
+            shed_by_tier, carry["dg_shed_by_tier"]
+        )
+        new_carry["dg_retried"] = keep(retried, carry["dg_retried"])
+        new_carry["dg_retry_dropped"] = keep(
+            dropped, carry["dg_retry_dropped"]
+        )
+        new_carry["dg_D"] = keep(D_new, carry["dg_D"])
+        if dims.dg_lag > 0:
+            # the consumed slot is overwritten with this tick's routed
+            # work — it will be the lagged prefix again in L ticks
+            new_carry["dg_A_lag"] = keep(A_lag, carry["dg_A_lag"])
+            new_carry["dg_W"] = keep(W.at[slotL].set(work), carry["dg_W"])
     ys: Dict[str, Any] = {
         "assign": assign,
         "rate": rate,
@@ -558,6 +737,24 @@ def _step(
         ys["thr"] = thr_t
     if dims.chaos_on:
         ys["evac"] = evac
+    if dims.degrade_on:
+        # the routed (admitted) fleet total — what the host drivers
+        # append to their offered series
+        ys["dg_admitted"] = total
+        ys["dg_shed"] = shed_row
+        if dims.dg_admission:
+            # per-tier admitted rps + untiered respill rps: the host
+            # side rebuilds _tier_requests-compatible split fractions
+            # from these so sub-request reconstruction (responses,
+            # queued counts, void/expiry counts, tier latency tags)
+            # matches the host engines' tiered submissions
+            ys["dg_adm"] = jnp.stack(adm_list)
+            ys["dg_respill"] = respill_rps
+        ys["dg_expired"] = expired
+        ys["dg_brk"] = brk
+        ys["dg_ring_mass"] = jnp.sum(ring)  # reprolint: ok[RPL001] jax tolerance-parity: drain-idle sentinel only, compared against exact 0
+        ys["dg_retried"] = retried_d
+        ys["dg_retry_dropped"] = dropped_d
     if dims.emit_obs:
         ys["opp"] = opp_eff
         ys["w_req"] = w_req
@@ -666,6 +863,7 @@ def _make_dims(
     hedge_on: bool,
     emit_obs: bool = False,
     chaos_on: bool = False,
+    degrade: Optional[Any] = None,
 ) -> _Dims:
     th = arr.thermal
     return _Dims(
@@ -677,6 +875,20 @@ def _make_dims(
         hedge_on=hedge_on,
         emit_obs=emit_obs,
         chaos_on=chaos_on,
+        degrade_on=degrade is not None,
+        dg_admission=degrade is not None and degrade.admission_on,
+        dg_breaker_on=degrade is not None and degrade.breaker_on,
+        dg_use_chaos=(
+            degrade is not None
+            and degrade.breaker_on
+            and degrade.policy.breaker.use_chaos_signal
+        ),
+        dg_tiers=0 if degrade is None else int(degrade.n_tiers),
+        dg_attempts=(
+            1 if degrade is None else int(degrade.retry.max_attempts)
+        ),
+        dg_ring_slots=1 if degrade is None else int(degrade.ring_slots),
+        dg_lag=0 if degrade is None else int(degrade.deadline_lag),
     )
 
 
@@ -718,28 +930,86 @@ def _host_rows(ys: Any, n: int) -> Dict[str, np.ndarray]:
 # host-side request reconstruction (completions / latencies / queue depth)
 
 
-def _completions(
-    work_col: np.ndarray, s_col: np.ndarray
+def _expand_submissions(
+    work_col: np.ndarray, split_rows: np.ndarray
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Per-rack submission ticks, cumulative-cost tails, and completion
-    ticks. Submission ``k`` (one fluid request per work-carrying tick)
-    completes at the first tick whose cumulative effective served ``S``
-    reaches its cumulative cost tail, minus the cumulative-axis
-    forgiveness (``_cum_tol`` — the pop rule of ``QueueWorkload``,
-    widened to relative because ``a`` and ``s_col`` are different float
-    summation orders of the same history). A completion index of
-    ``len(s_col)`` means "still queued"."""
-    a = np.cumsum(work_col)  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum replays the device carry's sequential adds
-    sub = np.nonzero(work_col > 0.0)[0]
-    a_sub = a[sub]
+    """Expand each work-carrying tick into per-tier sub-submissions,
+    mirroring ``fleet._tier_requests`` exactly: slice existence is
+    decided by ``frac > 0`` alone, non-last slices cost ``work * frac``
+    and the last positive-fraction slice takes the exact remainder (the
+    trailing column is the untiered chaos respill, tier index ``-1``
+    → tier count). Returns (submission ticks, costs, tier indices)."""
+    ticks: List[int] = []
+    costs: List[float] = []
+    tiers: List[int] = []
+    for i in np.nonzero(work_col > 0.0)[0]:
+        w = float(work_col[i])
+        row = split_rows[i]
+        idx = np.nonzero(row > 0.0)[0]
+        if len(idx) == 0:
+            # no split recorded for a work-carrying tick (should not
+            # happen: routed work implies admitted flow) — keep the
+            # mass as one untiered submission rather than drop it
+            ticks.append(int(i))
+            costs.append(w)
+            tiers.append(len(row) - 1)
+            continue
+        acc = 0.0
+        for k in idx[:-1]:
+            c = w * float(row[k])
+            ticks.append(int(i))
+            costs.append(c)
+            tiers.append(int(k))
+            acc += c
+        c = w - acc
+        if c > 0.0:
+            ticks.append(int(i))
+            costs.append(c)
+            tiers.append(int(idx[-1]))
+    return (
+        np.asarray(ticks, np.int64),
+        np.asarray(costs),
+        np.asarray(tiers, np.int64),
+    )
+
+
+def _completions(
+    work_col: np.ndarray,
+    s_col: np.ndarray,
+    split_rows: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Optional[np.ndarray]]:
+    """Per-rack submission ticks, cumulative-cost tails, completion
+    ticks, and (when tiered) tier indices. Without ``split_rows`` one
+    fluid request is reconstructed per work-carrying tick; with it,
+    each tick expands into the same per-tier sub-requests the host
+    engines submit via ``_tier_requests``, so response / queued / void
+    *counts* match the hosts. Submission ``k`` completes at the first
+    tick whose cumulative effective served ``S`` reaches its cumulative
+    cost tail, minus the cumulative-axis forgiveness (``_cum_tol`` —
+    the pop rule of ``QueueWorkload``, widened to relative because
+    ``a`` and ``s_col`` are different float summation orders of the
+    same history). A completion index of ``len(s_col)`` means "still
+    queued"."""
+    if split_rows is None:
+        a = np.cumsum(work_col)  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum replays the device carry's sequential adds
+        sub = np.nonzero(work_col > 0.0)[0]
+        a_sub = a[sub]
+        tiers = None
+    else:
+        sub, costs, tiers = _expand_submissions(work_col, split_rows)
+        a_sub = np.cumsum(costs)  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum replays the device carry's sequential adds
     j = np.searchsorted(s_col, a_sub - _cum_tol(a_sub), side="left")
-    return sub, a_sub, j
+    return sub, a_sub, j, tiers
 
 
-def _queued_for_rack(work_col: np.ndarray, s_col: np.ndarray) -> np.ndarray:
+def _queued_for_rack(
+    work_col: np.ndarray,
+    s_col: np.ndarray,
+    split_rows: Optional[np.ndarray] = None,
+) -> np.ndarray:
     """End-of-tick queued request count per tick (len(queue) twin)."""
     t_all = len(work_col)
-    sub, _, j = _completions(work_col, s_col)
+    sub, _, j, _ = _completions(work_col, s_col, split_rows)
     diff = np.zeros(t_all + 1, np.int64)
     np.add.at(diff, sub, 1)
     np.add.at(diff, np.minimum(j, t_all), -1)
@@ -755,39 +1025,61 @@ def _responses_for_rack(
     perf_col: np.ndarray,
     unit_rate: float,
     evac_col: Optional[np.ndarray] = None,
+    split_rows: Optional[np.ndarray] = None,
+    payloads: Optional[List[Optional[str]]] = None,
 ) -> List[Response]:
     """Rebuild the rack's :class:`Response` list from emitted rows,
-    with ``QueueWorkload.step_fast``'s finish-time arithmetic.
+    with ``QueueWorkload.step_fast``'s finish-time arithmetic. With
+    ``split_rows``/``payloads`` (tiered admission active) each tick
+    expands into the hosts' per-tier sub-requests and every Response
+    carries its tier name as ``output`` — the same tagging the host
+    engines get from ``QueueWorkload`` echoing ``Request.payload`` —
+    so :func:`repro.fleet.degrade.tier_latency_percentiles` works on
+    jax telemetry within the engine's documented tolerances.
 
-    ``evac_col`` (chaos) is the per-tick cost evacuated by full-rack
-    kills: the dispatched axis becomes ``S + cumsum(evac)`` — a kill
-    edge flushes the whole pending queue in one jump — and any request
-    whose crossing tick carries an evacuation was *voided*, not served
-    (``QueueWorkload.evacuate`` emits no Response), so it is skipped.
-    A killed rack serves exactly zero that tick (its unit cap is 0),
-    so a crossing at an evacuation tick is always a void."""
+    ``evac_col`` is the per-tick cost *voided* without being served:
+    chaos evacuations (the whole pending queue flushed by a kill edge)
+    plus deadline expiries (``QueueWorkload.expire``). The dispatched
+    axis becomes ``S + cumsum(void)``, and a request whose cumulative
+    tail lands inside its crossing tick's void jump emits no Response.
+    Voiding happens *before* serving within a tick (kill edges and
+    expiry both run pre-routing), so the in-tick order of the jump vs
+    the served mass is void-first — a request past the jump at an
+    expiry tick genuinely completed (unlike a kill tick, where the
+    rack's unit cap is 0 and nothing serves)."""
     if evac_col is not None:
         s_col = s_col + np.cumsum(evac_col)  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum replays the device carry's sequential adds
-    sub, a_sub, j = _completions(work_col, s_col)
+    sub, a_sub, j, tiers = _completions(work_col, s_col, split_rows)
     t_all = len(ts)
     done: List[Tuple[int, int, Response]] = []
     for k in range(len(sub)):
         jj = int(j[k])
         if jj >= t_all:
             continue  # never completed (undrained overload)
-        if evac_col is not None and evac_col[jj] > 0.0:
-            continue  # voided by evacuation, not served
+        s_prev = float(s_col[jj - 1]) if jj > 0 else 0.0
+        void_j = float(evac_col[jj]) if evac_col is not None else 0.0
+        a_k = float(a_sub[k])
+        if void_j > 0.0 and a_k - _cum_tol(a_k) <= s_prev + void_j:
+            continue  # voided (evacuated or expired), not served
+        # the void jump consumes no serving capacity: the mass served
+        # *into* this request excludes it
+        s_prev += void_j
         arrival = float(ts[sub[k]]) + 0.5 * dt
         cap_j = float(cap_col[jj])
-        s_prev = float(s_col[jj - 1]) if jj > 0 else 0.0
         if cap_j > 0.0:
-            frac = min(float(a_sub[k]) - s_prev, cap_j) / cap_j
+            frac = min(a_k - s_prev, cap_j) / cap_j
         else:
             frac = 1.0
         service_s = 1.0 / (unit_rate * max(float(perf_col[jj]), 1e-9))
         finish = max(float(ts[jj]) + frac * dt, arrival + service_s)
+        out = None
+        if tiers is not None and payloads is not None:
+            tk = int(tiers[k])
+            if 0 <= tk < len(payloads):
+                out = payloads[tk]
         done.append(
-            (jj, k, Response(rid=k, arrival_s=arrival, finish_s=finish))
+            (jj, k,
+             Response(rid=k, arrival_s=arrival, finish_s=finish, output=out))
         )
     done.sort(key=lambda it: (it[0], it[1]))  # completion order, FIFO in-tick
     return [resp for _, _, resp in done]
@@ -894,6 +1186,8 @@ class _JaxFleetEngine:
         self.chaos_dropped_cost = 0.0
         self.chaos_respilled = 0
         self.chaos_respilled_cost = 0.0
+        # degrade surface (inert until Fleet calls set_degrade)
+        self._degrade: Optional[Any] = None
         # cumulative per-tick emitted history (for telemetry rebuilds)
         self._t_hist: List[float] = []
         self._hist: Dict[str, List[np.ndarray]] = {}
@@ -907,6 +1201,45 @@ class _JaxFleetEngine:
         compiled program serves every schedule."""
         self._chaos = lowered if lowered.any_events() else None
         self.chaos_on_kill = lowered.on_kill
+
+    def set_degrade(self, lowered: Any) -> None:
+        """Wire a :class:`~repro.fleet.degrade.LoweredDegrade` plan.
+
+        Called by ``Fleet.__init__``. The control plane runs in-scan;
+        the host keeps carry mirrors plus the same cumulative counter
+        attributes :class:`~repro.fleet.degrade.DegradeDriver` exposes,
+        so ``Fleet._build_telemetry`` reads either source unchanged.
+        The scan routes the admitted fleet total; per-tier request
+        shape is recovered host-side from the emitted ``dg_adm`` /
+        ``dg_respill`` rows (see :meth:`_tier_split_rows`), so
+        responses carry tier payloads and sub-request counts match the
+        host engines within the documented tolerances."""
+        self._degrade = lowered
+        n = self.n_racks
+        nt = max(lowered.n_tiers, 1)
+        self._dg_ring = np.zeros(
+            (lowered.ring_slots, nt, lowered.retry.max_attempts))
+        self._dg_brk = np.zeros(n, np.int64)
+        self._dg_since = np.zeros(n, np.int64)
+        self._dg_last_live = np.full(n, -1, np.int64)
+        self._dg_opens = np.int64(0)
+        self._dg_shed_by_tier = np.zeros(nt)
+        self._dg_retried = np.float64(0.0)
+        self._dg_retry_dropped = np.float64(0.0)
+        self._dg_W = np.zeros((max(lowered.deadline_lag, 1), n))
+        self._dg_A_lag = np.zeros(n)
+        self._dg_D = np.zeros(n)
+        # telemetry mirrors (recomputed from history after every play)
+        self.shed_by_tier = np.zeros(nt)
+        self.shed_cost = 0.0
+        self.shed_cost_t = np.zeros(0)
+        self.retried_cost = 0.0
+        self.retry_dropped_cost = 0.0
+        self.breaker_opens = 0
+        self.breaker_state_t = np.zeros((0, n), np.int64)
+        self.degrade_expired = 0
+        self.degrade_expired_cost = 0.0
+        self.degrade_expired_by_rack = np.zeros(n)
 
     # -- sanitizer / Fleet.view surface ---------------------------------
     def queued_cost(self) -> np.ndarray:
@@ -942,6 +1275,20 @@ class _JaxFleetEngine:
             c["ptr"] = np.int64(self._ptr)
         if self._chaos is not None:
             c["E"] = self._E
+        if self._degrade is not None:
+            c["dg_tick"] = np.int64(len(self._t_hist))
+            c["dg_brk"] = self._dg_brk
+            c["dg_since"] = self._dg_since
+            c["dg_last_live"] = self._dg_last_live
+            c["dg_opens"] = self._dg_opens
+            c["dg_ring"] = self._dg_ring
+            c["dg_shed_by_tier"] = self._dg_shed_by_tier
+            c["dg_retried"] = self._dg_retried
+            c["dg_retry_dropped"] = self._dg_retry_dropped
+            c["dg_D"] = self._dg_D
+            if self._degrade.deadline_lag > 0:
+                c["dg_A_lag"] = self._dg_A_lag
+                c["dg_W"] = self._dg_W
         return c
 
     def _full(self, key: str) -> np.ndarray:
@@ -975,17 +1322,32 @@ class _JaxFleetEngine:
             self._arr_buf = np.concatenate([self._arr_buf, pad.copy()], axis=1)
         hedge_on = self._hedge_any and self._A_buf.shape[1] > 0
         chaos = self._chaos
+        degrade = self._degrade
         dims = _make_dims(
             self.arrays, dt, hedge_on,
             emit_obs=self.obs is not None,
             chaos_on=chaos is not None,
+            degrade=degrade,
         )
         params = self._params
-        if chaos is not None:
+        if chaos is not None or degrade is not None:
             params = dict(params)
+        if chaos is not None:
             params["chaos_respill"] = np.float64(
                 1.0 if self.chaos_on_kill == "respill" else 0.0
             )
+        if degrade is not None:
+            params["dg_shares"] = degrade.shares
+            params["dg_budgets"] = degrade.budgets
+            brk_cfg = degrade.policy.breaker
+            if brk_cfg is not None:
+                params["dg_open_after"] = np.float64(brk_cfg.open_after_s)
+                params["dg_close_below"] = np.float64(brk_cfg.close_below_s)
+                params["dg_probe"] = np.float64(brk_cfg.probe_fraction)
+                params["dg_cooldown_ticks"] = np.int64(
+                    degrade.cooldown_ticks)
+                params["dg_fail_timeout_ticks"] = np.int64(
+                    degrade.fail_timeout_ticks)
 
         def chaos_xs(t0: float) -> Dict[str, np.ndarray]:
             """Per-tick mask rows for one block starting at ``t0``.
@@ -1001,8 +1363,19 @@ class _JaxFleetEngine:
                 "chaos_kill": rows["kill_edge"],
             }
 
+        dg_xs_on = degrade is not None and degrade.admission_on
+
+        def degrade_xs(tick0: int) -> Dict[str, np.ndarray]:
+            """Retry-delay rows for one block starting at global tick
+            ``tick0`` — resamplable like ``chaos_xs`` (row k depends
+            only on the absolute tick index, so the drain rewind can
+            reuse the block verbatim)."""
+            assert degrade is not None
+            return {"dg_dticks": degrade.retry_rows(tick0, _BLOCK)}
+
         carry = self._carry(hedge_on)
         cur_t = self.now
+        tick_base = len(self._t_hist)
         zeros = np.zeros(_BLOCK)
         falses = np.zeros(_BLOCK, bool)
         kept: List[Dict[str, np.ndarray]] = []
@@ -1016,14 +1389,29 @@ class _JaxFleetEngine:
             xs = {"rps": rps, "live": live, "is_trace": live}
             if chaos is not None:
                 xs.update(chaos_xs(cur_t))
+            if dg_xs_on:
+                xs.update(degrade_xs(tick_base + pos))
             carry, ys = _RUN(params, carry, xs, dims=dims)
             kept.append(_host_rows(ys, blk))
             pos += blk
             cur_t += blk * dt
+
+        def ring_idle(rows: Dict[str, np.ndarray]) -> np.ndarray:
+            """Per-tick 'retry ring is empty' mask (all-true without
+            degrade) — a drain tick only starts idle when no shed mass
+            is still waiting for its backoff slot."""
+            if degrade is None:
+                return np.ones(len(rows["empty"]), bool)
+            return np.asarray(rows["dg_ring_mass"]) <= 0.0
+
         if kept:
-            all_empty = bool(kept[-1]["empty"][-1].all())
+            all_empty = bool(
+                kept[-1]["empty"][-1].all() and ring_idle(kept[-1])[-1]
+            )
         else:
-            all_empty = bool(np.all(self._B <= 0.0))
+            all_empty = bool(np.all(self._B <= 0.0)) and (
+                degrade is None or float(self._dg_ring.sum()) <= 0.0  # reprolint: ok[RPL001] zero-test only: sum()<=0 iff all nonnegative ring slots are 0, order-free
+            )
         drained: Optional[bool]
         if drain:
             # keep ticking until the first tick that starts fully idle
@@ -1043,10 +1431,13 @@ class _JaxFleetEngine:
                     # live prefix, so the rows must be reused verbatim
                     xs_chaos = chaos_xs(cur_t)
                     xs.update(xs_chaos)
+                if dg_xs_on:
+                    xs_dg = degrade_xs(tick_base + t_len + done)
+                    xs.update(xs_dg)
                 carry0 = carry
                 carry, ys = _RUN(params, carry0, xs, dims=dims)
                 rows = _host_rows(ys, blk)
-                allm = rows["empty"].all(axis=1)
+                allm = rows["empty"].all(axis=1) & ring_idle(rows)
                 start_idle = np.concatenate(([all_empty], allm[:-1]))
                 idle = np.nonzero(start_idle)[0]
                 if len(idle):
@@ -1056,6 +1447,8 @@ class _JaxFleetEngine:
                     xs2 = {"rps": zeros, "live": live2, "is_trace": falses}
                     if chaos is not None:
                         xs2.update(xs_chaos)
+                    if dg_xs_on:
+                        xs2.update(xs_dg)
                     carry, _ = _RUN(params, carry0, xs2, dims=dims)
                     kept.append({k: v[: stop + 1] for k, v in rows.items()})
                     found = True
@@ -1070,7 +1463,9 @@ class _JaxFleetEngine:
         else:
             last = kept[-1]
             drained = bool(
-                last["empty"][-1].all() and not (last["used"][-1] > 0.0).any()
+                last["empty"][-1].all()
+                and not (last["used"][-1] > 0.0).any()
+                and ring_idle(last)[-1]
             )
         # pull the final carry back into host state
         fin = jax.device_get(carry)
@@ -1097,6 +1492,19 @@ class _JaxFleetEngine:
             self._ptr = int(fin["ptr"])
         if chaos is not None:
             self._E = np.asarray(fin["E"])
+        if degrade is not None:
+            self._dg_brk = np.asarray(fin["dg_brk"])
+            self._dg_since = np.asarray(fin["dg_since"])
+            self._dg_last_live = np.asarray(fin["dg_last_live"])
+            self._dg_opens = np.int64(fin["dg_opens"])
+            self._dg_ring = np.asarray(fin["dg_ring"])
+            self._dg_shed_by_tier = np.asarray(fin["dg_shed_by_tier"])
+            self._dg_retried = np.float64(fin["dg_retried"])
+            self._dg_retry_dropped = np.float64(fin["dg_retry_dropped"])
+            self._dg_D = np.asarray(fin["dg_D"])
+            if degrade.deadline_lag > 0:
+                self._dg_A_lag = np.asarray(fin["dg_A_lag"])
+                self._dg_W = np.asarray(fin["dg_W"])
         # append this call's rows to the cumulative history
         if kept:
             rows_all = {k: np.concatenate([r[k] for r in kept]) for k in kept[0]}
@@ -1115,13 +1523,36 @@ class _JaxFleetEngine:
         # like QueueWorkload.evacuate clearing the scalar queue
         work_all = self._full("work")
         s_all = self._full("S")
-        if chaos is not None and "evac" in self._hist:
-            evac_all = self._full("evac")
-            s_all = s_all + np.cumsum(evac_all, axis=0)  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum replays the device carry's sequential adds
-            self._update_chaos_counters(work_all, s_all, evac_all)
+        # the dispatched axis adds every kind of voided mass: chaos
+        # evacuations and deadline expiries both clear queued cost
+        # without serving it (a kill edge zeroes B before expiry runs,
+        # so the two are never nonzero on the same (tick, rack))
+        evac_all = (
+            self._full("evac")
+            if chaos is not None and "evac" in self._hist
+            else None
+        )
+        exp_all = (
+            self._full("dg_expired")
+            if degrade is not None and "dg_expired" in self._hist
+            else None
+        )
+        void_all = None
+        if evac_all is not None or exp_all is not None:
+            void_all = np.zeros_like(work_all)
+            if evac_all is not None:
+                void_all = void_all + evac_all
+            if exp_all is not None:
+                void_all = void_all + exp_all
+            s_all = s_all + np.cumsum(void_all, axis=0)  # reprolint: ok[RPL001] jax tolerance-parity: prefix cumsum replays the device carry's sequential adds
+        split_rows = self._tier_split_rows()
+        if evac_all is not None:
+            self._update_chaos_counters(work_all, s_all, evac_all, split_rows)
+        if degrade is not None:
+            self._update_degrade_counters(work_all, s_all, exp_all, split_rows)
         queued_rows = np.zeros((n_rows, n), np.int64)
         for r in range(n):
-            q = _queued_for_rack(work_all[:, r], s_all[:, r])
+            q = _queued_for_rack(work_all[:, r], s_all[:, r], split_rows)
             if n_rows:
                 queued_rows[:, r] = q[-n_rows:]
         assigned = (
@@ -1142,6 +1573,7 @@ class _JaxFleetEngine:
         work_all: np.ndarray,
         s_eff_all: np.ndarray,
         evac_all: np.ndarray,
+        split_rows: Optional[np.ndarray] = None,
     ) -> None:
         """Recompute the cumulative drop/respill accounting from the
         full emitted history (idempotent across ``play`` calls).
@@ -1150,7 +1582,9 @@ class _JaxFleetEngine:
         the same host reconstruction that builds Response lists — a
         submission whose crossing tick carries an evacuation was voided
         by the kill, and ``on_kill`` decides which bucket it lands in.
-        ``s_eff_all`` must already include the evacuation cumsum."""
+        ``s_eff_all`` must already include the evacuation cumsum.
+        ``split_rows`` (tiered admission) expands ticks into the hosts'
+        per-tier sub-requests so voided *counts* match."""
         self.chaos_evac_by_rack = evac_all.sum(axis=0)  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
         self.chaos_evac_cost = float(self.chaos_evac_by_rack.sum())  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
         t_all = evac_all.shape[0]
@@ -1159,7 +1593,8 @@ class _JaxFleetEngine:
             ecol = evac_all[:, r]
             if not ecol.any():
                 continue
-            _, _, j = _completions(work_all[:, r], s_eff_all[:, r])
+            _, _, j, _ = _completions(work_all[:, r], s_eff_all[:, r],
+                                      split_rows)
             jv = np.clip(j, 0, t_all - 1)
             n_voided += int(np.count_nonzero((j < t_all) & (ecol[jv] > 0.0)))
         if self.chaos_on_kill == "respill":
@@ -1172,6 +1607,89 @@ class _JaxFleetEngine:
             self.chaos_dropped_cost = self.chaos_evac_cost
             self.chaos_respilled = 0
             self.chaos_respilled_cost = 0.0
+
+    def _update_degrade_counters(
+        self,
+        work_all: np.ndarray,
+        s_eff_all: np.ndarray,
+        exp_all: Optional[np.ndarray],
+        split_rows: Optional[np.ndarray] = None,
+    ) -> None:
+        """Recompute the cumulative degradation accounting from the
+        full emitted history (idempotent across ``play`` calls), under
+        the same attribute names :class:`DegradeDriver` exposes.
+
+        Expired request *counts* come from the host reconstruction: a
+        submission whose crossing tick carries an expiry, with its
+        cumulative tail inside that tick's voided jump, was abandoned
+        past deadline rather than served. ``s_eff_all`` must already
+        include every void cumsum (evacuations + expiries)."""
+        if "dg_shed" in self._hist:
+            shed = np.concatenate(self._hist["dg_shed"], axis=0)
+            self.shed_by_tier = shed.sum(axis=0)  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
+            self.shed_cost_t = shed.sum(axis=1)  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
+            self.shed_cost = float(self.shed_by_tier.sum())  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
+        if "dg_retried" in self._hist:
+            self.retried_cost = float(
+                np.sum(np.concatenate(self._hist["dg_retried"]))  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
+            )
+            self.retry_dropped_cost = float(
+                np.sum(np.concatenate(self._hist["dg_retry_dropped"]))  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
+            )
+        if "dg_brk" in self._hist:
+            brk = np.concatenate(self._hist["dg_brk"], axis=0)
+            self.breaker_state_t = brk.astype(np.int64)
+            prev = np.vstack(
+                [np.zeros((1, brk.shape[1]), np.int64), brk[:-1]]
+            )
+            self.breaker_opens = int(
+                ((brk == BRK_OPEN) & (prev != BRK_OPEN)).sum()  # reprolint: ok[RPL001] bool edge count, exact in any order
+            )
+        if exp_all is None:
+            return
+        self.degrade_expired_by_rack = exp_all.sum(axis=0)  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
+        self.degrade_expired_cost = float(self.degrade_expired_by_rack.sum())  # reprolint: ok[RPL001] jax tolerance-parity: post-hoc roll-up of finished host rows
+        t_all = exp_all.shape[0]
+        n_expired = 0
+        for r in range(self.n_racks):
+            ecol = exp_all[:, r]
+            if not ecol.any():
+                continue
+            s_col = s_eff_all[:, r]
+            _, a_sub, j, _ = _completions(work_all[:, r], s_col, split_rows)
+            for k in range(len(a_sub)):
+                jj = int(j[k])
+                if jj >= t_all or ecol[jj] <= 0.0:
+                    continue
+                s_prev = float(s_col[jj - 1]) if jj > 0 else 0.0
+                a_k = float(a_sub[k])
+                if a_k - _cum_tol(a_k) <= s_prev + float(ecol[jj]):
+                    n_expired += 1
+        self.degrade_expired = n_expired
+
+    def _tier_split_rows(self) -> Optional[np.ndarray]:
+        """Per-tick tier fractions of the routed total, shape
+        ``(T, n_tiers + 1)`` (last column = untiered chaos respill) —
+        the host-side mirror of the ``frac`` vector
+        :meth:`DegradeDriver.pre_route` hands to ``_tier_requests``:
+        ``frac[k] = admitted_k / total``, ``frac[-1] = respill / total``.
+        ``None`` when tiered admission is off (reconstruction then
+        keeps its one-request-per-tick fluid shape)."""
+        if self._degrade is None or "dg_adm" not in self._hist:
+            return None
+        adm = self._full("dg_adm")  # (T, n_tiers)
+        respill = self._full("dg_respill")  # (T,)
+        total = self._full("dg_admitted")  # (T,)
+        rows = np.zeros((adm.shape[0], adm.shape[1] + 1))
+        flow = total > 0.0
+        rows[flow, :-1] = adm[flow] / total[flow, None]
+        rows[flow, -1] = respill[flow] / total[flow]
+        return rows
+
+    def _tier_payloads(self) -> List[Optional[str]]:
+        """Tier payload names + trailing ``None`` for the untiered
+        respill column — same list ``Fleet`` hands the host engines."""
+        return [t.name for t in self._degrade.tiers] + [None]
 
     # -------------------------------------------------------------------
     def per_rack_telemetry(self) -> List[Telemetry]:
@@ -1199,6 +1717,13 @@ class _JaxFleetEngine:
             if self._chaos is not None and "evac" in self._hist
             else None
         )
+        # deadline-expired mass voids requests the same way (see
+        # _responses_for_rack's evac_col contract)
+        if self._degrade is not None and "dg_expired" in self._hist:
+            exp = self._full("dg_expired")
+            evac = exp if evac is None else evac + exp
+        split_rows = self._tier_split_rows()
+        payloads = self._tier_payloads() if split_rows is not None else None
         arr = self.arrays
         out: List[Telemetry] = []
         for r in range(self.n_racks):
@@ -1211,6 +1736,8 @@ class _JaxFleetEngine:
                 perf[:, r],
                 float(arr.unit_rate[r]),
                 evac_col=None if evac is None else evac[:, r],
+                split_rows=split_rows,
+                payloads=payloads,
             )
             p50, p99 = latency_percentiles(responses)
             j = col_of.get(r)

@@ -61,6 +61,31 @@ class FleetView:
     def n_racks(self) -> int:
         return len(self.capacity_rps)
 
+    def scaled(self, capacity_scale: np.ndarray) -> "FleetView":
+        """This view with per-rack capacity multipliers applied — how
+        the degradation layer's circuit breakers reshape routing. An
+        open breaker (scale 0.0) zeroes the rack's advertised capacity
+        and clears ``alive`` (so capacity-oblivious round-robin also
+        stops sending); a half-open breaker advertises its probe
+        fraction, which capacity-aware routers honor proportionally.
+        ``scale == 1`` everywhere returns the arrays unchanged
+        bitwise (multiplying by 1.0 is an IEEE identity)."""
+        scale = np.asarray(capacity_scale, float)
+        alive = self.alive
+        if (scale == 0.0).any():  # reprolint: ok[RPL005] exact-zero sentinel, not a float tie: an open breaker's scale is the literal 0.0 on every backend, never a computed near-zero
+            base = alive if alive is not None else np.ones(self.n_racks, bool)
+            alive = base & (scale > 0.0)
+        return FleetView(
+            t=self.t,
+            dt_s=self.dt_s,
+            capacity_rps=self.capacity_rps * scale,
+            queued_cost=self.queued_cost,
+            active_units=self.active_units,
+            n_units=self.n_units,
+            full_load_j_per_req=self.full_load_j_per_req,
+            alive=alive,
+        )
+
 
 @runtime_checkable
 class Router(Protocol):

@@ -76,6 +76,22 @@ class FleetTelemetry:
     respilled_requests: int = 0
     respilled_cost: float = 0.0
     recovery: Optional["RecoveryReport"] = None
+    # graceful degradation (filled by Fleet when a DegradePolicy is
+    # wired; defaults otherwise). Conservation with degradation on:
+    # injected = served + queued + expired + retry_dropped + dropped.
+    degrade_on: bool = False
+    shed_cost: float = 0.0  # total mass shed at the admission door
+    shed_by_tier: Dict[str, float] = field(default_factory=dict)
+    shed_cost_t: np.ndarray = field(  # (ticks,) per-tick shed mass
+        default_factory=lambda: np.zeros(0))
+    expired_requests: int = 0  # queued work abandoned past deadline
+    expired_cost: float = 0.0
+    retried_cost: float = 0.0  # shed mass re-submitted after backoff
+    retry_dropped_cost: float = 0.0  # retry budget exhausted
+    breaker_opens: int = 0
+    breaker_state_t: np.ndarray = field(  # (racks, ticks) int state codes
+        default_factory=lambda: np.zeros((0, 0), np.int64))
+    breaker_events: List[Dict[str, Any]] = field(default_factory=list)
 
     # ----- derived ---------------------------------------------------------
     @property
@@ -182,4 +198,12 @@ class FleetTelemetry:
                     if rec.reconvergence_ticks is not None
                     else -1.0
                 )
+        if self.degrade_on:
+            out["shed_cost"] = self.shed_cost
+            out["expired_cost"] = self.expired_cost
+            out["retried_cost"] = self.retried_cost
+            out["retry_dropped_cost"] = self.retry_dropped_cost
+            out["breaker_opens"] = float(self.breaker_opens)
+            for tier, cost in self.shed_by_tier.items():
+                out[f"shed_{tier}"] = cost
         return out

@@ -47,8 +47,8 @@ from repro.obs.attribution import CAUSES, EnergyLedger
 from repro.obs.probe import (PROBE_METRICS, CallbackSink, MemorySink,
                              MetricSink, ProbeRegistry)
 from repro.obs.slo import (Alert, EnergyBudgetRule, LatencyBurnRule,
-                           QueueBlowupRule, SloPolicy, SloRule,
-                           ThrottleStormRule)
+                           QueueBlowupRule, ShedStormRule, SloPolicy,
+                           SloRule, ThrottleStormRule)
 from repro.obs.trace import (TraceConfig, TraceRecorder, build_chrome_trace,
                              validate_chrome_trace)
 
@@ -61,7 +61,7 @@ __all__ = [
     "EnergyLedger", "CAUSES",
     # slo
     "Alert", "SloRule", "SloPolicy", "LatencyBurnRule", "EnergyBudgetRule",
-    "ThrottleStormRule", "QueueBlowupRule",
+    "ThrottleStormRule", "QueueBlowupRule", "ShedStormRule",
     # traces
     "TraceConfig", "TraceRecorder", "build_chrome_trace",
     "validate_chrome_trace",

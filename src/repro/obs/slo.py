@@ -22,7 +22,8 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = ["Alert", "SloRule", "LatencyBurnRule", "EnergyBudgetRule",
-           "ThrottleStormRule", "QueueBlowupRule", "SloPolicy"]
+           "ThrottleStormRule", "QueueBlowupRule", "ShedStormRule",
+           "SloPolicy"]
 
 
 @dataclass
@@ -188,6 +189,52 @@ class QueueBlowupRule(SloRule):
         return None
 
 
+class ShedStormRule(SloRule):
+    """Admission-shed burn rate above a ceiling: mean shed rps over a
+    sliding window vs ``max_shed_rps``. Graceful degradation is
+    supposed to shed *briefly* under a flash crowd — a sustained shed
+    rate means the fleet is underprovisioned (or a breaker is stuck
+    open) and operators should know. Reads the per-tick ``shed_cost``
+    the degrade control plane emits; inert on fleets without one."""
+
+    name = "shed_storm"
+    severity = "critical"
+    unit = "rps"
+
+    def __init__(self, max_shed_rps: float, window_s: float = 3600.0) -> None:
+        self.max_shed_rps = float(max_shed_rps)
+        self.window_s = float(window_s)
+        self._win: List[Tuple[float, float]] = []
+
+    def reset(self) -> None:
+        self._win = []
+
+    def observe(self, t: float, dt_s: float,
+                tick: Mapping[str, Any]) -> Optional[Tuple[float, float]]:
+        shed = tick.get("shed_cost")
+        if shed is None:
+            return None
+        self._win.append((t, float(shed)))
+        horizon = t + dt_s - self.window_s
+        drop = 0
+        for tw, _mass in self._win:
+            if tw >= horizon:
+                break
+            drop += 1
+        if drop:
+            del self._win[:drop]
+        span = len(self._win) * dt_s
+        if span <= 0.0:
+            return None
+        total = 0.0
+        for _tw, mass in self._win:
+            total += mass
+        rate = total / span
+        if rate > self.max_shed_rps:
+            return rate, self.max_shed_rps
+        return None
+
+
 class _OpenWindow:
     __slots__ = ("t_start", "t_end", "worst", "threshold")
 
@@ -281,6 +328,8 @@ class SloPolicy:
             thr_rows = np.zeros((ticks, tel.n_racks))
             for r, col in thr_cols:
                 thr_rows[:, r] = col
+        shed_t = np.asarray(getattr(tel, "shed_cost_t", []), float)
+        degrade_on = bool(getattr(tel, "degrade_on", False))
         for i in range(ticks):
             tick: Dict[str, Any] = {
                 "power_w": tel.power_w[:, i],
@@ -289,5 +338,7 @@ class SloPolicy:
             }
             if thr_rows is not None:
                 tick["throttled_units"] = thr_rows[i]
+            if degrade_on and i < len(shed_t):
+                tick["shed_cost"] = float(shed_t[i])
             self.on_tick(float(times[i]), dt, tick)
         return self.finalize()

@@ -151,6 +151,27 @@ class TraceRecorder:
                     "ph": _PH_INSTANT, "name": f"chaos_{kind}_clear",
                     "cat": "chaos", "pid": 1, "tid": r + 1,
                     "ts": end_s * 1e6, "s": "t", "args": args})
+        # --- circuit-breaker transitions as instants --------------------
+        # the degrade control plane derives these from the breaker state
+        # matrix (one shared code path for every backend); plotting them
+        # on the rack's track shows open/half/close lining up with the
+        # queue-delay and chaos signals that caused them
+        state_names = {0: "closed", 1: "open", 2: "half_open"}
+        for ev in getattr(tel, "breaker_events", []) or []:
+            rack = str(ev.get("rack", ""))
+            try:
+                tid = names.index(rack) + 1
+            except ValueError:
+                continue
+            state = state_names.get(int(ev.get("state", 0)), "unknown")
+            self.events.append({
+                "ph": _PH_INSTANT, "name": f"breaker_{state}",
+                "cat": "degrade", "pid": 1, "tid": tid,
+                "ts": float(ev.get("t_s", 0.0)) * 1e6, "s": "t",
+                "args": {"rack": rack,
+                         "state": state,
+                         "prev": state_names.get(
+                             int(ev.get("prev", 0)), "unknown")}})
 
     @staticmethod
     def _series(tel: Any, probes: Optional[Any]) -> Dict[str, np.ndarray]:

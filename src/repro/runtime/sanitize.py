@@ -353,12 +353,13 @@ class FleetSanitizer:
         return np.asarray([rt.pool.energy_j for rt in engine.rts], float)
 
     def _wrap(self, tick: Callable[..., Any]) -> Callable[..., Any]:
-        def checked(assign_rps: np.ndarray, dt: float) -> Any:
+        def checked(assign_rps: np.ndarray, dt: float,
+                    *args: Any, **kwargs: Any) -> Any:
             self.injected = self.injected + np.asarray(assign_rps,
                                                        float) * dt
             prev = [(_state_codes(p), _owner_ids(p), p.energy_j)
                     for p in self._pools]
-            out = tick(assign_rps, dt)
+            out = tick(assign_rps, dt, *args, **kwargs)
             self.check()
             for pool, (ps, po, pe) in zip(self._pools, prev):
                 check_pool(pool, ps, po, pe)
@@ -399,6 +400,13 @@ class FleetSanitizer:
         balance = self.injected - (served + pending)
         if evac is not None:
             balance = balance - np.asarray(evac, float)
+        # degradation credit: deadline-expired queued work was injected
+        # but is abandoned, never served (shed-at-the-door mass never
+        # reaches an engine, so it needs no credit here — the retry
+        # ring re-injects it through the router)
+        expired = getattr(engine, "degrade_expired_by_rack", None)
+        if expired is not None:
+            balance = balance - np.asarray(expired, float)
         tol = _CONS_ATOL + _CONS_RTOL * np.maximum(self.injected, 1.0)
         bad = np.nonzero(np.abs(balance) > tol)[0]
         _require(
@@ -406,7 +414,7 @@ class FleetSanitizer:
             "request conservation violated: rack(s) "
             f"{bad.tolist()} injected {self.injected[bad].tolist()} != "
             f"served {served[bad].tolist()} + queued "
-            f"{pending[bad].tolist()} (+ evacuated)")
+            f"{pending[bad].tolist()} (+ evacuated/expired)")
         dead = getattr(engine, "chaos_dead", None)
         if self._per_tick and dead is not None:
             full = np.asarray(dead) >= np.asarray(engine.n_units)

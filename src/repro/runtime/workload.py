@@ -171,6 +171,27 @@ class QueueWorkload:
         arrival = self._queue[0][0].arrival_s
         return max(0.0, t - (arrival or 0.0))
 
+    def expire(self, now: float, deadline_s: float) -> "tuple[int, float]":
+        """Deadline-aware load shedding (``repro.fleet.degrade``):
+        abandon queued requests whose arrival is ``deadline_s`` or more
+        in the past, returning ``(n_requests, remaining_cost)``. The
+        queue is FIFO by arrival, so expiry only ever pops from the
+        head; a partially-drained head is popped too — its remainder
+        is voided (the drained part stays counted as served). No
+        :class:`Response` is emitted: like :meth:`evacuate`, the fleet
+        layer owns the accounting. The cost sum is an explicit
+        left-to-right loop so both fleet engines (which share this
+        queue class) expire bitwise-identical totals."""
+        cutoff = now - deadline_s + 1e-9
+        n = 0
+        cost = 0.0
+        queue = self._queue
+        while queue and (queue[0][0].arrival_s or 0.0) <= cutoff:
+            _req, rem = queue.popleft()
+            n += 1
+            cost += rem
+        return n, cost
+
     def evacuate(self) -> "tuple[int, float]":
         """Chaos full-rack kill: discard every queued request, returning
         ``(n_requests, remaining_cost)``. No :class:`Response` is

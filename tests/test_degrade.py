@@ -1,0 +1,407 @@
+"""Graceful-degradation control plane (``repro.fleet.degrade``).
+
+Covers the parity contract for the degradation layer — SLO-tiered
+admission, deadline load shedding, per-rack circuit breakers, and
+deterministic seeded retry — across all three fleet engines:
+scalar/vector bitwise (including shed/retry/breaker counters), jax
+within documented tolerances. The randomized lockstep test is a
+hypothesis property test when hypothesis is installed and a seeded
+fan of examples otherwise; either way the configs and chaos schedules
+derive from ``chaos_seed()`` so CI failures reproduce locally with
+``REPRO_CHAOS_SEED=<n> pytest tests/test_degrade.py``.
+
+Also here: the extended conservation identity
+(injected = served + chaos-dropped + deadline-expired + retry-dropped),
+a deliberate-corruption test proving the sanitizer catches a leaked
+shed count, the breaker state machine end to end, trace instants for
+breaker transitions, and the ``shed_storm`` SLO rule.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cluster import soc_cluster
+from repro.distributed.fault import RetryPolicy
+from repro.fleet import (BreakerConfig, ChaosMonitor, ChaosSchedule,
+                         DegradePolicy, Fleet, TierSpec, chaos_seed,
+                         diurnal_trace, homogeneous_fleet,
+                         tier_latency_percentiles)
+from repro.fleet.degrade import BRK_CLOSED, BRK_HALF, BRK_OPEN
+from repro.obs import FleetObs, ShedStormRule, SloPolicy
+from repro.obs.trace import build_chrome_trace, validate_chrome_trace
+from repro.runtime import ScalePolicy
+from repro.runtime.result import Request
+from repro.runtime.sanitize import InvariantViolation
+from repro.runtime.workload import QueueWorkload
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without hypothesis: seeded fan below
+    HAVE_HYPOTHESIS = False
+
+UNIT_RATE = 30.0
+DT_S = 60.0
+HOUR = 3600.0
+N_RACKS = 4
+FLEET_CAP = N_RACKS * 60 * UNIT_RATE  # rps at full activation
+
+#: jax aggregate tolerance for degrade counters (same contract as fig16)
+JAX_RTOL = 1e-9
+
+
+def _racks(n=N_RACKS):
+    return homogeneous_fleet(
+        soc_cluster(), n, UNIT_RATE,
+        policy=ScalePolicy(cooldown_s=300.0, min_units=1))
+
+
+def _saturating_trace(ticks=120, seed=7):
+    """Base load ~30% of capacity with a 30-tick flash crowd at ~1.8x
+    capacity — deep enough to exercise shed, expiry, retry drops, and
+    breaker trips (the non-vacuous fixture the smoke tests use)."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(ticks)
+    rps = 2200.0 * (1.0 + 0.2 * np.sin(t / 8.0)) \
+        + rng.normal(0, 40.0, ticks)
+    rps = np.clip(rps, 0.0, None)
+    rps[40:70] *= 6.0
+    return rps
+
+
+def _full_policy():
+    return DegradePolicy(
+        tiers=(TierSpec("gold", 0.2, 900.0),
+               TierSpec("silver", 0.3, 420.0),
+               TierSpec("bulk", 0.5, 180.0)),
+        queue_deadline_s=900.0,
+        breaker=BreakerConfig(open_after_s=300.0, close_below_s=120.0,
+                              cooldown_s=600.0, probe_fraction=0.25,
+                              fail_timeout_s=120.0),
+        retry=RetryPolicy(max_attempts=3, backoff_s=120.0, jitter=0.5),
+        seed=11)
+
+
+def _kill_schedule():
+    return ChaosSchedule().kill_rack(1, 10 * DT_S, 25 * DT_S)
+
+
+def _fleet(backend, *, degrade, chaos=None, obs=None):
+    return Fleet(_racks(), dt_s=DT_S, backend=backend, chaos=chaos,
+                 degrade=degrade, sanitize=True, obs=obs)
+
+
+def _random_policy(rng):
+    """One random-but-valid degradation plan (any mechanism may be off,
+    mirroring the declarative knobs users actually get)."""
+    n_tiers = int(rng.integers(1, 4))
+    shares = rng.dirichlet(np.ones(n_tiers) * 2.0)
+    shares = np.round(shares, 6)
+    shares[-1] = 1.0 - float(shares[:-1].sum())
+    budgets = np.sort(rng.uniform(120.0, 1200.0, n_tiers))[::-1]
+    tiers = tuple(
+        TierSpec(f"t{k}", float(shares[k]), float(budgets[k]))
+        for k in range(n_tiers)) if rng.random() < 0.85 else ()
+    breaker = None
+    if rng.random() < 0.7:
+        open_after = float(rng.uniform(240.0, 900.0))
+        breaker = BreakerConfig(
+            open_after_s=open_after,
+            close_below_s=float(rng.uniform(30.0, open_after - 60.0)),
+            cooldown_s=float(rng.uniform(300.0, 1200.0)),
+            probe_fraction=float(rng.uniform(0.05, 0.5)),
+            use_chaos_signal=bool(rng.random() < 0.5),
+            fail_timeout_s=float(rng.uniform(60.0, 300.0)))
+    return DegradePolicy(
+        tiers=tiers,
+        queue_deadline_s=(float(rng.uniform(300.0, 1200.0))
+                          if rng.random() < 0.7 else None),
+        breaker=breaker,
+        retry=RetryPolicy(max_attempts=int(rng.integers(1, 5)),
+                          backoff_s=float(rng.uniform(60.0, 240.0)),
+                          jitter=float(rng.uniform(0.0, 1.0))),
+        seed=int(rng.integers(1, 2**31)))
+
+
+def _assert_lockstep(seed):
+    """The property under test: a random plan + random chaos schedule,
+    replayed through scalar and vector under the sanitizer, stays
+    bitwise-identical — degrade counters included — and conserves
+    injected mass once drained."""
+    rng = np.random.default_rng(seed)
+    policy = _random_policy(rng)
+    horizon = 100 * DT_S
+    sched = ChaosSchedule.random(N_RACKS, horizon,
+                                 seed=int(rng.integers(2**31)), n_events=3)
+    peak = float(rng.uniform(0.5, 1.4)) * FLEET_CAP
+    trace = diurnal_trace(peak_rps=peak, hours=horizon / HOUR, dt_s=DT_S)
+
+    ts = _fleet("scalar", degrade=policy, chaos=sched).play_trace(trace)
+    tv = _fleet("vector", degrade=policy, chaos=sched).play_trace(trace)
+    ctx = f"seed={seed}"
+    assert ts.served == tv.served, ctx
+    assert ts.energy_j == tv.energy_j, ctx
+    assert np.array_equal(ts.power_w, tv.power_w), ctx
+    assert np.array_equal(ts.queued, tv.queued), ctx
+    assert ts.p99_latency_s == tv.p99_latency_s, ctx
+    # degrade counters are part of the bitwise contract
+    assert ts.shed_cost == tv.shed_cost, ctx
+    assert ts.shed_by_tier == tv.shed_by_tier, ctx
+    assert np.array_equal(ts.shed_cost_t, tv.shed_cost_t), ctx
+    assert ts.expired_requests == tv.expired_requests, ctx
+    assert ts.expired_cost == tv.expired_cost, ctx
+    assert ts.retried_cost == tv.retried_cost, ctx
+    assert ts.retry_dropped_cost == tv.retry_dropped_cost, ctx
+    assert ts.breaker_opens == tv.breaker_opens, ctx
+    assert np.array_equal(ts.breaker_state_t, tv.breaker_state_t), ctx
+    assert ts.breaker_events == tv.breaker_events, ctx
+    # extended conservation: everything injected is served or lands in
+    # exactly one terminal sink (chaos drop, deadline expiry, retry
+    # budget exhaustion) — shed mass is a flow, not a sink
+    if tv.drained:
+        injected = float(np.sum(trace)) * DT_S
+        balance = tv.served + tv.dropped_cost + tv.expired_cost + \
+            tv.retry_dropped_cost
+        assert balance == pytest.approx(injected, rel=1e-6), ctx
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_lockstep_random_policies(seed):
+        _assert_lockstep(seed)
+else:
+    @pytest.mark.parametrize("case", range(6))
+    def test_lockstep_random_policies(case):
+        _assert_lockstep(chaos_seed(default=20260808) * 100 + case)
+
+
+# ---------------------------------------------------------------------------
+# Non-vacuous bitwise parity: every mechanism actually fires.
+# ---------------------------------------------------------------------------
+def test_scalar_vector_bitwise_all_mechanisms_active():
+    trace = _saturating_trace()
+    ts = _fleet("scalar", degrade=_full_policy(),
+                chaos=_kill_schedule()).play_trace(trace)
+    tv = _fleet("vector", degrade=_full_policy(),
+                chaos=_kill_schedule()).play_trace(trace)
+    # all four mechanisms fired (vacuity guard)
+    assert tv.shed_cost > 0.0
+    assert tv.expired_cost > 0.0
+    assert tv.retried_cost > 0.0
+    assert tv.retry_dropped_cost > 0.0
+    assert tv.breaker_opens > 0
+    assert ts.served == tv.served
+    assert ts.energy_j == tv.energy_j
+    assert ts.shed_cost == tv.shed_cost
+    assert ts.shed_by_tier == tv.shed_by_tier
+    assert ts.expired_requests == tv.expired_requests
+    assert ts.expired_cost == tv.expired_cost
+    assert ts.retried_cost == tv.retried_cost
+    assert ts.retry_dropped_cost == tv.retry_dropped_cost
+    assert ts.breaker_opens == tv.breaker_opens
+    assert np.array_equal(ts.breaker_state_t, tv.breaker_state_t)
+    # bulk (loosest budget) sheds most; gold (tightest) least
+    assert tv.shed_by_tier["bulk"] >= tv.shed_by_tier["gold"]
+
+
+# ---------------------------------------------------------------------------
+# Jax tolerance parity on the degrade aggregates.
+# ---------------------------------------------------------------------------
+def test_jax_degrade_parity():
+    pytest.importorskip("jax")
+    trace = _saturating_trace()
+
+    def run(backend):
+        return _fleet(backend, degrade=_full_policy(),
+                      chaos=_kill_schedule()).play_trace(trace)
+
+    tv, tj = run("vector"), run("jax")
+    assert tv.shed_cost > 0.0 and tv.breaker_opens > 0  # non-vacuous
+    assert np.isclose(tv.served, tj.served, rtol=JAX_RTOL)
+    assert np.isclose(tv.energy_j, tj.energy_j, rtol=JAX_RTOL)
+    assert np.isclose(tv.shed_cost, tj.shed_cost, rtol=JAX_RTOL)
+    assert np.isclose(tv.expired_cost, tj.expired_cost, rtol=JAX_RTOL)
+    assert np.isclose(tv.retried_cost, tj.retried_cost, rtol=JAX_RTOL)
+    assert np.isclose(tv.retry_dropped_cost, tj.retry_dropped_cost,
+                      rtol=JAX_RTOL)
+    assert np.isclose(tv.p99_latency_s, tj.p99_latency_s, rtol=JAX_RTOL)
+    # breakers run on integer tick state: exactly equal, whole series
+    assert tv.breaker_opens == tj.breaker_opens
+    assert np.array_equal(tv.breaker_state_t, tj.breaker_state_t)
+    assert np.allclose(tv.shed_cost_t, tj.shed_cost_t, rtol=JAX_RTOL,
+                       atol=1e-9)
+    # retried mass re-enters the offered series identically
+    assert len(tv.offered_rps) == len(tj.offered_rps)
+    assert np.allclose(tv.offered_rps, tj.offered_rps, rtol=JAX_RTOL,
+                       atol=1e-9)
+    assert tv.ticks == tj.ticks and tv.drained == tj.drained
+    # the jax host-side reconstruction expands each tick into the same
+    # per-tier sub-requests the hosts submit: response *counts* match
+    # exactly per rack, and tier-tagged percentiles within tolerance
+    for rv, rj in zip(tv.per_rack, tj.per_rack):
+        assert len(rv.responses) == len(rj.responses)
+    for tier in ("gold", "silver", "bulk"):
+        pv = tier_latency_percentiles(tv, tier)
+        pj = tier_latency_percentiles(tj, tier)
+        assert pv[99.0] > 0.0  # non-vacuous: every tier completed work
+        for q in pv:
+            assert np.isclose(pv[q], pj[q], rtol=JAX_RTOL), (tier, q)
+    # conservation closes for both engines
+    injected = float(np.sum(trace)) * DT_S
+    for tel in (tv, tj):
+        balance = tel.served + tel.dropped_cost + tel.expired_cost + \
+            tel.retry_dropped_cost
+        assert balance == pytest.approx(injected, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Sanitizer: a leaked shed count is trapped.
+# ---------------------------------------------------------------------------
+def test_sanitizer_traps_leaked_shed_count():
+    """Deadline-expired mass is a conservation credit; inflating it
+    without removing the matching queued work must trip the extended
+    conservation check (a real leak — e.g. expiry double-counting —
+    would corrupt the ledger exactly this way)."""
+    fleet = _fleet("vector", degrade=_full_policy(), chaos=_kill_schedule())
+    fleet.play_trace(_saturating_trace())
+    san = fleet._sanitizer
+    san.check()  # clean run passes
+    fleet.engine.degrade_expired_by_rack[1] += 1e6
+    with pytest.raises(InvariantViolation, match="conservation"):
+        san.check()
+
+
+# ---------------------------------------------------------------------------
+# Mechanism-level units.
+# ---------------------------------------------------------------------------
+def test_retry_policy_jitter_is_seeded_and_clock_free():
+    p = RetryPolicy(max_attempts=4, backoff_s=100.0, jitter=0.5, seed=9)
+    q = RetryPolicy(max_attempts=4, backoff_s=100.0, jitter=0.5, seed=9)
+    # pure function of (seed, key): identical across instances/replays
+    us = [p.jitter_u(k) for k in range(32)]
+    assert us == [q.jitter_u(k) for k in range(32)]
+    assert all(0.0 <= u < 1.0 for u in us)
+    assert len(set(us)) > 1  # actually varies by key
+    other = RetryPolicy(max_attempts=4, backoff_s=100.0, jitter=0.5, seed=10)
+    assert us != [other.jitter_u(k) for k in range(32)]
+    # exponential base, jitter widens, bound holds
+    assert p.delay_s(1) == 200.0
+    assert p.delay_s(1, 1.0) == 300.0
+    assert p.max_delay_s == p.delay_s(3, 1.0)
+
+
+def test_queue_expire_pops_stale_head_only():
+    wl = QueueWorkload(unit_rate=1.0)
+    for arrival in (0.0, 10.0, 100.0):
+        wl.submit(Request(cost=5.0, arrival_s=arrival))
+    n, cost = wl.expire(now=70.0, deadline_s=60.0)  # cutoff ~10.0
+    assert (n, cost) == (2, 10.0)
+    assert len(wl._queue) == 1  # the fresh request survives
+    assert wl.expire(now=70.0, deadline_s=60.0) == (0, 0.0)  # idempotent
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="sum to 1"):
+        DegradePolicy(tiers=(TierSpec("a", 0.5, 100.0),
+                             TierSpec("b", 0.2, 50.0)))
+    with pytest.raises(ValueError, match="open above"):
+        BreakerConfig(open_after_s=100.0, close_below_s=200.0)
+    with pytest.raises(ValueError, match="probe_fraction"):
+        BreakerConfig(probe_fraction=0.0)
+    with pytest.raises(ValueError):
+        DegradePolicy(tiers=(), queue_deadline_s=-1.0)
+
+
+def test_breaker_state_machine_full_cycle():
+    """A chaos kill trips rack 1's breaker via the failure signal; after
+    restoration + cooldown it half-opens with probe traffic, then closes
+    — the full CLOSED→OPEN→HALF→CLOSED cycle on the sim clock."""
+    # queue-delay tripping effectively disabled (open_after_s huge) so
+    # the only trip signal is the chaos failure detector — the cycle is
+    # then deterministic and confined to the killed rack
+    policy = DegradePolicy(
+        tiers=(), queue_deadline_s=None,
+        breaker=BreakerConfig(open_after_s=1e5, close_below_s=120.0,
+                              cooldown_s=300.0, probe_fraction=0.25,
+                              use_chaos_signal=True, fail_timeout_s=120.0),
+        retry=RetryPolicy(max_attempts=1, backoff_s=60.0))
+    trace = np.full(80, 0.4 * FLEET_CAP)
+    tel = _fleet("vector", degrade=policy,
+                 chaos=_kill_schedule()).play_trace(trace)
+    states = tel.breaker_state_t[1]
+    assert BRK_OPEN in states and BRK_HALF in states
+    assert states[-1] == BRK_CLOSED  # recovered by end of run
+    # ordered transitions: open before half-open before the final close
+    first_open = int(np.argmax(states == BRK_OPEN))
+    first_half = int(np.argmax(states == BRK_HALF))
+    assert first_open < first_half
+    assert tel.breaker_opens >= 1
+    ev = tel.breaker_events[0]
+    assert ev["state"] == BRK_OPEN and ev["prev"] == BRK_CLOSED
+    assert ev["rack"] == tel.rack_names[1]
+    # healthy racks never trip
+    assert np.all(tel.breaker_state_t[0] == BRK_CLOSED)
+
+
+def test_chaos_monitor_failed_mask():
+    mon = ChaosMonitor(3, timeout_s=120.0)
+    n_units = np.full(3, 64, np.int64)
+    dead = np.zeros(3, np.int64)
+    dead[1] = 64
+    for t in (0.0, 60.0, 120.0, 180.0):
+        mon.observe(t, dead, n_units)
+    mask = mon.failed_mask(3)
+    assert mask.dtype == bool and mask.tolist() == [False, True, False]
+    assert mon.failed_mask(1).tolist() == [False]  # out-of-range rack ok
+
+
+# ---------------------------------------------------------------------------
+# Observability: breaker trace instants + shed_storm SLO rule.
+# ---------------------------------------------------------------------------
+def test_breaker_transitions_appear_as_trace_instants():
+    tel = _fleet("vector", degrade=_full_policy(),
+                 chaos=_kill_schedule()).play_trace(_saturating_trace())
+    assert tel.breaker_opens > 0  # non-vacuous
+    trace = build_chrome_trace(tel)
+    assert validate_chrome_trace(trace) == []
+    instants = [ev for ev in trace["traceEvents"]
+                if ev.get("cat") == "degrade"]
+    assert instants, "breaker transitions missing from the chrome trace"
+    names = {ev["name"] for ev in instants}
+    assert "breaker_open" in names
+    # each instant rides the afflicted rack's own track
+    by_name = {n: i + 1 for i, n in enumerate(tel.rack_names)}
+    for ev in instants:
+        assert ev["tid"] == by_name[ev["args"]["rack"]]
+        assert ev["args"]["state"] in ("open", "half_open", "closed")
+
+
+def test_shed_storm_rule_fires_on_sustained_shedding():
+    slo = SloPolicy([ShedStormRule(max_shed_rps=50.0, window_s=1800.0)])
+    tel = _fleet("vector", degrade=_full_policy(), chaos=_kill_schedule(),
+                 obs=FleetObs(slo=slo)).play_trace(_saturating_trace())
+    assert tel.shed_cost > 0.0
+    storms = [a for a in tel.alerts if a.rule == "shed_storm"]
+    assert storms, "flash-crowd shedding should trip the shed_storm rule"
+    assert all(a.severity == "critical" for a in storms)
+    assert storms[0].worst_value > 50.0
+
+
+def test_shed_storm_rule_inert_without_degrade():
+    slo = SloPolicy([ShedStormRule(max_shed_rps=0.0)])
+    tel = _fleet("vector", degrade=None,
+                 obs=FleetObs(slo=slo)).play_trace(_saturating_trace(60))
+    assert not [a for a in tel.alerts if a.rule == "shed_storm"]
+
+
+def test_tier_latency_percentiles_split_by_tier():
+    tel = _fleet("vector", degrade=_full_policy()).play_trace(
+        _saturating_trace())
+    gold = tier_latency_percentiles(tel, "gold")
+    bulk = tier_latency_percentiles(tel, "bulk")
+    assert set(gold) == {50.0, 99.0}
+    assert gold[99.0] > 0.0 and bulk[99.0] > 0.0
+    assert tier_latency_percentiles(tel, "no-such-tier") == \
+        {50.0: 0.0, 99.0: 0.0}

@@ -39,6 +39,12 @@ PARITY_CRITICAL = [
     # so fault lowering and the respill/drop accounting carry the same
     # order-pinning contract as the engines themselves.
     "*repro/fleet/chaos.py",
+    # The degradation control plane's admission/shed/retry arithmetic
+    # is the *same Python objects* for both host engines (one shared
+    # DegradeDriver per run) and its counters are bitwise-compared in
+    # tests and fig16, so its float sums carry the engines'
+    # order-pinning contract too.
+    "*repro/fleet/degrade.py",
     # The jax engine is parity-critical with a *tolerance* contract
     # (XLA reorders reductions by design): reductions there are waived
     # line by line with "# reprolint: ok[RPL001] jax tolerance-parity
